@@ -1,0 +1,4 @@
+"""Benchmark harnesses — one per paper artifact (+ roofline/kernels).
+
+Run everything:  PYTHONPATH=src python -m benchmarks.run
+"""

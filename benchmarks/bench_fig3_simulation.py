@@ -1,0 +1,135 @@
+"""Paper Fig. 3: PSO convergence in simulated SDFL.
+
+Grid: depth D in {3,4,5} x width W in {4,5} x particles P in {5,10},
+100 iterations, clients/attributes per Sec. IV-A (pspeed ~ U[5,15),
+memcap ~ U[10,50), mdatasize = 5). For each cell we record the
+normalized per-iteration best/worst/mean TPD (the grey/red/green/orange
+curves) and the convergence iteration (all particles proposing one
+placement).
+
+The paper's claims this harness checks:
+  * TPD converges to a minimum (all particles agree);
+  * PSO adapts to larger client counts (deeper/wider trees still converge);
+  * more particles (P=10 vs 5) find equal-or-better placements.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.hierarchy import ClientPool, Hierarchy
+from repro.core.pso import FlagSwapPSO
+
+GRID_DEPTH = (3, 4, 5)
+GRID_WIDTH = (4, 5)
+GRID_PARTICLES = (5, 10)
+ITERATIONS = 100
+
+OUT = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
+
+
+def run_cell(depth: int, width: int, particles: int, seed: int = 0,
+             iterations: int = ITERATIONS) -> dict:
+    h = Hierarchy(depth=depth, width=width, trainers_per_leaf=2)
+    pool = ClientPool.random(h.total_clients, seed=seed)
+    cm = CostModel(h, pool)
+    pso = FlagSwapPSO(h.dimensions, h.total_clients, n_particles=particles,
+                      inertia=0.01, c1=0.01, c2=1.0, velocity_factor=0.1,
+                      seed=seed)
+    t0 = time.perf_counter()
+    best = pso.run(cm.fitness, iterations=iterations,
+                   batch_fitness_fn=cm.batch_fitness)
+    wall = time.perf_counter() - t0
+    hist = pso.history
+    t0_norm = max(hist.mean[0], 1e-9)
+    conv_iter = None
+    per = np.stack(hist.per_particle)            # (iters, P)
+    for it in range(len(hist.best)):
+        if np.allclose(per[it], per[it][0], rtol=1e-6):
+            conv_iter = it
+            break
+    return {
+        "depth": depth, "width": width, "particles": particles,
+        "clients": h.total_clients, "slots": h.dimensions,
+        "initial_mean_tpd": hist.mean[0],
+        "final_mean_tpd": hist.mean[-1],
+        "final_best_tpd": hist.best[-1],
+        "gbest_tpd": -pso.gbest_f,
+        "normalized_best": [b / t0_norm for b in hist.best],
+        "normalized_mean": [m / t0_norm for m in hist.mean],
+        "normalized_worst": [w / t0_norm for w in hist.worst],
+        "converged": bool(pso.converged),
+        "convergence_iteration": conv_iter,
+        "wall_s": wall,
+    }
+
+
+def ascii_curve(vals, width=48) -> str:
+    lo, hi = min(vals), max(vals)
+    rng = max(hi - lo, 1e-9)
+    idx = np.linspace(0, len(vals) - 1, width).astype(int)
+    chars = " .:-=+*#%@"
+    return "".join(chars[int((vals[i] - lo) / rng * (len(chars) - 1))]
+                   for i in idx)
+
+
+def main(iterations: int = ITERATIONS, seed: int = 0) -> dict:
+    cells = []
+    print("== Fig. 3: PSO convergence in simulated SDFL ==")
+    for d in GRID_DEPTH:
+        for w in GRID_WIDTH:
+            for p in GRID_PARTICLES:
+                cell = run_cell(d, w, p, seed=seed, iterations=iterations)
+                cells.append(cell)
+                print(f"D={d} W={w} P={p:2d} | clients={cell['clients']:5d} "
+                      f"slots={cell['slots']:4d} | "
+                      f"TPD {cell['initial_mean_tpd']:8.2f} -> "
+                      f"{cell['gbest_tpd']:8.2f} "
+                      f"({cell['gbest_tpd'] / cell['initial_mean_tpd']:5.1%})"
+                      f" conv@{cell['convergence_iteration']} "
+                      f"[{cell['wall_s']:5.2f}s]")
+                print(f"        mean TPD: "
+                      f"{ascii_curve(cell['normalized_mean'])}")
+    # paper claims
+    improved = sum(c["gbest_tpd"] < c["initial_mean_tpd"] for c in cells)
+    p5 = {(c["depth"], c["width"]): c["gbest_tpd"]
+          for c in cells if c["particles"] == 5}
+    p10 = {(c["depth"], c["width"]): c["gbest_tpd"]
+           for c in cells if c["particles"] == 10}
+    p10_wins = sum(p10[k] <= p5[k] * 1.02 for k in p5)
+    summary = {
+        "cells": cells,
+        "improved_cells": improved,
+        "total_cells": len(cells),
+        "p10_leq_p5_cells": p10_wins,
+        "claims": {
+            "tpd_converges": improved == len(cells),
+            "p10_at_least_p5": p10_wins >= len(p5) - 1,
+        },
+    }
+    print(f"-> {improved}/{len(cells)} cells improved TPD; "
+          f"P=10 <= P=5 in {p10_wins}/{len(p5)} grids")
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "fig3_simulation.json").write_text(
+        json.dumps(summary, indent=1, default=_np_default))
+    return summary
+
+
+def _np_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, (np.bool_,)):
+        return bool(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"not serializable: {type(o)}")
+
+
+if __name__ == "__main__":
+    main()

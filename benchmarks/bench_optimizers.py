@@ -1,0 +1,108 @@
+"""Black-box optimizer shoot-out (extends the paper's Sec. II argument
+that PSO is the right meta-heuristic for aggregation placement).
+
+Every optimizer gets the SAME budget: one placement evaluation per FL
+round (the deployment regime), on the same simulated systems. Reported:
+best-found TPD after {25, 50, 100, 200} rounds, as a fraction of the
+mean-random TPD (lower = better; the exhaustive optimum is shown where
+the scenario is small enough to enumerate).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.hierarchy import ClientPool, Hierarchy
+from repro.core.placement import make_strategy
+
+OUT = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
+
+STRATEGIES = ("pso", "ga", "sa", "cem", "random")
+CHECKPOINTS = (25, 50, 100, 200)
+
+
+def run_scenario(depth: int, width: int, seed: int, rounds: int = 200,
+                 n_seeds: int = 5) -> dict:
+    h = Hierarchy(depth=depth, width=width, trainers_per_leaf=2)
+    best_out = {s: {c: [] for c in CHECKPOINTS} for s in STRATEGIES}
+    cum_out = {s: {c: [] for c in CHECKPOINTS} for s in STRATEGIES}
+    for k in range(n_seeds):
+        pool = ClientPool.random(h.total_clients, seed=seed + k)
+        cm = CostModel(h, pool)
+        rng = np.random.default_rng(seed + k)
+        rand_mean = np.mean([
+            cm.tpd(rng.permutation(h.total_clients)[: h.dimensions])
+            for _ in range(200)])
+        for s in STRATEGIES:
+            for metric, kw in (
+                    # exploration: best placement FOUND (exploit rounds
+                    # would waste probes -> disabled for pso)
+                    ("best", dict(exploit_after_convergence=False,
+                                  exploit_when_stagnant=False)
+                     if s == "pso" else {}),
+                    # deployment: cumulative TPD actually PAID (the
+                    # paper's metric) — strategies exploit as they wish
+                    ("cum", {})):
+                strat = make_strategy(s, h, seed=seed + k,
+                                      clients=pool, cost_model=cm, **kw)
+                best, cum = np.inf, 0.0
+                for r in range(rounds):
+                    p = strat.propose(r)
+                    t = cm.tpd(p)
+                    strat.observe(p, t)
+                    best = min(best, t)
+                    cum += t
+                    if (r + 1) in CHECKPOINTS:
+                        if metric == "best":
+                            best_out[s][r + 1].append(best / rand_mean)
+                        else:
+                            cum_out[s][r + 1].append(
+                                cum / ((r + 1) * rand_mean))
+    return {
+        "depth": depth, "width": width, "clients": h.total_clients,
+        "slots": h.dimensions,
+        "best_vs_random": {
+            s: {c: float(np.mean(v)) for c, v in cps.items()}
+            for s, cps in best_out.items()},
+        "cum_vs_random": {
+            s: {c: float(np.mean(v)) for c, v in cps.items()}
+            for s, cps in cum_out.items()},
+    }
+
+
+def main() -> dict:
+    print("== black-box optimizer shoot-out (best-found TPD / "
+          "mean-random TPD; lower is better) ==")
+    scenarios = [(2, 2), (3, 2), (3, 4)]
+    results = []
+    for depth, width in scenarios:
+        res = run_scenario(depth, width, seed=0)
+        results.append(res)
+        print(f"-- depth={depth} width={width} "
+              f"({res['clients']} clients, {res['slots']} slots)")
+        for metric in ("best_vs_random", "cum_vs_random"):
+            print(f"   [{metric:14s}] {'strategy':8s}" + "".join(
+                f"  @{c:<4d}" for c in CHECKPOINTS))
+            for s in STRATEGIES:
+                row = res[metric][s]
+                print(f"   {'':16s} {s:8s}" + "".join(
+                    f"  {row[c]:.3f}" for c in CHECKPOINTS))
+    # the paper's positioning: PSO minimizes TOTAL processing time
+    pso_cum_wins = sum(
+        res["cum_vs_random"]["pso"][200] < res["cum_vs_random"]["random"][200]
+        for res in results)
+    print(f"-> cumulative-TPD (the paper's metric): PSO beats random in "
+          f"{pso_cum_wins}/{len(results)} scenarios; best-found favours "
+          f"slower-converging GA/SA/CEM (see EXPERIMENTS.md discussion)")
+    ok = pso_cum_wins == len(results)
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "optimizer_shootout.json").write_text(
+        json.dumps(results, indent=1))
+    return {"scenarios": results, "pso_competitive": ok}
+
+
+if __name__ == "__main__":
+    main()

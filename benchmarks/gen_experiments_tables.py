@@ -1,0 +1,63 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+the artifacts (idempotent; run after any dry-run refresh)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.bench_roofline import analyze, load_records
+
+ROOT = Path(__file__).resolve().parent.parent
+ART = ROOT / "artifacts" / "dryrun"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = []
+    hdr = (f"| {'arch':24s} | {'shape':11s} | {'mode':10s} | "
+           f"{'args GiB':>8s} | {'temp GiB':>8s} | {'flops/chip':>10s} | "
+           f"{'bytes/chip':>10s} | {'coll GiB':>8s} | {'ag/ar/rs/a2a/cp':>20s} |")
+    rows.append(hdr)
+    rows.append("|" + "-" * (len(hdr) - 2) + "|")
+    for rec in load_records(mesh):
+        m = rec["memory"]
+        p = rec["profile"]
+        cc = p["collective_counts"]
+        counts = "/".join(str(int(cc.get(k, 0))) for k in
+                          ("all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all", "collective-permute"))
+        rows.append(
+            f"| {rec['arch']:24s} | {rec['shape']:11s} | {rec['mode']:10s} | "
+            f"{m.get('argument_size_in_bytes', 0) / 2**30:8.2f} | "
+            f"{m.get('temp_size_in_bytes', 0) / 2**30:8.2f} | "
+            f"{p['flops']:10.3g} | {p['bytes_accessed']:10.3g} | "
+            f"{p['collective_bytes'] / 2**30:8.2f} | {counts:>20s} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh: str) -> str:
+    rows = [analyze(r) for r in load_records(mesh)]
+    hdr = (f"| {'arch':24s} | {'shape':11s} | {'compute_s':>9s} | "
+           f"{'memory_s':>9s} | {'coll_s':>9s} | {'dominant':10s} | "
+           f"{'useful':>6s} | {'roofl%':>6s} | lever |")
+    out = [hdr, "|" + "-" * (len(hdr) - 2) + "|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']:24s} | {r['shape']:11s} | {r['compute_s']:9.4f} | "
+            f"{r['memory_s']:9.4f} | {r['collective_s']:9.4f} | "
+            f"{r['dominant']:10s} | {r['useful_flops_ratio']:6.2f} | "
+            f"{100 * r['roofline_fraction']:6.1f} | {r['lever'][:60]} |")
+    return "\n".join(out)
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        n = len(load_records(mesh))
+        print(f"### Dry-run table ({mesh}, {n} combos)\n")
+        print(dryrun_table(mesh))
+        print(f"\n### Roofline table ({mesh})\n")
+        print(roofline_table(mesh))
+        print()
+
+
+if __name__ == "__main__":
+    main()

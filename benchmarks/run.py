@@ -1,0 +1,104 @@
+"""Run every benchmark:  PYTHONPATH=src python -m benchmarks.run
+
+Order: kernels (fast, also a correctness gate) -> Fig. 3 simulation ->
+Fig. 4 cluster emulation -> roofline (consumes dry-run artifacts if
+present). ``--full`` runs the paper-scale 50-round Fig. 4; default is 25
+rounds to keep the suite under ~10 minutes on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale Fig. 4 (50 rounds)")
+    ap.add_argument("--skip-fig4", action="store_true")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    failures = []
+
+    from benchmarks import (bench_drift, bench_fig3_simulation,
+                            bench_fig4_cluster, bench_kernels,
+                            bench_optimizers, bench_roofline,
+                            bench_two_tier)
+
+    print("\n##### 1/5 kernels #####")
+    try:
+        bench_kernels.main()
+    except Exception as e:
+        failures.append(("kernels", repr(e)))
+        print(f"FAILED: {e!r}")
+
+    print("\n##### 2/5 Fig. 3 (simulation) #####")
+    try:
+        r3 = bench_fig3_simulation.main()
+        if not r3["claims"]["tpd_converges"]:
+            failures.append(("fig3", "TPD did not converge in all cells"))
+    except Exception as e:
+        failures.append(("fig3", repr(e)))
+        print(f"FAILED: {e!r}")
+
+    if not args.skip_fig4:
+        print("\n##### 3/5 Fig. 4 (cluster emulation) #####")
+        try:
+            rounds = 50 if args.full else 25
+            r4 = bench_fig4_cluster.main(rounds=rounds)
+            if not r4["claims"]["pso_faster_than_random"]:
+                failures.append(("fig4", "PSO not faster than random"))
+        except Exception as e:
+            failures.append(("fig4", repr(e)))
+            print(f"FAILED: {e!r}")
+
+    print("\n##### 4/6 drift adaptation (beyond paper) #####")
+    try:
+        rd = bench_drift.main()
+        if rd["tail_gain_vs_frozen"] <= 0:
+            failures.append(("drift", "adaptive did not beat frozen PSO"))
+    except Exception as e:
+        failures.append(("drift", repr(e)))
+        print(f"FAILED: {e!r}")
+
+    print("\n##### 5/6 optimizer shoot-out (beyond paper) #####")
+    try:
+        ro = bench_optimizers.main()
+        if not ro["pso_competitive"]:
+            failures.append(("optimizers",
+                             "PSO lost to random on cumulative TPD"))
+    except Exception as e:
+        failures.append(("optimizers", repr(e)))
+        print(f"FAILED: {e!r}")
+
+    print("\n##### 6/7 two-tier pod locality (beyond paper) #####")
+    try:
+        rt = bench_two_tier.main()
+        if not rt["locality_discovered"]:
+            failures.append(("two_tier", "no pod locality discovered"))
+    except Exception as e:
+        failures.append(("two_tier", repr(e)))
+        print(f"FAILED: {e!r}")
+
+    print("\n##### 7/7 roofline #####")
+    try:
+        for mesh in ("16x16", "2x16x16"):
+            bench_roofline.main(mesh=mesh)
+    except Exception as e:
+        failures.append(("roofline", repr(e)))
+        print(f"FAILED: {e!r}")
+
+    dt = time.time() - t0
+    if failures:
+        print(f"\n== benchmarks: {len(failures)} FAILURE(S) in {dt:.0f}s ==")
+        for name, err in failures:
+            print(f"  {name}: {err}")
+        return 1
+    print(f"\n== all benchmarks passed in {dt:.0f}s ==")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+"""End-to-end driver: federated training of the paper's ~1.8M-param MLP
+with PSO-optimized aggregation placement (the docker experiment of
+Sec. IV-C, single-host emulation).
+
+15 heterogeneous clients train on non-IID Dirichlet partitions for a few
+hundred rounds; Flag-Swap tests one particle placement per round against
+the MEASURED round delay and converges to a fast tree, while random
+keeps paying for slow aggregation hosts.
+
+Run:  PYTHONPATH=src python examples/federated_training.py [--rounds 200]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cost_model import CostModel
+from repro.core.hierarchy import ClientPool
+from repro.core.placement import make_strategy
+from repro.data.synthetic import make_federated_dataset
+from repro.fl.distributed import choose_fl_hierarchy
+from repro.fl.orchestrator import FederatedOrchestrator
+from repro.models import get_model
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=200)
+ap.add_argument("--clients", type=int, default=15)
+ap.add_argument("--strategies", nargs="+",
+                default=["pso", "random", "uniform"])
+args = ap.parse_args()
+
+cfg = get_config("paper-mlp-1m8")
+model = get_model(cfg)
+hierarchy = choose_fl_hierarchy(args.clients)
+print(f"{args.clients} clients, hierarchy depth={hierarchy.depth} "
+      f"width={hierarchy.width} ({hierarchy.dimensions} aggregator slots)")
+
+results = {}
+for strat_name in args.strategies:
+    clients = ClientPool.random(hierarchy.total_clients, seed=0)
+    data = make_federated_dataset(cfg, hierarchy.total_clients, seed=0)
+    strategy = make_strategy(strat_name, hierarchy, seed=0, clients=clients,
+                             cost_model=CostModel(hierarchy, clients))
+    orch = FederatedOrchestrator(model, hierarchy, clients, data,
+                                 local_steps=2, batch_size=32, seed=0)
+    res = orch.run(strategy, rounds=args.rounds)
+    results[strat_name] = res
+    s = res.summary()
+    print(f"[{strat_name:8s}] total TPD {s['total_tpd']:8.2f}s | "
+          f"mean/round {s['mean_tpd']:.4f}s | "
+          f"last-10 mean {s['last10_mean_tpd']:.4f}s | "
+          f"final acc {s['final_accuracy']:.3f}")
+
+if "pso" in results and "random" in results:
+    save = 1 - results["pso"].total_processing_time / \
+        results["random"].total_processing_time
+    print(f"\nPSO total processing time is {save:.1%} lower than random "
+          f"placement (paper reports ~43% on the docker cluster).")

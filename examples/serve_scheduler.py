@@ -1,0 +1,50 @@
+"""Batched request serving with the wave scheduler: mixed prompt
+lengths, per-request token budgets and EOS, occupancy/throughput stats.
+
+Run:  PYTHONPATH=src python examples/serve_scheduler.py \
+          [--arch stablelm-1.6b] [--requests 12]
+"""
+import argparse
+
+import numpy as np
+
+import jax
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import get_model
+from repro.serving import Request, WaveScheduler
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="stablelm-1.6b", choices=ASSIGNED)
+ap.add_argument("--requests", type=int, default=12)
+ap.add_argument("--max-batch", type=int, default=4)
+args = ap.parse_args()
+
+cfg = get_config(args.arch).reduced()
+model = get_model(cfg)
+params = model.init(jax.random.key(0))
+rng = np.random.default_rng(0)
+
+frontend = None
+if cfg.family in ("vlm", "audio"):
+    frontend = rng.normal(scale=0.02, size=(
+        cfg.frontend_len, cfg.frontend_dim or cfg.d_model)).astype(np.float32)
+
+sched = WaveScheduler(model, params, max_batch=args.max_batch,
+                      frontend=frontend)
+for rid in range(args.requests):
+    plen = int(rng.choice([8, 8, 16, 24]))       # mixed-length buckets
+    sched.submit(Request(
+        rid=rid,
+        tokens=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+        max_new_tokens=int(rng.integers(4, 12))))
+
+served = sched.run()
+s = sched.summary()
+print(f"arch={args.arch} (reduced): served {len(served)} requests in "
+      f"{s['waves']} waves")
+print(f"occupancy {s['mean_occupancy']:.1%} | "
+      f"{s['slot_tokens_per_s']:.0f} slot-tokens/s (CPU, reduced cfg)")
+for r in served[:4]:
+    print(f"  req{r.rid} wave={r.wave} prompt={len(r.tokens)} "
+          f"-> {r.output[:8].tolist()}")

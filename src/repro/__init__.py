@@ -1,0 +1,18 @@
+"""repro: Flag-Swap — PSO-based aggregation placement for hierarchical
+semi-decentralized federated learning (SDFL), built as a production-grade
+multi-pod JAX framework.
+
+Paper: "Towards a Distributed Federated Learning Aggregation Placement
+using Particle Swarm Intelligence" (Ali-Pour et al., CS.DC 2025).
+
+Public API surface (the pieces a deployment touches):
+
+    from repro.core import FlagSwapPSO, Hierarchy, CostModel
+    from repro.core.placement import make_strategy
+    from repro.fl import FederatedOrchestrator
+    from repro.models import get_model
+    from repro.configs import get_config, list_configs
+    from repro.launch.mesh import make_production_mesh
+"""
+
+__version__ = "0.1.0"

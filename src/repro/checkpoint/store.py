@@ -1,0 +1,105 @@
+"""npz-based pytree checkpointing (orbax is not available offline).
+
+Layout: ``<dir>/step_<N>/arrays.npz`` + ``treedef.json``. Leaves are
+flattened with stable ``/``-joined key paths so a checkpoint round-trips
+through any pytree of dicts/lists/namedtuples of arrays. Writes are
+atomic (tmp dir + rename) — a killed trainer never leaves a half
+checkpoint behind.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _to_savable(arr: np.ndarray) -> np.ndarray:
+    """npz cannot round-trip ml_dtypes (bfloat16, fp8) — widen to float32;
+    restore casts back to the template leaf's dtype."""
+    if arr.dtype == ml_dtypes.bfloat16 or arr.dtype.kind == "V":
+        return arr.astype(np.float32)
+    return arr
+
+
+def _flatten_with_paths(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_token(p) for p in path)
+        flat[key] = _to_savable(np.asarray(leaf))
+    return flat
+
+
+def _path_token(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+    """Atomically write ``tree`` (+ JSON-serializable ``extra``) at ``step``."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        flat = _flatten_with_paths(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        meta = {"step": int(step), "keys": sorted(flat), "extra": extra or {}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None):
+    """Restore into the structure of ``like`` (a template pytree).
+
+    Returns (tree, extra_meta). Raises if the stored keys don't match the
+    template's keys — a shape-mismatched restore should fail loudly.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as npz:
+        stored = {k: npz[k] for k in npz.files}
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+
+    template = _flatten_with_paths(like)
+    if set(template) != set(stored):
+        missing = set(template) ^ set(stored)
+        raise ValueError(f"checkpoint keys mismatch (diff: {sorted(missing)[:10]}...)")
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_elems, leaf in paths:
+        key = "/".join(_path_token(p) for p in path_elems)
+        arr = stored[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return treedef.unflatten(leaves), meta.get("extra", {})

@@ -1,0 +1,22 @@
+"""paper-mlp-1m8 — the paper's own workload: a multi-layer perceptron with
+~1.8M parameters used in the docker-based SDFLMQ experiment (Sec. IV-C).
+
+Modelled here as a 3-hidden-layer MLP classifier: 784 -> 768 -> 768 ->
+768 -> 10 gives 784*768 + 768*768*2 + 768*10 + biases ~= 1.79M params,
+matching the paper's "1.8 million parameters".
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paper-mlp-1m8",
+    family="mlp",
+    n_layers=3,
+    d_model=768,
+    n_heads=1,
+    n_kv_heads=1,
+    d_ff=768,
+    vocab_size=10,        # classes
+    frontend_len=784,     # input features (MNIST-like)
+    frontend_dim=784,
+    citation="paper Sec. IV-C (SDFLMQ docker experiment)",
+)

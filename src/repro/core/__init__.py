@@ -1,0 +1,29 @@
+"""Flag-Swap core: the paper's contribution.
+
+- ``Hierarchy``: the SDFL aggregation tree (eq. 5) and placement algebra.
+- ``ClientPool``: simulated client attributes (Sec. IV-A).
+- ``CostModel``: TPD (eqs. 6-7), scalar + swarm-vectorized.
+- ``FlagSwapPSO``: the black-box integer PSO (eqs. 1-4, Algorithm 1).
+- placement strategies: pso / random / uniform / ga / greedy / exhaustive.
+"""
+from repro.core.hierarchy import Hierarchy, ClientPool
+from repro.core.cost_model import CostModel
+from repro.core.pso import FlagSwapPSO, SwarmHistory
+from repro.core.placement import (
+    PlacementStrategy,
+    RandomPlacement,
+    UniformRoundRobinPlacement,
+    PSOPlacement,
+    GAPlacement,
+    GreedySpeedPlacement,
+    ExhaustivePlacement,
+    StaticPlacement,
+    make_strategy,
+)
+
+__all__ = [
+    "Hierarchy", "ClientPool", "CostModel", "FlagSwapPSO", "SwarmHistory",
+    "PlacementStrategy", "RandomPlacement", "UniformRoundRobinPlacement",
+    "PSOPlacement", "GAPlacement", "GreedySpeedPlacement",
+    "ExhaustivePlacement", "StaticPlacement", "make_strategy",
+]

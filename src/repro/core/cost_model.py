@@ -1,0 +1,180 @@
+"""The TPD cost model (paper eqs. 6-7) — scalar and particle-vectorized.
+
+    d_a = (mdatasize_a + sum_{c in children(a)} mdatasize_c) / pspeed_a
+    TPD = sum_levels max_{a in level} d_a
+
+The max-per-level captures the bottleneck effect (aggregators at one
+level run in parallel; levels are serial, bottom-up). An optional memory
+penalty inflates d_a when the buffer exceeds the host's memcap — the
+"compute memory consumption" line of Algorithm 1.
+
+``batch_tpd`` evaluates a whole particle swarm in one jit'd call
+(beyond-paper: the paper loops per particle; we vectorize per-level
+segment reductions over (P, slots) arrays so a 100-iteration swarm run
+is a few milliseconds).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hierarchy import ClientPool, Hierarchy
+
+
+@dataclass(frozen=True)
+class CostModel:
+    hierarchy: Hierarchy
+    clients: ClientPool
+    memory_penalty: float = 0.0  # 0 disables the memcap feasibility term
+
+    # ------------------------------------------------------------------
+    def cluster_delay(self, host: int, children: Sequence[int]) -> float:
+        """Paper eq. 6 (+ optional memcap penalty)."""
+        mds = self.clients.mdatasize
+        load = mds[host] + sum(mds[c] for c in children)
+        delay = load / self.clients.pspeed[host]
+        if self.memory_penalty > 0:
+            over = max(0.0, load - self.clients.memcap[host])
+            delay *= 1.0 + self.memory_penalty * over / max(
+                self.clients.memcap[host], 1e-9)
+        return float(delay)
+
+    def tpd(self, placement: Sequence[int]) -> float:
+        """Paper eq. 7: bottom-up BFT, sum of per-level maxima."""
+        h = self.hierarchy
+        children = h.children_clients(placement)
+        total = 0.0
+        for level in range(h.depth - 1, -1, -1):
+            worst = 0.0
+            for s in range(h.level_starts[level], h.level_starts[level + 1]):
+                worst = max(worst,
+                            self.cluster_delay(int(placement[s]), children[s]))
+            total += worst
+        return total
+
+    def fitness(self, placement: Sequence[int]) -> float:
+        """Paper eq. 1: f = -T."""
+        return -self.tpd(placement)
+
+    # ------------------------------------------------------------------
+    # vectorized path (all particles at once, jit'd)
+    # ------------------------------------------------------------------
+    def _static_tables(self):
+        h = self.hierarchy
+        levels = jnp.asarray(h.levels)                       # (slots,)
+        # child count per slot for a *canonical* trainer split: W for
+        # internal slots; per-leaf trainer counts for leaves.
+        n_pool = h.total_clients - h.dimensions
+        n_leaves = h.n_leaves
+        base = n_pool // n_leaves
+        extra = n_pool % n_leaves
+        counts = []
+        for s in range(h.dimensions):
+            if h.children_slots(s):
+                counts.append(h.width)
+            else:
+                leaf_idx = s - h.level_starts[h.depth - 1]
+                counts.append(base + (1 if leaf_idx < extra else 0))
+        return levels, jnp.asarray(counts, jnp.float32)
+
+    def _make_batch_tpd(self):
+        """Build the jit'd (P, slots) -> (P,) TPD evaluator.
+
+        Uses the canonical trainer split (uniform mdatasize makes the TPD
+        independent of *which* trainers land where — only counts matter),
+        which is exactly the paper's uniform-mdatasize simulation.
+        """
+        levels, counts = self._static_tables()
+        pspeed = jnp.asarray(self.clients.pspeed, jnp.float32)
+        mds = jnp.asarray(self.clients.mdatasize, jnp.float32)
+        memcap = jnp.asarray(self.clients.memcap, jnp.float32)
+        n_levels = self.hierarchy.depth
+        penalty = self.memory_penalty
+
+        @jax.jit
+        def batch_tpd(placements):
+            host_speed = pspeed[placements]                   # (P, slots)
+            host_mds = mds[placements]
+            # uniform mdatasize: children contribute counts * mdatasize
+            load = host_mds + counts[None, :] * mds.mean()
+            delay = load / host_speed
+            if penalty > 0:
+                over = jnp.maximum(0.0, load - memcap[placements])
+                delay = delay * (1.0 + penalty * over /
+                                 jnp.maximum(memcap[placements], 1e-9))
+
+            def per_particle(d):
+                return jax.ops.segment_max(d, levels, num_segments=n_levels)
+
+            level_max = jax.vmap(per_particle)(delay)         # (P, levels)
+            return jnp.sum(level_max, axis=1)
+
+        return batch_tpd
+
+    def batch_tpd(self, placements: jnp.ndarray) -> jnp.ndarray:
+        fn = getattr(self, "_batch_tpd_fn", None)
+        if fn is None:
+            fn = self._make_batch_tpd()
+            object.__setattr__(self, "_batch_tpd_fn", fn)
+        return fn(placements)
+
+    def batch_fitness(self, placements) -> np.ndarray:
+        placements = jnp.asarray(np.asarray(placements, np.int32))
+        return -np.asarray(self.batch_tpd(placements))
+
+
+@dataclass(frozen=True)
+class TwoTierCostModel(CostModel):
+    """Eq. 6 extended with link-tier communication costs — the paper's
+    cost model mapped onto the TPU pod topology (DESIGN.md §8).
+
+    Every child->aggregator edge pays a per-payload transfer cost that
+    depends on whether the two clients share a pod: intra-pod edges ride
+    the ~50 GB/s ICI, cross-pod edges the ~10x slower DCN. A placement
+    optimizer over this model learns *pod locality* with zero topology
+    knowledge — the black-box TPD signal alone pushes aggregation
+    subtrees inside pods (bench_two_tier.py measures exactly that).
+    """
+    pod_of: Optional[np.ndarray] = None   # (n_clients,) pod index
+    ici_cost: float = 0.005               # delay per payload unit, same pod
+    dcn_cost: float = 0.05                # delay per payload unit, cross-pod
+
+    def _edge_cost(self, host: int, child: int) -> float:
+        if self.pod_of is None:
+            return 0.0
+        same = self.pod_of[host] == self.pod_of[child]
+        rate = self.ici_cost if same else self.dcn_cost
+        return float(self.clients.mdatasize[child]) * rate
+
+    def cluster_delay(self, host: int, children: Sequence[int]) -> float:
+        base = super().cluster_delay(host, children)
+        comm = sum(self._edge_cost(host, c) for c in children)
+        return base + comm
+
+    # the vectorized swarm evaluator assumes position-independent trainer
+    # contributions, which no longer holds (pods!) — fall back to the
+    # scalar path for correctness.
+    def batch_fitness(self, placements) -> np.ndarray:
+        return np.asarray([self.fitness(np.asarray(p, np.int64))
+                           for p in placements], np.float64)
+
+    def cross_pod_edges(self, placement) -> tuple:
+        """(cross, total) aggregation edges — the locality metric."""
+        h = self.hierarchy
+        placement = np.asarray(placement, np.int64)
+        children = h.children_clients(placement)
+        cross = total = 0
+        for s in range(h.dimensions):
+            host = int(placement[s])
+            for c in children[s]:
+                total += 1
+                if self.pod_of is not None and \
+                        self.pod_of[host] != self.pod_of[c]:
+                    cross += 1
+        return cross, total

@@ -1,0 +1,176 @@
+"""The SDFL aggregation hierarchy (paper Sec. IV-A).
+
+A regular tree of *aggregator slots*: depth ``D`` levels of aggregators,
+width ``W`` children per aggregator, and ``trainers_per_leaf`` trainer
+clients under each level-(D-1) aggregator. Slot count (paper eq. 5):
+
+    dimensions = sum_{i=0}^{D-1} W^i
+
+A **placement** is a vector of ``dimensions`` distinct client ids — which
+client hosts which aggregator slot (the PSO particle). All remaining
+clients are trainers, assigned round-robin to leaf aggregators (paper
+Sec. III-C "Hierarchy Rearrangement").
+
+Slots are BFS-indexed: slot 0 is the root, slot ``1 + (s-1)*W .. `` etc.;
+``level(s)`` and ``parent(s)`` are closed-form.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import cached_property
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Hierarchy:
+    depth: int                 # number of aggregator levels, >= 1
+    width: int                 # children per aggregator
+    trainers_per_leaf: int = 2
+    n_clients: Optional[int] = None  # default: exactly slots + trainers
+
+    def __post_init__(self):
+        if self.depth < 1 or self.width < 1:
+            raise ValueError("depth and width must be >= 1")
+        if self.n_clients is not None and self.n_clients < self.min_clients:
+            raise ValueError(
+                f"need >= {self.min_clients} clients for depth={self.depth} "
+                f"width={self.width} t/leaf={self.trainers_per_leaf}, "
+                f"got {self.n_clients}")
+
+    # ---- sizes -----------------------------------------------------------
+    @property
+    def dimensions(self) -> int:
+        """Paper eq. 5: number of aggregator slots."""
+        return sum(self.width ** i for i in range(self.depth))
+
+    @property
+    def n_leaves(self) -> int:
+        return self.width ** (self.depth - 1)
+
+    @property
+    def min_clients(self) -> int:
+        return self.dimensions + self.n_leaves * self.trainers_per_leaf
+
+    @property
+    def total_clients(self) -> int:
+        return self.n_clients if self.n_clients is not None else self.min_clients
+
+    # ---- static tree structure -------------------------------------------
+    @cached_property
+    def levels(self) -> np.ndarray:
+        """level index of each slot (BFS order)."""
+        out = np.zeros(self.dimensions, np.int32)
+        start, level = 0, 0
+        count = 1
+        while start < self.dimensions:
+            out[start: start + count] = level
+            start += count
+            count *= self.width
+            level += 1
+        return out
+
+    @cached_property
+    def level_starts(self) -> List[int]:
+        starts = [0]
+        count = 1
+        for _ in range(self.depth):
+            starts.append(starts[-1] + count)
+            count *= self.width
+        return starts  # length depth+1; starts[l]..starts[l+1] are level l
+
+    def children_slots(self, slot: int) -> List[int]:
+        """Child aggregator slots (empty for leaf aggregators)."""
+        first = 1 + slot * self.width
+        if first >= self.dimensions:
+            return []
+        return list(range(first, first + self.width))
+
+    def parent_slot(self, slot: int) -> int:
+        return (slot - 1) // self.width
+
+    @cached_property
+    def leaf_slots(self) -> List[int]:
+        return list(range(self.level_starts[self.depth - 1],
+                          self.level_starts[self.depth]))
+
+    # ---- placement -> full role assignment --------------------------------
+    def trainer_assignment(self, placement: Sequence[int]) -> List[List[int]]:
+        """Round-robin the non-aggregator clients over the leaf slots.
+
+        Returns trainers[i] = client ids under leaf slot leaf_slots[i].
+        """
+        placed = set(int(c) for c in placement)
+        pool = [c for c in range(self.total_clients) if c not in placed]
+        out: List[List[int]] = [[] for _ in self.leaf_slots]
+        for idx, c in enumerate(pool):
+            out[idx % len(out)].append(c)
+        return out
+
+    def children_clients(self, placement: Sequence[int],
+                         trainers: Optional[List[List[int]]] = None
+                         ) -> List[List[int]]:
+        """children_clients[s] = client ids in slot s's processing buffer."""
+        if trainers is None:
+            trainers = self.trainer_assignment(placement)
+        out: List[List[int]] = []
+        for s in range(self.dimensions):
+            kids = self.children_slots(s)
+            if kids:
+                out.append([int(placement[k]) for k in kids])
+            else:
+                leaf_idx = s - self.level_starts[self.depth - 1]
+                out.append(list(trainers[leaf_idx]))
+        return out
+
+    def clusters(self, placement: Sequence[int]) -> List[List[List[int]]]:
+        """Per-level aggregation clusters, bottom-up.
+
+        clusters[0] is the deepest level: for each leaf aggregator, the
+        member client ids = its trainers + the aggregator itself. Higher
+        entries: child-aggregator hosts + the parent aggregator. The FL
+        layer turns these into ``axis_index_groups``.
+        """
+        trainers = self.trainer_assignment(placement)
+        children = self.children_clients(placement, trainers)
+        out: List[List[List[int]]] = []
+        for level in range(self.depth - 1, -1, -1):
+            groups = []
+            for s in range(self.level_starts[level], self.level_starts[level + 1]):
+                groups.append(sorted(children[s] + [int(placement[s])]))
+            out.append(groups)
+        return out
+
+    def validate_placement(self, placement: Sequence[int]) -> None:
+        p = np.asarray(placement, np.int64)
+        if p.shape != (self.dimensions,):
+            raise ValueError(f"placement must have {self.dimensions} slots")
+        if len(set(p.tolist())) != self.dimensions:
+            raise ValueError("placement has duplicate client ids")
+        if p.min() < 0 or p.max() >= self.total_clients:
+            raise ValueError("placement client id out of range")
+
+
+@dataclass
+class ClientPool:
+    """Simulated client attributes (paper Sec. IV-A).
+
+    memcap ~ U[10, 50); pspeed ~ U[5, 15); mdatasize fixed at 5 units.
+    """
+    memcap: np.ndarray
+    pspeed: np.ndarray
+    mdatasize: np.ndarray
+
+    @classmethod
+    def random(cls, n_clients: int, seed: int = 0,
+               mdatasize: float = 5.0) -> "ClientPool":
+        rng = np.random.default_rng(seed)
+        return cls(
+            memcap=rng.uniform(10, 50, n_clients).astype(np.float64),
+            pspeed=rng.uniform(5, 15, n_clients).astype(np.float64),
+            mdatasize=np.full(n_clients, mdatasize, np.float64),
+        )
+
+    def __len__(self) -> int:
+        return len(self.pspeed)

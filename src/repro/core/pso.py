@@ -1,0 +1,199 @@
+"""Flag-Swap: integer-domain Particle Swarm Optimization for aggregation
+placement (paper Sec. III).
+
+Faithful to the paper's formulation:
+
+* particle position = vector of ``dimensions`` client ids (one per
+  aggregator slot);
+* velocity update (eq. 2):
+      v <- w*v + c1*r1*(pbest - x) + c2*r2*(gbest - x)
+  with defaults w=0.01, c1=0.01, c2=1 (Sec. IV-B);
+* velocity clamped to [-Vmax, Vmax], Vmax = max(1, D*velocity_factor)
+  (eq. 3, velocity_factor=0.1);
+* position update (eq. 4): x <- (x + v) mod client_count, duplicates
+  resolved by incrementing until a unique client id is found;
+* fitness f = -TPD (eq. 1), pbest/gbest updated on improvement.
+
+The optimizer is strictly **black-box**: it sees only (placement ->
+fitness) pairs. Two driving modes:
+
+* ``run(fitness_fn, iterations)`` — the simulation loop (Fig. 3): every
+  particle is evaluated each iteration; per-iteration swarm statistics
+  are recorded for the convergence plots.
+* ``ask()`` / ``tell()`` — the deployment loop (Fig. 4): each FL round
+  tests ONE particle's placement against the *measured* round delay,
+  cycling through the swarm (this is how SDFLMQ integrates it — one
+  arrangement per round, no client telemetry).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class SwarmHistory:
+    """Per-iteration fitness statistics (for Fig. 3-style plots)."""
+    per_particle: List[np.ndarray] = field(default_factory=list)  # (P,) TPD
+    best: List[float] = field(default_factory=list)
+    worst: List[float] = field(default_factory=list)
+    mean: List[float] = field(default_factory=list)
+
+    def record(self, tpds: np.ndarray) -> None:
+        self.per_particle.append(tpds.copy())
+        self.best.append(float(tpds.min()))
+        self.worst.append(float(tpds.max()))
+        self.mean.append(float(tpds.mean()))
+
+    def as_dict(self) -> dict:
+        return {
+            "per_particle": np.stack(self.per_particle).tolist(),
+            "best": self.best, "worst": self.worst, "mean": self.mean,
+        }
+
+
+class FlagSwapPSO:
+    """Integer PSO over aggregator placements."""
+
+    def __init__(self, n_slots: int, n_clients: int, n_particles: int = 10,
+                 inertia: float = 0.01, c1: float = 0.01, c2: float = 1.0,
+                 velocity_factor: float = 0.1, seed: int = 0):
+        if n_clients < n_slots:
+            raise ValueError("need at least as many clients as slots")
+        self.n_slots = n_slots
+        self.n_clients = n_clients
+        self.n_particles = n_particles
+        self.inertia = inertia
+        self.c1 = c1
+        self.c2 = c2
+        # eq. 3: Vmax = max(1, D * velocity_factor)
+        self.v_max = max(1.0, n_slots * velocity_factor)
+        self.rng = np.random.default_rng(seed)
+
+        # init (Sec. III-C): random permutations, zero velocities
+        self.x = np.stack([
+            self.rng.permutation(n_clients)[:n_slots]
+            for _ in range(n_particles)
+        ]).astype(np.float64)
+        self.v = np.zeros_like(self.x)
+        self.pbest_x = self.x.copy()
+        self.pbest_f = np.full(n_particles, -np.inf)
+        self.gbest_x = self.x[0].copy()
+        self.gbest_f = -np.inf
+        self.history = SwarmHistory()
+        self._cursor = 0  # ask/tell round-robin particle index
+        self.evaluations = 0
+
+    # ------------------------------------------------------------------
+    def _dedup(self, pos: np.ndarray) -> np.ndarray:
+        """Paper: 'Duplicates are resolved by incrementing until a unique
+        client ID is found.'"""
+        pos = np.floor(pos).astype(np.int64) % self.n_clients
+        seen = set()
+        for i in range(len(pos)):
+            c = int(pos[i])
+            while c in seen:
+                c = (c + 1) % self.n_clients
+            pos[i] = c
+            seen.add(c)
+        return pos
+
+    def placement(self, i: int) -> np.ndarray:
+        return self._dedup(self.x[i])
+
+    def _step_particle(self, i: int) -> None:
+        """Velocity (eq. 2, clamped eq. 3) + position (eq. 4) update."""
+        r1 = self.rng.random(self.n_slots)
+        r2 = self.rng.random(self.n_slots)
+        self.v[i] = (self.inertia * self.v[i]
+                     + self.c1 * r1 * (self.pbest_x[i] - self.x[i])
+                     + self.c2 * r2 * (self.gbest_x - self.x[i]))
+        self.v[i] = np.clip(self.v[i], -self.v_max, self.v_max)
+        # positions stay continuous (eq. 4 mod wrap); they are floored to
+        # client ids only at evaluation time (_dedup) so sub-integer
+        # velocity accumulates instead of being truncated away.
+        self.x[i] = (self.x[i] + self.v[i]) % self.n_clients
+
+    def _update_bests(self, i: int, f: float) -> None:
+        if f > self.pbest_f[i]:
+            self.pbest_f[i] = f
+            self.pbest_x[i] = self.x[i].copy()
+        if f > self.gbest_f:
+            self.gbest_f = f
+            self.gbest_x = self.x[i].copy()
+
+    # ------------------------------------------------------------------
+    # deployment mode: one particle per FL round
+    # ------------------------------------------------------------------
+    def ask(self) -> np.ndarray:
+        """Placement to test this FL round (current particle, deduped)."""
+        return self.placement(self._cursor)
+
+    def tell(self, fitness: float) -> None:
+        """Report the measured fitness (= -TPD) for the last ask()."""
+        i = self._cursor
+        self._update_bests(i, float(fitness))
+        self._step_particle(i)
+        self._cursor = (self._cursor + 1) % self.n_particles
+        self.evaluations += 1
+
+    # ------------------------------------------------------------------
+    # simulation mode: full swarm per iteration
+    # ------------------------------------------------------------------
+    def run(self, fitness_fn: Callable, iterations: int = 100,
+            batch_fitness_fn: Optional[Callable] = None) -> np.ndarray:
+        """Algorithm 1 main loop. ``fitness_fn(placement) -> f`` or, when
+        ``batch_fitness_fn`` is given, evaluate the whole swarm at once
+        (``(P, slots) -> (P,)``). Returns the gbest placement."""
+        for _ in range(iterations):
+            placements = np.stack([self.placement(i)
+                                   for i in range(self.n_particles)])
+            if batch_fitness_fn is not None:
+                fs = np.asarray(batch_fitness_fn(placements), np.float64)
+            else:
+                fs = np.array([fitness_fn(p) for p in placements], np.float64)
+            self.evaluations += self.n_particles
+            self.history.record(-fs)  # record TPD (positive)
+            for i in range(self.n_particles):
+                self._update_bests(i, fs[i])
+            for i in range(self.n_particles):
+                self._step_particle(i)
+        return self._dedup(self.gbest_x)
+
+    @property
+    def best_placement(self) -> np.ndarray:
+        return self._dedup(self.gbest_x)
+
+    @property
+    def converged(self) -> bool:
+        """All particles currently propose the same placement."""
+        ps = {tuple(self.placement(i)) for i in range(self.n_particles)}
+        return len(ps) == 1
+
+    # ------------------------------------------------------------------
+    # adaptation to system drift (paper Sec. VI future work)
+    # ------------------------------------------------------------------
+    def reignite(self, keep_best: bool = True) -> None:
+        """Restart exploration after a detected system change.
+
+        The converged swarm is a point mass — useless once client speeds
+        shift. Re-randomize every particle (fresh permutations, zero
+        velocities) and FORGET the now-stale fitness memory; optionally
+        seed particle 0 with the old gbest placement (it competes, but
+        no longer anchors the velocity field with a stale fitness).
+        """
+        old_best = self.gbest_x.copy()
+        self.x = np.stack([
+            self.rng.permutation(self.n_clients)[: self.n_slots]
+            for _ in range(self.n_particles)
+        ]).astype(np.float64)
+        if keep_best:
+            self.x[0] = old_best
+        self.v = np.zeros_like(self.x)
+        self.pbest_x = self.x.copy()
+        self.pbest_f = np.full(self.n_particles, -np.inf)
+        self.gbest_x = self.x[0].copy()
+        self.gbest_f = -np.inf
+        self._cursor = 0

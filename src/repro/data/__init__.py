@@ -1,0 +1,13 @@
+from repro.data.synthetic import (
+    SyntheticLMDataset,
+    SyntheticClassificationDataset,
+    dirichlet_partition,
+    FederatedDataset,
+)
+
+__all__ = [
+    "SyntheticLMDataset",
+    "SyntheticClassificationDataset",
+    "dirichlet_partition",
+    "FederatedDataset",
+]

@@ -1,0 +1,173 @@
+"""Deterministic synthetic data pipeline.
+
+Two generators — an LM token stream (for the transformer zoo) and a
+classification set (for the paper's 1.8M-param MLP docker experiment) —
+plus a Dirichlet non-IID federated partitioner, the standard way to
+emulate heterogeneous client data distributions in FL studies.
+
+Everything is numpy-side (host) and fed to jax per-batch, as a real input
+pipeline would; batches are yielded already shaped
+``(global_batch, seq_len)`` so pjit can shard them on the data axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+class SyntheticLMDataset:
+    """An infinite, seeded LM token stream with mild structure.
+
+    Tokens follow a per-document Markov-ish recurrence so the loss is
+    learnable (pure uniform noise would make convergence tests vacuous):
+    ``t[i+1] = (a * t[i] + b) % vocab`` with per-document (a, b).
+    """
+
+    def __init__(self, vocab_size: int, seq_len: int, seed: int = 0):
+        self.vocab_size = int(vocab_size)
+        self.seq_len = int(seq_len)
+        self.seed = int(seed)
+
+    def batch(self, global_batch: int, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        a = rng.integers(1, 8, size=(global_batch, 1))
+        b = rng.integers(0, self.vocab_size, size=(global_batch, 1))
+        t0 = rng.integers(0, self.vocab_size, size=(global_batch, 1))
+        idx = np.arange(self.seq_len + 1)[None, :]
+        # closed form of the affine recurrence mod vocab
+        toks = (t0 * np.power(a, idx % 13) + b * idx) % self.vocab_size
+        toks = toks.astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def batches(self, global_batch: int) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(global_batch, step)
+            step += 1
+
+
+class SyntheticClassificationDataset:
+    """MNIST-shaped synthetic classification data (784 features, 10 classes).
+
+    Class-conditional Gaussians so the MLP actually learns; used by the
+    Fig. 4 cluster-emulation benchmark and the FL examples.
+    """
+
+    def __init__(self, n_features: int = 784, n_classes: int = 10,
+                 n_samples: int = 10_000, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.n_features, self.n_classes = n_features, n_classes
+        self.centers = rng.normal(size=(n_classes, n_features)).astype(np.float32)
+        self.labels = rng.integers(0, n_classes, size=n_samples).astype(np.int32)
+        noise = rng.normal(scale=0.8, size=(n_samples, n_features)).astype(np.float32)
+        self.features = self.centers[self.labels] + noise
+
+    def __len__(self) -> int:
+        return len(self.labels)
+
+
+def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float = 0.5,
+                        seed: int = 0, min_per_client: int = 8) -> list[np.ndarray]:
+    """Partition sample indices across clients with Dirichlet(alpha) class
+    skew — the standard non-IID FL split (smaller alpha => more skew)."""
+    rng = np.random.default_rng(seed)
+    n_classes = int(labels.max()) + 1
+    client_idx: list[list[int]] = [[] for _ in range(n_clients)]
+    for c in range(n_classes):
+        idx = np.where(labels == c)[0]
+        rng.shuffle(idx)
+        props = rng.dirichlet([alpha] * n_clients)
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for cid, part in enumerate(np.split(idx, cuts)):
+            client_idx[cid].extend(part.tolist())
+    # guarantee a floor so no client starves (re-assign from the richest)
+    order = np.argsort([len(x) for x in client_idx])
+    for cid in order:
+        while len(client_idx[cid]) < min_per_client:
+            donor = max(range(n_clients), key=lambda i: len(client_idx[i]))
+            client_idx[cid].append(client_idx[donor].pop())
+    return [np.asarray(sorted(x), dtype=np.int64) for x in client_idx]
+
+
+@dataclass
+class FederatedDataset:
+    """Per-client views over a base dataset, produced by dirichlet_partition."""
+    base: SyntheticClassificationDataset
+    partitions: list
+
+    @classmethod
+    def make(cls, n_clients: int, alpha: float = 0.5, seed: int = 0,
+             n_samples: int = 10_000) -> "FederatedDataset":
+        base = SyntheticClassificationDataset(n_samples=n_samples, seed=seed)
+        parts = dirichlet_partition(base.labels, n_clients, alpha=alpha, seed=seed)
+        return cls(base=base, partitions=parts)
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.partitions)
+
+    def client_batch(self, client_id: int, batch_size: int, step: int) -> dict:
+        part = self.partitions[client_id]
+        rng = np.random.default_rng((client_id, step))
+        take = rng.choice(len(part), size=min(batch_size, len(part)), replace=False)
+        idx = part[take]
+        return {"x": self.base.features[idx], "y": self.base.labels[idx]}
+
+    def client_weights(self) -> np.ndarray:
+        """FedAvg weights proportional to client sample counts."""
+        sizes = np.array([len(p) for p in self.partitions], dtype=np.float64)
+        return (sizes / sizes.sum()).astype(np.float32)
+
+
+@dataclass
+class FederatedLMDataset:
+    """Per-client LM token streams (non-IID via per-client seeds and
+    disjoint document-parameter ranges) for federating the transformer zoo."""
+    vocab_size: int
+    seq_len: int
+    n_clients_: int
+    seed: int = 0
+    frontend: Optional[tuple] = None  # (frontend_len, frontend_dim) stub
+
+    @property
+    def n_clients(self) -> int:
+        return self.n_clients_
+
+    def _with_frontend(self, batch: dict, rng) -> dict:
+        if self.frontend is not None:
+            fl, fd = self.frontend
+            batch["frontend"] = rng.normal(
+                scale=0.02, size=(len(batch["tokens"]), fl, fd)
+            ).astype(np.float32)
+        return batch
+
+    def client_batch(self, client_id: int, batch_size: int, step: int) -> dict:
+        ds = SyntheticLMDataset(self.vocab_size, self.seq_len,
+                                seed=hash((self.seed, client_id)) % (2**31))
+        rng = np.random.default_rng((self.seed, client_id, step))
+        return self._with_frontend(ds.batch(batch_size, step), rng)
+
+    def eval_batch(self, n: int = 256) -> dict:
+        ds = SyntheticLMDataset(self.vocab_size, self.seq_len,
+                                seed=hash((self.seed, "eval")) % (2**31))
+        rng = np.random.default_rng((self.seed, 999))
+        return self._with_frontend(ds.batch(n, 0), rng)
+
+    def client_weights(self) -> np.ndarray:
+        return np.full(self.n_clients_, 1.0 / self.n_clients_, np.float32)
+
+
+def make_federated_dataset(model_cfg, n_clients: int, seed: int = 0,
+                           seq_len: int = 64, alpha: float = 0.5):
+    """Family-appropriate federated dataset for a model config."""
+    if model_cfg.family == "mlp":
+        return FederatedDataset.make(n_clients, alpha=alpha, seed=seed)
+    frontend = None
+    if model_cfg.family in ("vlm", "audio"):
+        frontend = (model_cfg.frontend_len,
+                    model_cfg.frontend_dim or model_cfg.d_model)
+    return FederatedLMDataset(
+        vocab_size=model_cfg.vocab_size, seq_len=seq_len,
+        n_clients_=n_clients, seed=seed, frontend=frontend)

@@ -1,0 +1,19 @@
+from repro.fl.aggregation import (
+    AggregationPlan,
+    fedavg,
+    flat_psum,
+    hierarchical_fedavg,
+    hierarchical_psum,
+)
+from repro.fl.distributed import FLTrainStep, choose_fl_hierarchy
+from repro.fl.orchestrator import (
+    FederatedOrchestrator,
+    FederatedRunResult,
+    RoundRecord,
+)
+
+__all__ = [
+    "AggregationPlan", "fedavg", "flat_psum", "hierarchical_fedavg",
+    "hierarchical_psum", "FLTrainStep", "choose_fl_hierarchy",
+    "FederatedOrchestrator", "FederatedRunResult", "RoundRecord",
+]

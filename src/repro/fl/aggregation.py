@@ -1,0 +1,208 @@
+"""Aggregation: flat FedAvg, host-level hierarchical FedAvg, and the
+device-level hierarchical collective schedule (the paper's technique as
+it lowers onto a TPU mesh).
+
+Key invariant (property-tested): for any valid placement, hierarchical
+FedAvg over the placement tree == flat weighted FedAvg. The placement
+changes *where* partial sums happen (hence the delay), never the result.
+
+Device-level mapping (DESIGN.md "hierarchical aggregation -> grouped
+collectives"): every level of the tree becomes one
+``lax.psum(..., 'data', axis_index_groups=...)`` where each aggregation
+cluster is a device group (and every uninvolved device sits in a
+singleton group — a free no-op). Contributions are masked to one
+representative device per carrier client, so multi-device clients and
+group-broadcast semantics compose exactly. On the multi-pod mesh the
+root level is a plain ``psum`` over the ``pod`` axis — the hierarchy's
+top level aligned with the physical DCN boundary.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hierarchy import Hierarchy
+from repro.utils.trees import tree_weighted_sum
+
+
+# --------------------------------------------------------------------------
+# host-level (orchestrator / emulation / property tests)
+# --------------------------------------------------------------------------
+
+def fedavg(updates: Sequence, weights: Sequence[float]):
+    """Flat weighted FedAvg: sum_i w_i * update_i (weights sum to 1)."""
+    return tree_weighted_sum(list(updates), list(weights))
+
+
+def hierarchical_fedavg(updates: Sequence, weights: Sequence[float],
+                        hierarchy: Hierarchy, placement: Sequence[int]):
+    """FedAvg computed along the placement tree, bottom-up.
+
+    Every client's contribution w_i * u_i enters at its position (trainer
+    under a leaf aggregator, or aggregator's own update at its level);
+    each aggregator sums its buffer; the root's sum is the global model.
+    Returns (global_update, partials_per_level) — partials are exposed so
+    the emulator can time each cluster.
+    """
+    h = hierarchy
+    placement = np.asarray(placement, np.int64)
+    h.validate_placement(placement)
+    weighted = [jax.tree.map(lambda x: x * w, u)
+                for u, w in zip(updates, weights)]
+    trainers = h.trainer_assignment(placement)
+    # value held at each slot, built bottom-up
+    slot_value = [None] * h.dimensions
+    for level in range(h.depth - 1, -1, -1):
+        for s in range(h.level_starts[level], h.level_starts[level + 1]):
+            host = int(placement[s])
+            parts = [weighted[host]]
+            kids = h.children_slots(s)
+            if kids:
+                parts.extend(slot_value[k] for k in kids)
+            else:
+                leaf_idx = s - h.level_starts[h.depth - 1]
+                parts.extend(weighted[t] for t in trainers[leaf_idx])
+            acc = parts[0]
+            for p in parts[1:]:
+                acc = jax.tree.map(jnp.add, acc, p)
+            slot_value[s] = acc
+    return slot_value[0]
+
+
+# --------------------------------------------------------------------------
+# device-level plan
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AggregationPlan:
+    """Static schedule for the in-mesh hierarchical aggregation.
+
+    Built on the host from (hierarchy, placement, #devices); consumed
+    inside shard_map. All members are plain numpy so the plan hashes into
+    the jit cache via closure capture.
+    """
+    n_devices: int                       # extent of the data axis (per pod)
+    client_of_device: np.ndarray         # (n_devices,) int
+    weight_of_device: np.ndarray         # (n_devices,) f32: w_c / n_dev_c
+    client_groups: tuple                 # device groups: one per client
+    levels: tuple                        # per level, deepest first:
+    #   (groups, carrier_mask, in_group_mask)
+    root_rep_mask: np.ndarray            # (n_devices,) 0/1: root-group reps
+
+    @staticmethod
+    def build(hierarchy: Hierarchy, placement: Sequence[int],
+              n_devices: int, weights: Optional[Sequence[float]] = None
+              ) -> "AggregationPlan":
+        n_clients = hierarchy.total_clients
+        if n_devices % n_clients != 0:
+            raise ValueError(
+                f"data axis ({n_devices}) must be a multiple of the client "
+                f"count ({n_clients})")
+        per = n_devices // n_clients
+        client_of_device = np.repeat(np.arange(n_clients), per)
+        if weights is None:
+            weights = np.full(n_clients, 1.0 / n_clients)
+        weights = np.asarray(weights, np.float32)
+        weight_of_device = weights[client_of_device] / per
+
+        def devices_of(c: int) -> List[int]:
+            return list(range(c * per, (c + 1) * per))
+
+        def rep_of(c: int) -> int:
+            return c * per
+
+        client_groups = tuple(tuple(devices_of(c)) for c in range(n_clients))
+
+        clusters = hierarchy.clusters(placement)  # deepest level first
+        levels = []
+        for level_clusters in clusters:
+            groups: List[tuple] = []
+            carrier = np.zeros(n_devices, np.float32)
+            in_group = np.zeros(n_devices, np.float32)
+            grouped_devices: set = set()
+            for members in level_clusters:
+                devs: List[int] = []
+                for c in members:
+                    devs.extend(devices_of(c))
+                    carrier[rep_of(c)] = 1.0
+                groups.append(tuple(sorted(devs)))
+                grouped_devices.update(devs)
+                for d in devs:
+                    in_group[d] = 1.0
+            for d in range(n_devices):
+                if d not in grouped_devices:
+                    groups.append((d,))
+            levels.append((tuple(groups), carrier, in_group))
+
+        root_host = int(placement[0])
+        root_rep = np.zeros(n_devices, np.float32)
+        root_rep[rep_of(root_host)] = 1.0
+        return AggregationPlan(
+            n_devices=n_devices,
+            client_of_device=client_of_device,
+            weight_of_device=weight_of_device.astype(np.float32),
+            client_groups=client_groups,
+            levels=tuple(levels),
+            root_rep_mask=root_rep,
+        )
+
+
+def hierarchical_psum(value, plan: AggregationPlan, axis_name: str = "data",
+                      pod_axis: Optional[str] = None):
+    """The paper's aggregation tree as grouped collectives.
+
+    Call INSIDE shard_map over (pod_axis?, axis_name). ``value`` is this
+    device's (weighted-below) local update leaf or pytree. Returns the
+    globally aggregated value, broadcast to every device.
+    """
+    d = jax.lax.axis_index(axis_name)
+    w = jnp.asarray(plan.weight_of_device)[d]
+    v = jax.tree.map(lambda x: x * w.astype(x.dtype), value)
+
+    # 1) client-internal reduce: every device of a client holds w_c * u_c
+    v = jax.tree.map(
+        lambda x: jax.lax.psum(x, axis_name,
+                               axis_index_groups=[list(g) for g in
+                                                  plan.client_groups]), v)
+
+    # 2) tree levels, deepest first
+    for groups, carrier, in_group in plan.levels:
+        cm = jnp.asarray(carrier)[d]
+        gm = jnp.asarray(in_group)[d]
+
+        def level_reduce(x, cm=cm, gm=gm, groups=groups):
+            masked = x * cm.astype(x.dtype)
+            summed = jax.lax.psum(
+                masked, axis_name,
+                axis_index_groups=[list(g) for g in groups])
+            return jnp.where(gm.astype(bool), summed, x)
+
+        v = jax.tree.map(level_reduce, v)
+
+    # 3) broadcast the root's total to the whole data axis
+    rm = jnp.asarray(plan.root_rep_mask)[d]
+    v = jax.tree.map(
+        lambda x: jax.lax.psum(x * rm.astype(x.dtype), axis_name), v)
+
+    # 4) multi-pod: the top of the hierarchy crosses the DCN boundary.
+    # Per-pod weights each sum to 1, so the global model is the pod mean.
+    if pod_axis is not None:
+        v = jax.tree.map(lambda x: jax.lax.pmean(x, pod_axis), v)
+    return v
+
+
+def flat_psum(value, plan: AggregationPlan, axis_name: str = "data",
+              pod_axis: Optional[str] = None):
+    """CFL baseline: one global all-reduce (weighted)."""
+    d = jax.lax.axis_index(axis_name)
+    w = jnp.asarray(plan.weight_of_device)[d]
+    v = jax.tree.map(
+        lambda x: jax.lax.psum(x * w.astype(x.dtype), axis_name), value)
+    if pod_axis is not None:
+        v = jax.tree.map(lambda x: jax.lax.pmean(x, pod_axis), v)
+    return v

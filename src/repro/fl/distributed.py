@@ -1,0 +1,209 @@
+"""The paper's technique as a first-class distributed training step.
+
+Mapping SDFL onto a TPU mesh (see DESIGN.md):
+
+* Every FL **client owns a slice of the data axis** and holds its *own*
+  replica of the model: parameters carry a leading client dim ``C``
+  sharded over ``('pod',) + ('data',)``. Local training is a ``vmap``
+  over that dim — embarrassingly parallel, ZERO cross-client collectives
+  (GSPMD keeps tensor-parallel ``model``-axis math inside each client).
+* One FL round = ``local_steps`` local updates followed by
+  **hierarchical aggregation along the placement tree**: a partial-manual
+  ``shard_map`` (manual over pod/data, auto over model) running one
+  grouped ``psum`` per tree level (``aggregation.hierarchical_psum``).
+  The placement decides the groups; the roofline's collective term sees
+  exactly the schedule the paper optimizes.
+* The flat baseline (CFL) is the same round with a single ungrouped
+  psum.
+
+Multi-pod: each pod hosts its own client set (same per-pod placement);
+the tree's root level is a ``pmean`` across the ``pod`` axis — the
+hierarchy's top level aligned with the DCN boundary.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.hierarchy import Hierarchy
+from repro.fl.aggregation import AggregationPlan, flat_psum, hierarchical_psum
+from repro.models.api import Model
+from repro.models.sharding import ShardingPolicy
+
+
+class FLTrainStep:
+    """Builder for the federated round step of any zoo ``Model``.
+
+    Produces pure functions over *client-stacked* pytrees: every param
+    leaf gets a leading ``n_clients_total`` dim (n_pods * clients_per_pod)
+    sharded over the pod+data axes.
+    """
+
+    def __init__(self, model: Model, optimizer, hierarchy: Hierarchy,
+                 placement: Sequence[int], *,
+                 weights: Optional[Sequence[float]] = None,
+                 local_steps: int = 1, mode: str = "hierarchical"):
+        self.model = model
+        self.optimizer = optimizer
+        self.hierarchy = hierarchy
+        self.placement = np.asarray(placement, np.int64)
+        self.local_steps = local_steps
+        self.mode = mode
+        policy = model.policy
+        self.mesh = policy.mesh
+        if self.mesh is not None:
+            self.n_pods = self.mesh.shape.get("pod", 1)
+            self.data_size = self.mesh.shape.get("data", 1)
+        else:
+            self.n_pods = 1
+            self.data_size = hierarchy.total_clients  # host path: 1 dev/client
+        self.clients_per_pod = hierarchy.total_clients
+        self.n_clients_total = self.clients_per_pod * self.n_pods
+        self.plan = AggregationPlan.build(
+            hierarchy, self.placement, self.data_size, weights)
+
+    # ------------------------------------------------------------------
+    @property
+    def client_axes(self):
+        if self.mesh is None:
+            return None
+        axes = tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+        return axes if axes else None
+
+    def stacked_param_pspecs(self):
+        """Per-leaf specs: leading client dim over (pod, data); remaining
+        dims keep the model-axis sharding from the model's spec_rule
+        (fsdp resolves to None — client replicas exclude data-axis FSDP)."""
+        base = self.model.param_pspecs()
+        c = self.client_axes
+
+        def stackspec(spec):
+            parts = [c]
+            for s in spec:
+                # drop data/pod axes from param dims (used by client dim)
+                if s in ("data", "pod") or (isinstance(s, tuple) and
+                                            any(a in ("data", "pod") for a in s)):
+                    parts.append(None)
+                else:
+                    parts.append(s)
+            return P(*parts)
+
+        return jax.tree.map(stackspec, base,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    def init_stacked(self, rng):
+        """Stacked params + opt state (all clients start from one init)."""
+        params = self.model.init(rng)
+        opt_state = self.optimizer.init(params)
+        n = self.n_clients_total
+
+        def stack(x):
+            return jnp.broadcast_to(x, (n,) + x.shape)
+
+        return (jax.tree.map(stack, params), jax.tree.map(stack, opt_state))
+
+    # ------------------------------------------------------------------
+    def make_round_fn(self):
+        """(params_stacked, opt_stacked, batch_stacked) ->
+        (params_stacked, opt_stacked, metrics).
+
+        batch_stacked leaves: (n_clients_total, per_client_batch, ...).
+        """
+        model, optimizer = self.model, self.optimizer
+        local_steps = self.local_steps
+        plan, mode = self.plan, self.mode
+        mesh = self.mesh
+        pod_axis = "pod" if (mesh is not None and "pod" in mesh.axis_names) \
+            else None
+
+        def local_round(params, opt_state, batch):
+            def one_step(carry, _):
+                params, opt_state = carry
+                (loss, _), grads = jax.value_and_grad(
+                    model.loss_fn, has_aux=True)(params, batch)
+                params, opt_state = optimizer.update(params, grads, opt_state)
+                return (params, opt_state), loss
+
+            (params, opt_state), losses = jax.lax.scan(
+                one_step, (params, opt_state), None, length=local_steps)
+            return params, opt_state, losses[-1]
+
+        def aggregate(params_stacked):
+            if mesh is None:
+                # host path (tests): tree-equivalent weighted FedAvg
+                # (plan built with 1 device per client => weight_of_device
+                # is exactly the per-client weight)
+                from repro.utils.trees import tree_weighted_sum
+                updates = [jax.tree.map(lambda x, i=i: x[i], params_stacked)
+                           for i in range(self.n_clients_total)]
+                glob = tree_weighted_sum(updates,
+                                         list(plan.weight_of_device))
+                return jax.tree.map(
+                    lambda g: jnp.broadcast_to(
+                        g, (self.n_clients_total,) + g.shape), glob)
+
+            def agg_body(tree):
+                # local view: client dim is size 1 on each device slice
+                squeezed = jax.tree.map(lambda x: x[0], tree)
+                if mode == "hierarchical":
+                    out = hierarchical_psum(squeezed, plan, "data", pod_axis)
+                else:
+                    out = flat_psum(squeezed, plan, "data", pod_axis)
+                return jax.tree.map(lambda x: x[None], out)
+
+            specs = self.stacked_param_pspecs()
+            manual = set(a for a in ("pod", "data") if a in mesh.axis_names)
+
+            def spec_manual_only(spec):
+                return P(*[s if (s in manual or (isinstance(s, tuple))) else None
+                           for s in spec])
+
+            manual_specs = jax.tree.map(spec_manual_only, specs,
+                                        is_leaf=lambda s: isinstance(s, P))
+            return jax.shard_map(
+                agg_body, mesh=mesh,
+                in_specs=(manual_specs,), out_specs=manual_specs,
+                axis_names=manual, check_vma=False,
+            )(params_stacked)
+
+        def round_fn(params_stacked, opt_stacked, batch_stacked):
+            # spmd_axis_name tells GSPMD the client dim's mesh axes so
+            # sharding constraints inside local_round (e.g. the
+            # sequence-parallel hints) batch correctly
+            spmd = self.client_axes if mesh is not None else None
+            vmapped = jax.vmap(local_round, spmd_axis_name=spmd)
+            params_stacked, opt_stacked, losses = vmapped(
+                params_stacked, opt_stacked, batch_stacked)
+            if mode != "none":
+                params_stacked = aggregate(params_stacked)
+            return params_stacked, opt_stacked, {"loss": jnp.mean(losses)}
+
+        return round_fn
+
+    # ------------------------------------------------------------------
+    def batch_shape(self, shape_cfg) -> dict:
+        """Per-client batch split of a global shape."""
+        per = shape_cfg.global_batch // self.n_clients_total
+        return {"per_client_batch": max(per, 1),
+                "n_clients": self.n_clients_total}
+
+
+def choose_fl_hierarchy(n_clients: int) -> Hierarchy:
+    """Pick a depth/width whose minimum client count fits ``n_clients``.
+
+    Preference order: deeper trees first (more interesting schedules).
+    Extra clients beyond the minimum become additional trainers (the
+    round-robin assignment absorbs them).
+    """
+    for depth, width, tpl in ((3, 2, 2), (3, 2, 1), (2, 3, 4), (2, 3, 3),
+                              (2, 2, 4), (2, 2, 2), (2, 2, 1)):
+        if Hierarchy(depth, width, tpl).min_clients <= n_clients:
+            return Hierarchy(depth=depth, width=width, trainers_per_leaf=tpl,
+                             n_clients=n_clients)
+    return Hierarchy(depth=1, width=1, trainers_per_leaf=1,
+                     n_clients=max(n_clients, 2))

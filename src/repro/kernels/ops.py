@@ -1,0 +1,139 @@
+"""Public kernel entry points: one jit'd wrapper per Pallas kernel that
+dispatches between the TPU kernel and the pure-jnp oracle.
+
+Dispatch policy:
+
+* ``use_pallas=None`` (default) — Pallas on TPU backends, oracle
+  elsewhere (the CPU container, the dry-run).
+* ``use_pallas=True`` — force the kernel; on CPU this requires
+  ``interpret=True`` (tests use this to validate the kernel body).
+* ``use_pallas=False`` — force the oracle.
+
+The wrappers own the shape plumbing (padding to block multiples,
+layout transposes) so model code calls them with natural shapes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fedavg import fedavg_pallas, DEFAULT_BLOCK_N
+from repro.kernels.flash_attention import (
+    flash_attention_pallas, DEFAULT_BLOCK_Q, DEFAULT_BLOCK_KV)
+from repro.kernels.rglru import (
+    rglru_scan_pallas, DEFAULT_BLOCK_T, DEFAULT_BLOCK_D)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(use_pallas: Optional[bool]) -> bool:
+    return _on_tpu() if use_pallas is None else use_pallas
+
+
+# --------------------------------------------------------------------------
+def fedavg(stacked: jnp.ndarray, weights: jnp.ndarray, *,
+           use_pallas: Optional[bool] = None,
+           block_n: int = DEFAULT_BLOCK_N,
+           interpret: bool = False) -> jnp.ndarray:
+    """Weighted sum over the leading client dim: (K, N), (K,) -> (N,)."""
+    if not _resolve(use_pallas):
+        return ref.fedavg_ref(stacked, weights)
+    return fedavg_pallas(stacked, weights, block_n=block_n,
+                         interpret=interpret or not _on_tpu())
+
+
+def fedavg_tree(trees, weights, *, use_pallas: Optional[bool] = None,
+                interpret: bool = False):
+    """FedAvg over a list of pytrees via one fused flat reduction.
+
+    Flattens/concats every leaf once, runs the (K, N_total) kernel, and
+    unflattens — one HBM pass over the whole model instead of one launch
+    per leaf.
+    """
+    leaves_list = [jax.tree.leaves(t) for t in trees]
+    treedef = jax.tree.structure(trees[0])
+    shapes = [l.shape for l in leaves_list[0]]
+    sizes = [l.size for l in leaves_list[0]]
+    stacked = jnp.stack(
+        [jnp.concatenate([l.reshape(-1) for l in ls]) for ls in leaves_list])
+    w = jnp.asarray(weights, stacked.dtype)
+    flat = fedavg(stacked, w, use_pallas=use_pallas, interpret=interpret)
+    out, off = [], 0
+    for shape, size in zip(shapes, sizes):
+        out.append(flat[off: off + size].reshape(shape))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    use_pallas: Optional[bool] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_kv: int = DEFAULT_BLOCK_KV,
+                    interpret: bool = False) -> jnp.ndarray:
+    """GQA attention, (B, Hq, S, hd) x (B, Hkv, S, hd) -> (B, Hq, S, hd)."""
+    if not _resolve(use_pallas):
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       scale=scale)
+    b, hq, s, hd = q.shape
+    blk = max(block_q, block_kv)
+    pad = (-s) % blk
+    if pad:
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    else:
+        qp, kp, vp = q, k, v
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, window=window, scale=scale,
+        block_q=min(block_q, qp.shape[2]), block_kv=min(block_kv, qp.shape[2]),
+        interpret=interpret or not _on_tpu(),
+        kv_len=s if pad else None)
+    return out[:, :, :s] if pad else out
+
+
+# --------------------------------------------------------------------------
+def rglru_scan(a: jnp.ndarray, u: jnp.ndarray, *,
+               use_pallas: Optional[bool] = None,
+               block_t: int = DEFAULT_BLOCK_T,
+               block_d: int = DEFAULT_BLOCK_D,
+               interpret: bool = False) -> jnp.ndarray:
+    """Gated linear recurrence h_t = a_t h_{t-1} + u_t over (B, T, D)."""
+    if not _resolve(use_pallas):
+        return ref.rglru_scan_ref(a, u)
+    b, t, d = a.shape
+    bt = min(block_t, t)
+    while bt & (bt - 1):
+        bt -= 1  # largest power of two <= block_t
+    pad_t = (-t) % bt
+    pad_d = (-d) % min(block_d, d)
+    if pad_t or pad_d:
+        ap = jnp.pad(a, ((0, 0), (0, pad_t), (0, pad_d)))
+        up = jnp.pad(u, ((0, 0), (0, pad_t), (0, pad_d)))
+    else:
+        ap, up = a, u
+    out = rglru_scan_pallas(ap, up, block_t=bt,
+                            block_d=min(block_d, ap.shape[2]),
+                            interpret=interpret or not _on_tpu())
+    return out[:, :t, :d] if (pad_t or pad_d) else out
+
+
+# --------------------------------------------------------------------------
+def fused_adamw(p, g, m, v, lr, bc1, bc2, *, b1=0.9, b2=0.95, eps=1e-8,
+                wd=0.1, use_pallas: Optional[bool] = None,
+                interpret: bool = False):
+    """Fused AdamW over flattened 1-D tensors: (new_p, new_m, new_v)."""
+    from repro.kernels.fused_adamw import fused_adamw_pallas
+    if not _resolve(use_pallas):
+        return ref.fused_adamw_ref(p, g, m, v, lr, bc1, bc2, b1=b1, b2=b2,
+                                   eps=eps, wd=wd)
+    return fused_adamw_pallas(p, g, m, v, lr, bc1, bc2, b1=b1, b2=b2,
+                              eps=eps, wd=wd,
+                              interpret=interpret or not _on_tpu())

@@ -1,0 +1,38 @@
+"""Production mesh definitions (TPU v5e target).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before the first
+jax call to obtain enough placeholder devices; the rest of the repo
+(tests, benchmarks, examples) sees the 1 real CPU device.
+
+Axes:
+  * single-pod: (16, 16) -> ("data", "model")       — 256 chips
+  * multi-pod : (2, 16, 16) -> ("pod", "data", "model") — 512 chips
+
+"data" carries the global batch and the FL-client dim; "model" carries
+tensor/expert parallelism; "pod" is the DCN boundary — the top level of
+the paper's aggregation hierarchy aligns with it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants (per chip) — the roofline denominators.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link
+
+
+def mesh_chip_count(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,333 @@
+"""Step bundles: (step_fn, in/out shardings, ShapeDtypeStruct inputs) for
+every (architecture x input shape x mesh) combination.
+
+This is the single place where the framework decides *what* gets lowered:
+
+* ``train_4k``  -> the paper's FL round (hierarchical aggregation over the
+  placement tree) when a per-client model replica fits a chip; otherwise
+  the standard FSDP+TP train step (see DESIGN.md §Arch-applicability —
+  qwen3's 235B replica cannot be per-client on a v5e pod, so the
+  hierarchy degenerates to the pod level there).
+* ``prefill_32k`` -> ``prefill_fn`` (full-sequence forward + KV cache).
+* ``decode_32k`` / ``long_500k`` -> ``decode_fn`` (ONE token against a
+  seq_len-long cache; long_500k runs sub-quadratic variants: ring cache
+  of the window for attention archs, native recurrent state for SSM /
+  hybrid).
+
+Everything is ShapeDtypeStruct-based — no allocation ever happens here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.hierarchy import Hierarchy
+from repro.fl.distributed import FLTrainStep, choose_fl_hierarchy
+from repro.models import get_model, make_train_step
+from repro.models.api import Model, _path_str
+from repro.models.sharding import ShardingPolicy, make_policy
+from repro.optim import sgd
+
+# FL replica mode is used when one client's f32 params, TP-sharded over the
+# model axis, stay under this per-device budget (leaves room for grads +
+# activations on a 16 GiB chip).
+FL_REPLICA_BUDGET_BYTES = 3.0e9
+CLIENTS_PER_POD = 16
+FL_LOCAL_LR = 0.05
+
+
+@dataclass
+class StepBundle:
+    """Everything ``jax.jit(fn, in_shardings, out_shardings).lower(*args)``
+    needs, plus bookkeeping for the roofline."""
+    arch: str
+    shape: str
+    kind: str                  # train | prefill | decode
+    mode: str                  # fl_replica | standard | serve
+    fn: Callable
+    args: tuple                # ShapeDtypeStructs
+    in_shardings: Any
+    out_shardings: Any
+    meta: dict
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def _ns(mesh: Mesh, tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def _replicated_like(mesh: Mesh, tree_struct):
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, P(*([None] * l.ndim))), tree_struct)
+
+
+def param_bytes(cfg: ModelConfig) -> int:
+    """Total f32-equivalent parameter bytes (eval_shape; no allocation)."""
+    model = get_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(shapes))
+
+
+def fl_replica_feasible(cfg: ModelConfig, mesh: Mesh) -> bool:
+    model_size = mesh.shape.get("model", 1)
+    return param_bytes(cfg) / model_size <= FL_REPLICA_BUDGET_BYTES
+
+
+def _resolve_window(cfg: ModelConfig, shape: ShapeConfig) -> Optional[int]:
+    """Window override applies to attention families only (SSM / hybrid are
+    natively sub-quadratic)."""
+    if shape.window_override is not None and cfg.family in (
+            "dense", "moe", "vlm", "audio"):
+        return shape.window_override
+    return cfg.sliding_window
+
+
+def _tree_specs(tree_struct, rule, mesh: Mesh):
+    """Apply a (path, shape) -> P rule over a ShapeDtypeStruct tree."""
+    def one(path, leaf):
+        return NamedSharding(mesh, rule(_path_str(path), tuple(leaf.shape)))
+    return jax.tree_util.tree_map_with_path(one, tree_struct)
+
+
+def _batch_struct(cfg: ModelConfig, batch: int, seq: int, *,
+                  lead: tuple = (), train: bool) -> dict:
+    """ShapeDtypeStructs for one batch (optionally client-stacked)."""
+    t = jax.ShapeDtypeStruct(lead + (batch, seq), jnp.int32)
+    out = {"tokens": t}
+    if train:
+        out["labels"] = jax.ShapeDtypeStruct(lead + (batch, seq), jnp.int32)
+    if cfg.family in ("vlm", "audio"):
+        out["frontend"] = jax.ShapeDtypeStruct(
+            lead + (batch, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+    return out
+
+
+def _batch_specs(cfg: ModelConfig, batch_entry, *, lead_entry=None,
+                 train: bool) -> dict:
+    lead = (lead_entry,) if lead_entry is not None else ()
+    out = {"tokens": P(*lead, batch_entry, None)}
+    if train:
+        out["labels"] = P(*lead, batch_entry, None)
+    if cfg.family in ("vlm", "audio"):
+        out["frontend"] = P(*lead, batch_entry, None, None)
+    return out
+
+
+def _batch_axes_entry(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+# --------------------------------------------------------------------------
+# train bundles
+# --------------------------------------------------------------------------
+
+def _fl_train_bundle(arch: str, cfg: ModelConfig, shape: ShapeConfig,
+                     mesh: Mesh, placement=None,
+                     seq_shard: bool = True) -> StepBundle:
+    policy = ShardingPolicy(mesh=mesh, batch_axes=None, model_axis="model",
+                            fsdp_axes=None,
+                            seq_axis="model" if seq_shard else None)
+    window = _resolve_window(cfg, shape)
+    model = get_model(cfg, policy, window=window)
+    # one FL client per data-axis slice: the client count follows the mesh
+    # (16 on the production 16x16; §Perf explores wider client x narrower
+    # TP layouts, e.g. 32x8, where the TP activation traffic halves)
+    hierarchy = choose_fl_hierarchy(mesh.shape.get("data", CLIENTS_PER_POD))
+    if placement is None:
+        placement = np.arange(hierarchy.dimensions)
+    fl = FLTrainStep(model, sgd(FL_LOCAL_LR), hierarchy, placement,
+                     local_steps=1, mode="hierarchical")
+    round_fn = fl.make_round_fn()
+
+    c_total = fl.n_clients_total
+    per_client = max(shape.global_batch // c_total, 1)
+    client_entry = (fl.client_axes if len(fl.client_axes) > 1
+                    else fl.client_axes[0])
+
+    params_struct, opt_struct = jax.eval_shape(
+        fl.init_stacked, jax.random.key(0))
+    param_specs = _ns(mesh, fl.stacked_param_pspecs())
+    opt_specs = _replicated_like(mesh, opt_struct)
+    batch_struct = _batch_struct(cfg, per_client, shape.seq_len,
+                                 lead=(c_total,), train=True)
+    batch_specs = _ns(mesh, _batch_specs(cfg, None, lead_entry=client_entry,
+                                         train=True))
+    metrics_specs = {"loss": NamedSharding(mesh, P())}
+    return StepBundle(
+        arch=arch, shape=shape.name, kind="train", mode="fl_replica",
+        fn=round_fn,
+        args=(params_struct, opt_struct, batch_struct),
+        in_shardings=(param_specs, opt_specs, batch_specs),
+        out_shardings=(param_specs, opt_specs, metrics_specs),
+        meta={
+            "n_clients": c_total, "per_client_batch": per_client,
+            "hierarchy": {"depth": hierarchy.depth, "width": hierarchy.width,
+                          "dimensions": hierarchy.dimensions},
+            "placement": np.asarray(placement).tolist(),
+            "window": window,
+        })
+
+
+def _standard_train_bundle(arch: str, cfg: ModelConfig, shape: ShapeConfig,
+                           mesh: Mesh, seq_shard: bool = True) -> StepBundle:
+    policy = make_policy(mesh, fsdp=cfg.fsdp, seq_shard=seq_shard)
+    window = _resolve_window(cfg, shape)
+    model = get_model(cfg, policy, window=window)
+    optimizer = sgd(FL_LOCAL_LR)
+    step = make_train_step(model, optimizer)
+
+    params_struct = model.param_shapes()
+    opt_struct = jax.eval_shape(optimizer.init, params_struct)
+    param_specs = _ns(mesh, model.param_pspecs())
+    opt_specs = _replicated_like(mesh, opt_struct)
+    batch_entry = _batch_axes_entry(mesh)
+    batch_struct = _batch_struct(cfg, shape.global_batch, shape.seq_len,
+                                 train=True)
+    batch_specs = _ns(mesh, _batch_specs(cfg, batch_entry, train=True))
+    # metrics: loss + model-specific extras -> eval_shape then replicate
+    metrics_struct = jax.eval_shape(step, params_struct, opt_struct,
+                                    batch_struct)[2]
+    metrics_specs = _replicated_like(mesh, metrics_struct)
+    return StepBundle(
+        arch=arch, shape=shape.name, kind="train", mode="standard",
+        fn=step,
+        args=(params_struct, opt_struct, batch_struct),
+        in_shardings=(param_specs, opt_specs, batch_specs),
+        out_shardings=(param_specs, opt_specs, metrics_specs),
+        meta={"fsdp": cfg.fsdp, "window": window,
+              "note": "per-client replica exceeds chip budget -> flat "
+                      "data-parallel step; hierarchy degenerates to the "
+                      "pod boundary (DESIGN.md §Arch-applicability)"})
+
+
+# --------------------------------------------------------------------------
+# serve bundles
+# --------------------------------------------------------------------------
+
+def _prefill_bundle(arch: str, cfg: ModelConfig, shape: ShapeConfig,
+                    mesh: Mesh, seq_shard: bool = True) -> StepBundle:
+    policy = make_policy(mesh, fsdp=cfg.fsdp, seq_shard=seq_shard)
+    window = _resolve_window(cfg, shape)
+    model = get_model(cfg, policy, window=window)
+    params_struct = model.param_shapes()
+    param_specs = _ns(mesh, model.param_pspecs())
+    batch_entry = _batch_axes_entry(mesh)
+    batch_struct = _batch_struct(cfg, shape.global_batch, shape.seq_len,
+                                 train=False)
+    batch_specs = _ns(mesh, _batch_specs(cfg, batch_entry, train=False))
+
+    out_struct = jax.eval_shape(model.prefill_fn, params_struct, batch_struct)
+    logits_struct, state_struct = out_struct
+    b_entry = batch_entry if shape.global_batch % _axis_size(
+        mesh, batch_entry) == 0 else None
+    m_ok = logits_struct.shape[-1] % mesh.shape.get("model", 1) == 0
+    logits_spec = NamedSharding(
+        mesh, P(b_entry, None, "model" if m_ok else None))
+    state_specs = _tree_specs(state_struct, model.state_spec_rule, mesh)
+    return StepBundle(
+        arch=arch, shape=shape.name, kind="prefill", mode="serve",
+        fn=model.prefill_fn,
+        args=(params_struct, batch_struct),
+        in_shardings=(param_specs, batch_specs),
+        out_shardings=(logits_spec, state_specs),
+        meta={"window": window, "fsdp": cfg.fsdp})
+
+
+def _decode_bundle(arch: str, cfg: ModelConfig, shape: ShapeConfig,
+                   mesh: Mesh) -> StepBundle:
+    # decode NEVER uses FSDP: per-token weight gathers would dominate the
+    # step (measured 117 GB/token for qwen3 — EXPERIMENTS.md §Perf).
+    # MoE weights rest 2-D sharded instead (E over data, F over model).
+    policy = make_policy(mesh, fsdp=False)
+    if cfg.moe is not None and "data" in mesh.axis_names \
+            and cfg.moe.n_experts % mesh.shape["data"] == 0 \
+            and cfg.moe.d_ff_expert % mesh.shape.get("model", 1) == 0:
+        policy = dataclasses.replace(policy, ep2d_axis="data")
+    window = _resolve_window(cfg, shape)
+    model = get_model(cfg, policy, window=window)
+    b = shape.global_batch
+    # ring cache: windowed attention needs only `window` slots — this is
+    # what makes long_500k O(window) instead of O(seq_len) for dense archs
+    cache_len = min(shape.seq_len, window) if window else shape.seq_len
+
+    params_struct = model.param_shapes()
+    param_specs = _ns(mesh, model.param_pspecs())
+    state_struct = jax.eval_shape(
+        lambda: model.init_decode_state(b, cache_len))
+    state_specs = _tree_specs(state_struct, model.state_spec_rule, mesh)
+    batch_struct = {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    b_entry = _batch_axes_entry(mesh)
+    b_entry = b_entry if b % _axis_size(mesh, b_entry) == 0 else None
+    batch_specs = {"token": NamedSharding(mesh, P(b_entry, None))}
+
+    logits_struct, _ = jax.eval_shape(
+        model.decode_fn, params_struct, state_struct, batch_struct)
+    m_ok = logits_struct.shape[-1] % mesh.shape.get("model", 1) == 0
+    logits_spec = NamedSharding(
+        mesh, P(b_entry, None, "model" if m_ok else None))
+    return StepBundle(
+        arch=arch, shape=shape.name, kind="decode", mode="serve",
+        fn=model.decode_fn,
+        args=(params_struct, state_struct, batch_struct),
+        in_shardings=(param_specs, state_specs, batch_specs),
+        out_shardings=(logits_spec, state_specs),
+        meta={"window": window, "cache_len": cache_len, "fsdp": cfg.fsdp})
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+# --------------------------------------------------------------------------
+# public entry
+# --------------------------------------------------------------------------
+
+def build_bundle(arch: str, shape_name: str, mesh: Mesh, *,
+                 placement=None, force_mode: Optional[str] = None,
+                 seq_shard: bool = True) -> StepBundle:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if shape.kind == "train":
+        mode = force_mode or (
+            "fl_replica" if fl_replica_feasible(cfg, mesh) else "standard")
+        if mode == "fl_replica":
+            return _fl_train_bundle(arch, cfg, shape, mesh,
+                                    placement=placement,
+                                    seq_shard=seq_shard)
+        return _standard_train_bundle(arch, cfg, shape, mesh,
+                                      seq_shard=seq_shard)
+    if shape.kind == "prefill":
+        return _prefill_bundle(arch, cfg, shape, mesh, seq_shard=seq_shard)
+    if shape.kind == "decode":
+        return _decode_bundle(arch, cfg, shape, mesh)
+    raise ValueError(f"unknown shape kind {shape.kind!r}")
+
+
+def input_specs(arch: str, shape_name: str, mesh: Mesh, **kw):
+    """ShapeDtypeStruct stand-ins for every model input of this combo
+    (the dry-run contract from the deliverable spec)."""
+    return build_bundle(arch, shape_name, mesh, **kw).args

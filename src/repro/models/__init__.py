@@ -1,0 +1,36 @@
+"""Model registry: family -> builder."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.models.api import Model, make_train_step, make_grad_step, make_serve_step
+from repro.models.sharding import ShardingPolicy, UNSHARDED, make_policy
+from repro.models.transformer import build_decoder_model
+from repro.models.xlstm import build_xlstm_model
+from repro.models.rglru import build_rglru_model
+from repro.models.encdec import build_encdec_model
+from repro.models.mlp import build_mlp_model
+
+_BUILDERS = {
+    "dense": build_decoder_model,
+    "moe": build_decoder_model,
+    "vlm": build_decoder_model,
+    "ssm": build_xlstm_model,
+    "hybrid": build_rglru_model,
+    "audio": build_encdec_model,
+    "mlp": build_mlp_model,
+}
+
+
+def get_model(cfg: ModelConfig, policy: ShardingPolicy = UNSHARDED,
+              window: Optional[int] = None) -> Model:
+    if cfg.family not in _BUILDERS:
+        raise KeyError(f"no builder for family {cfg.family!r}")
+    return _BUILDERS[cfg.family](cfg, policy, window=window)
+
+
+__all__ = [
+    "Model", "get_model", "make_train_step", "make_grad_step",
+    "make_serve_step", "ShardingPolicy", "UNSHARDED", "make_policy",
+]

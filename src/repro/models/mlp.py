@@ -1,0 +1,64 @@
+"""The paper's own workload: a ~1.8M-parameter MLP classifier
+(Sec. IV-C docker experiment). 784 -> 768 -> 768 -> 768 -> 10.
+
+This is the model the FL examples and the Fig. 4 cluster benchmark
+federate; it is intentionally simple — the paper's contribution is
+*where aggregation happens*, not the model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.api import Model
+from repro.models.sharding import ShardingPolicy, UNSHARDED
+
+
+def init_mlp_params(rng, cfg: ModelConfig) -> dict:
+    dims = [cfg.frontend_dim] + [cfg.d_model] * cfg.n_layers + [cfg.vocab_size]
+    keys = jax.random.split(rng, len(dims) - 1)
+    dtype = jnp.dtype(cfg.param_dtype)
+    layers = []
+    for k, (din, dout) in zip(keys, zip(dims[:-1], dims[1:])):
+        layers.append({
+            "w": common.dense_init(k, (din, dout), dtype),
+            "b": jnp.zeros((dout,), dtype),
+        })
+    return {"layers": layers}
+
+
+def mlp_forward(params, x):
+    h = x
+    n = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        h = h @ layer["w"] + layer["b"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def build_mlp_model(cfg: ModelConfig, policy: ShardingPolicy = UNSHARDED,
+                    window=None) -> Model:
+    def loss_fn(params, batch):
+        logits = mlp_forward(params, batch["x"]).astype(jnp.float32)
+        labels = batch["y"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        loss = jnp.mean(logz - gold)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return loss, {"acc": acc}
+
+    def spec_rule(path: str, shape):
+        if policy.mesh is None:
+            return P()
+        return P(*([None] * len(shape)))  # 1.8M params: replicate
+
+    return Model(
+        config=cfg, policy=policy,
+        init=lambda rng: init_mlp_params(rng, cfg),
+        loss_fn=loss_fn,
+        spec_rule=spec_rule,
+    )

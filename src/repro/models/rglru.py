@@ -1,0 +1,429 @@
+"""RecurrentGemma / Griffin: RG-LRU recurrent blocks + local sliding-window
+attention, pattern "2r1a" (two recurrent blocks, then one local-attention
+block).  [arXiv:2402.19427]
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)                    (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                    (input gate)
+    log a_t = -c * softplus(Lambda) * r_t           (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the linear
+recurrence (log-depth on TPU); decode is the single-step update. The
+recurrent branch carries a width-4 temporal conv (Griffin's conv1d),
+whose decode state is the last 3 inputs.
+
+26 layers = 8 scanned (r, r, a) triples + 2 trailing recurrent blocks —
+the triple is the scan body so the HLO stays one-triple-sized.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import common
+from repro.models.api import Model
+from repro.models.sharding import ShardingPolicy, UNSHARDED, shard_hint
+
+RGLRU_C = 8.0
+CONV_WIDTH = 4
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_recurrent_block(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    dr = cfg.rglru_dim or d
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": common.init_rmsnorm(d, dtype),
+        "w_main": common.dense_init(ks[0], (d, dr), dtype),
+        "w_gate": common.dense_init(ks[1], (d, dr), dtype),
+        "conv_w": common.dense_init(ks[2], (CONV_WIDTH, dr), dtype, scale=0.1),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": common.dense_init(ks[3], (dr, dr), dtype, scale=0.01),
+        "b_a": jnp.zeros((dr,), dtype),
+        "w_x": common.dense_init(ks[4], (dr, dr), dtype, scale=0.01),
+        "b_x": jnp.zeros((dr,), dtype),
+        # Lambda param: init so a (at r=1) ~ U[0.9, 0.999] (paper's range):
+        # softplus(lam) = -log(a)/c  =>  lam = log(expm1(-log(a)/c))
+        "lam": jnp.asarray(
+            jnp.log(jnp.expm1(-jnp.log(
+                jnp.linspace(0.9, 0.999, dr)) / RGLRU_C)),
+            dtype=jnp.float32),
+        "w_down": common.dense_init(ks[5], (dr, d), dtype),
+        "ln_mlp": common.init_rmsnorm(d, dtype),
+        "mlp": common.init_geglu(ks[6], d, cfg.d_ff, dtype),
+    }
+
+
+def _init_attn_block(key, cfg: ModelConfig, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": common.init_rmsnorm(cfg.d_model, dtype),
+        "wq": common.dense_init(ks[0], (cfg.d_model, cfg.n_heads * hd), dtype),
+        "wk": common.dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads * hd), dtype),
+        "wv": common.dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads * hd), dtype),
+        "wo": common.dense_init(ks[3], (cfg.n_heads * hd, cfg.d_model), dtype),
+        "ln_mlp": common.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": common.init_geglu(ks[4], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _pattern_counts(cfg: ModelConfig):
+    n_triples = cfg.n_layers // 3
+    n_tail = cfg.n_layers - 3 * n_triples  # trailing recurrent blocks
+    return n_triples, n_tail
+
+
+def init_rglru_params(rng, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    n_triples, n_tail = _pattern_counts(cfg)
+    k_emb, k_t, k_tail, k_out = jax.random.split(rng, 4)
+
+    def init_triple(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "rec1": _init_recurrent_block(k1, cfg, dtype),
+            "rec2": _init_recurrent_block(k2, cfg, dtype),
+            "attn": _init_attn_block(k3, cfg, dtype),
+        }
+
+    params = {
+        "embed": common.init_embedding(k_emb, cfg.padded_vocab, cfg.d_model, dtype),
+        "triples": jax.vmap(init_triple)(jax.random.split(k_t, n_triples)),
+        "ln_f": common.init_rmsnorm(cfg.d_model, dtype),
+        "lm_head": common.init_unembed(k_out, cfg.padded_vocab, cfg.d_model, dtype),
+    }
+    if n_tail:
+        params["tail"] = jax.vmap(
+            lambda k: _init_recurrent_block(k, cfg, dtype))(
+                jax.random.split(k_tail, n_tail))
+    return params
+
+
+# --------------------------------------------------------------------------
+# RG-LRU core
+# --------------------------------------------------------------------------
+
+def _rglru_gates(block, xr):
+    """xr (B,S,dr) f32 -> (log_a, gated_input) both (B,S,dr) f32."""
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, block["w_a"].astype(jnp.float32))
+                       + block["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, block["w_x"].astype(jnp.float32))
+                       + block["b_x"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(block["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0)) * (i * xr)
+    return a, gated
+
+
+def rglru_scan(block, xr, h0=None):
+    """Associative scan of h_t = a_t h_{t-1} + u_t. xr (B,S,dr) f32."""
+    a, u = _rglru_gates(block, xr)
+    if h0 is not None:
+        # fold carry into the first input: h_1 = a_1 h_0 + u_1
+        u = u.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, a2 * u1 + u2
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return h  # (B,S,dr)
+
+
+def rglru_step(block, xr, h_prev):
+    """xr (B,1,dr); h_prev (B,dr)."""
+    a, u = _rglru_gates(block, xr)
+    h = a[:, 0] * h_prev + u[:, 0]
+    return h[:, None], h
+
+
+def _conv1d(block, xr, conv_state=None):
+    """Causal width-4 depthwise conv. xr (B,S,dr).
+
+    conv_state (B, CONV_WIDTH-1, dr) holds the previous inputs (decode).
+    Returns (out, new_conv_state).
+    """
+    w = block["conv_w"].astype(xr.dtype)          # (W, dr)
+    if conv_state is None:
+        pad = jnp.zeros((xr.shape[0], CONV_WIDTH - 1, xr.shape[2]), xr.dtype)
+    else:
+        pad = conv_state.astype(xr.dtype)
+    xp = jnp.concatenate([pad, xr], axis=1)       # (B, S+W-1, dr)
+    out = sum(xp[:, i: i + xr.shape[1]] * w[i] for i in range(CONV_WIDTH))
+    out = out + block["conv_b"].astype(xr.dtype)
+    new_state = xp[:, -(CONV_WIDTH - 1):]
+    return out, new_state
+
+
+def recurrent_block(block, x, cfg: ModelConfig, state=None, decode=False):
+    """Griffin recurrent block + its MLP. state: {"h": (B,dr), "conv":
+    (B, W-1, dr)} or None."""
+    xn = common.rmsnorm(block["ln"], x, cfg.norm_eps)
+    dt = jnp.dtype(cfg.dtype)
+    main = jnp.einsum("bsd,de->bse", xn.astype(dt), block["w_main"].astype(dt))
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", xn.astype(dt),
+                                  block["w_gate"].astype(dt)))
+    conv_state = state["conv"] if state is not None else None
+    main, new_conv = _conv1d(block, main, conv_state)
+    main32 = main.astype(jnp.float32)
+    if decode:
+        y, h_new = rglru_step(block, main32, state["h"])
+    else:
+        h0 = state["h"] if state is not None else None
+        y = rglru_scan(block, main32, h0)
+        h_new = y[:, -1]
+    y = y.astype(dt) * gate
+    out = jnp.einsum("bse,ed->bsd", y, block["w_down"].astype(dt))
+    x = x + out.astype(x.dtype)
+    # block-local MLP
+    h = common.geglu(block["mlp"],
+                     common.rmsnorm(block["ln_mlp"], x, cfg.norm_eps).astype(dt))
+    x = x + h.astype(x.dtype)
+    return x, {"h": h_new, "conv": new_conv.astype(dt)}
+
+
+def local_attn_block(block, x, cfg: ModelConfig, cache=None, pos=None,
+                     decode=False):
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    b = x.shape[0]
+    xn = common.rmsnorm(block["ln"], x, cfg.norm_eps).astype(dt)
+    s = x.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", xn, block["wq"].astype(dt)).reshape(
+        b, s, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", xn, block["wk"].astype(dt)).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", xn, block["wv"].astype(dt)).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    if decode:
+        posv = jnp.full((1,), pos, jnp.int32)
+        q = common.apply_rope(q, posv, cfg.rope_theta)
+        k = common.apply_rope(k, posv, cfg.rope_theta)
+        cache = attn_lib.cache_update(cache, k, v, pos)
+        o = attn_lib.decode_attention(q, cache, pos)
+        new_cache = cache
+    else:
+        positions = jnp.arange(s)
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+        if cfg.local_attn_window < s:
+            o = attn_lib.windowed_attention(q, k, v, window=cfg.local_attn_window)
+        else:
+            o = attn_lib.causal_attention(q, k, v)
+        new_cache = None
+    o = o.reshape(b, -1, cfg.n_heads * hd)
+    h = jnp.einsum("bsh,hd->bsd", o, block["wo"].astype(dt))
+    x = x + h.astype(x.dtype)
+    h2 = common.geglu(block["mlp"],
+                      common.rmsnorm(block["ln_mlp"], x, cfg.norm_eps).astype(dt))
+    x = x + h2.astype(x.dtype)
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# full model
+# --------------------------------------------------------------------------
+
+def _zero_rec_state(batch, dr, dt):
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_WIDTH - 1, dr), dt)}
+
+
+def build_rglru_model(cfg: ModelConfig, policy: ShardingPolicy = UNSHARDED,
+                      window: Optional[int] = None) -> Model:
+    dr = cfg.rglru_dim or cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    n_triples, n_tail = _pattern_counts(cfg)
+
+    # ---------------- training / prefill forward ----------------
+    def forward(params, tokens):
+        x = common.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+        x = x * math.sqrt(cfg.d_model)
+
+        # sequence parallelism: S-sharded residual between triples; one
+        # pinned gather feeds the full-S recurrence/local-attention
+        seq_par = policy.mesh is not None and policy.seq_axis is not None
+
+        def triple_body(x, triple):
+            if seq_par:
+                x = shard_hint(x, policy, "batch", None, None, force=True)
+            x, _ = recurrent_block(triple["rec1"], x, cfg)
+            x, _ = recurrent_block(triple["rec2"], x, cfg)
+            x, _ = local_attn_block(triple["attn"], x, cfg)
+            if seq_par:
+                x = shard_hint(x, policy, "batch", "seq", None)
+            return x, None
+
+        if cfg.remat:
+            triple_body = jax.checkpoint(triple_body)
+        x, _ = jax.lax.scan(triple_body, x, params["triples"])
+        if n_tail:
+            def tail_body(x, block):
+                if seq_par:
+                    x = shard_hint(x, policy, "batch", None, None,
+                                   force=True)
+                x, _ = recurrent_block(block, x, cfg)
+                if seq_par:
+                    x = shard_hint(x, policy, "batch", "seq", None)
+                return x, None
+            if cfg.remat:
+                tail_body = jax.checkpoint(tail_body)
+            x, _ = jax.lax.scan(tail_body, x, params["tail"])
+        return common.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+    def loss_fn(params, batch):
+        x = forward(params, batch["tokens"])
+        logits = common.unembed_untied(params["lm_head"], x)
+        loss = common.softmax_xent(logits, batch["labels"], cfg.vocab_size)
+        return loss, {"xent": loss}
+
+    # ---------------- decode ----------------
+    def decode_fn(params, state, batch):
+        x = common.embed(params["embed"], batch["token"]).astype(jnp.dtype(cfg.dtype))
+        x = x * math.sqrt(cfg.d_model)
+        pos = state["pos"]
+
+        def triple_body(x, xs):
+            triple, st = xs
+            x, r1 = recurrent_block(triple["rec1"], x, cfg, st["rec1"], decode=True)
+            x, r2 = recurrent_block(triple["rec2"], x, cfg, st["rec2"], decode=True)
+            x, cache = local_attn_block(triple["attn"], x, cfg,
+                                        cache=st["attn"], pos=pos, decode=True)
+            return x, {"rec1": r1, "rec2": r2, "attn": cache}
+
+        x, new_triple_states = jax.lax.scan(
+            triple_body, x, (params["triples"], state["triples"]))
+        new_state = {"triples": new_triple_states, "pos": pos + 1}
+        if n_tail:
+            def tail_body(x, xs):
+                block, st = xs
+                x, r = recurrent_block(block, x, cfg, st, decode=True)
+                return x, r
+            x, new_tail = jax.lax.scan(tail_body, x,
+                                       (params["tail"], state["tail"]))
+            new_state["tail"] = new_tail
+        x = common.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = common.unembed_untied(params["lm_head"], x)
+        return logits, new_state
+
+    def prefill_fn(params, batch):
+        # full forward, then rebuild decode state with one decode pass is
+        # wasteful; for the serving path we run the recurrences statefully.
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = (common.embed(params["embed"], tokens) * math.sqrt(cfg.d_model)).astype(jnp.dtype(cfg.dtype))
+        cache_len = min(cfg.local_attn_window, s)
+
+        def triple_body(x, triple):
+            x, st1 = recurrent_block(triple["rec1"], x, cfg)
+            x, st2 = recurrent_block(triple["rec2"], x, cfg)
+            xb, _ = local_attn_block(triple["attn"], x, cfg)
+            # build ring cache from the last window of k/v
+            dtl = jnp.dtype(cfg.dtype)
+            hd = cfg.resolved_head_dim
+            xn = common.rmsnorm(triple["attn"]["ln"], x, cfg.norm_eps).astype(dtl)
+            k = jnp.einsum("bsd,dh->bsh", xn, triple["attn"]["wk"].astype(dtl))
+            v = jnp.einsum("bsd,dh->bsh", xn, triple["attn"]["wv"].astype(dtl))
+            k = k.reshape(b, s, cfg.n_kv_heads, hd)[:, -cache_len:]
+            v = v.reshape(b, s, cfg.n_kv_heads, hd)[:, -cache_len:]
+            k = common.apply_rope(k, jnp.arange(s - cache_len, s), cfg.rope_theta)
+            # ring invariant: slot index == absolute position % cache_len
+            shift = s % cache_len
+            k = jnp.roll(k, shift, axis=1)
+            v = jnp.roll(v, shift, axis=1)
+            return xb, {"rec1": st1, "rec2": st2,
+                        "attn": {"k": k, "v": v}}
+
+        x, triple_states = jax.lax.scan(triple_body, x, params["triples"])
+        state = {"triples": triple_states,
+                 "pos": jnp.asarray(s - 1, jnp.int32)}
+        if n_tail:
+            def tail_body(x, block):
+                x, st = recurrent_block(block, x, cfg)
+                return x, st
+            x, tail_states = jax.lax.scan(tail_body, x, params["tail"])
+            state["tail"] = tail_states
+        x = common.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = common.unembed_untied(params["lm_head"], x[:, -1:])
+        return logits, state
+
+    def init_decode_state(batch_size: int, cache_len: int):
+        cache_len = min(cache_len, cfg.local_attn_window)
+        hd = cfg.resolved_head_dim
+
+        def one_triple_state():
+            return {
+                "rec1": _zero_rec_state(batch_size, dr, dt),
+                "rec2": _zero_rec_state(batch_size, dr, dt),
+                "attn": attn_lib.init_cache(batch_size, cache_len,
+                                            cfg.n_kv_heads, hd, dt),
+            }
+
+        triples = jax.tree.map(
+            lambda z: jnp.broadcast_to(z, (n_triples,) + z.shape).copy(),
+            one_triple_state())
+        state = {"triples": triples,
+                 "pos": jnp.asarray(cache_len - 1, jnp.int32)}
+        if n_tail:
+            state["tail"] = jax.tree.map(
+                lambda z: jnp.broadcast_to(z, (n_tail,) + z.shape).copy(),
+                _zero_rec_state(batch_size, dr, dt))
+        return state
+
+    def spec_rule(path: str, shape):
+        if policy.mesh is None:
+            return P()
+        m = policy.model_axis
+        f = policy.fsdp_axes
+        f = f[0] if f and len(f) == 1 else f
+        stacked = path.startswith(("triples/", "tail/"))
+        lead = (None,) if stacked else ()
+        if path.endswith("embed/table"):
+            return P(m, None)
+        if path.endswith("lm_head/proj"):
+            return P(None, m)
+        if path.endswith(("w_main", "w_gate", "mlp/w_up")):
+            return P(*lead, f, m)
+        if path.endswith(("w_down", "mlp/w_down")):
+            return P(*lead, m, f)
+        if path.endswith(("w_a", "w_x")):
+            return P(*lead, None, m)
+        if path.endswith(("wq", "wk", "wv")):
+            # 10 q heads / 1 kv head on a 16-way axis: replicate heads
+            return P(*lead, f, None)
+        if path.endswith("wo"):
+            return P(*lead, None, f)
+        return P(*([None] * len(shape)))
+
+    def state_spec_rule(path: str, shape):
+        if policy.mesh is None:
+            return P()
+        if len(shape) >= 2:
+            batch = policy.dim("batch", shape[1])
+            rest = [None] * (len(shape) - 2)
+            # shard the RG-LRU channel dim over model where divisible
+            if path.endswith("/h") and len(shape) == 3:
+                return P(None, batch, policy.dim("model", shape[2]))
+            return P(None, batch, *rest)
+        return P(*([None] * len(shape)))
+
+    return Model(
+        config=cfg, policy=policy,
+        init=lambda rng: init_rglru_params(rng, cfg),
+        loss_fn=loss_fn, prefill_fn=prefill_fn, decode_fn=decode_fn,
+        init_decode_state=init_decode_state,
+        spec_rule=spec_rule, state_spec_rule=state_spec_rule,
+    )

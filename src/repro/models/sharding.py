@@ -1,0 +1,148 @@
+"""Sharding policy: maps *logical* tensor dims to physical mesh axes.
+
+Models never hard-code mesh axis names. They annotate tensors with logical
+dims ("batch", "model", "fsdp", None) and the active ``ShardingPolicy``
+resolves those to a ``PartitionSpec`` — or to nothing at all when running
+unsharded (CPU smoke tests), so the same model code serves both paths.
+
+Divisibility-aware: ``dim("model", size)`` returns None when ``size`` is
+not divisible by the model-axis extent (e.g. RecurrentGemma's 10 heads on
+a 16-wide model axis are replicated; its flat 2560 projections shard).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """Resolution table from logical dims to mesh axes.
+
+    batch_axes: axes the global batch is split over, e.g. ("data",) or
+        ("pod", "data") on the multi-pod mesh.
+    model_axis: tensor-parallel axis name ("model") or None.
+    fsdp_axes: axes params are ZeRO-sharded over (usually ("data",) or
+        ("pod", "data")) or None.
+    seq_axis: axis the *sequence* dim of activations is sharded over
+        between blocks (sequence parallelism — Korthikanti et al.);
+        usually the model axis. Turns the megatron activation
+        all-reduces into reduce-scatter/all-gather pairs and divides the
+        residual/remat working set by its size.
+    mesh: concrete mesh; None => resolve everything to unsharded.
+    """
+    mesh: Optional[Mesh] = None
+    batch_axes: Optional[Tuple[str, ...]] = None
+    model_axis: Optional[str] = None
+    fsdp_axes: Optional[Tuple[str, ...]] = None
+    seq_axis: Optional[str] = None
+    # 2-D expert sharding for serving MoE: experts over this (data) axis,
+    # expert d_ff over the model axis — weights rest fully sharded with NO
+    # per-step FSDP gathers; dispatch moves tokens (tiny at decode), not
+    # weights. See EXPERIMENTS.md §Perf (qwen3 decode: 117 GB -> MB-scale).
+    ep2d_axis: Optional[str] = None
+
+    # ---- axis arithmetic -------------------------------------------------
+    def axis_size(self, axes: Logical) -> int:
+        if self.mesh is None or axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def model_size(self) -> int:
+        return self.axis_size(self.model_axis)
+
+    @property
+    def batch_size_divisor(self) -> int:
+        return self.axis_size(self.batch_axes)
+
+    # ---- logical -> physical ---------------------------------------------
+    def dim(self, logical: Optional[str], size: Optional[int] = None) -> Logical:
+        """Resolve one tensor dim. ``size`` (if given) gates divisibility."""
+        if self.mesh is None or logical is None:
+            return None
+        table = {
+            "batch": self.batch_axes,
+            "model": self.model_axis,
+            "fsdp": self.fsdp_axes,
+            "seq": self.seq_axis,
+        }
+        axes = table.get(logical)
+        if axes is None:
+            return None
+        if size is not None and size % self.axis_size(axes) != 0:
+            return None
+        if isinstance(axes, tuple) and len(axes) == 1:
+            return axes[0]
+        return axes
+
+    def spec(self, *logical_dims) -> P:
+        """Build a PartitionSpec from logical dim names (or (name, size))."""
+        out = []
+        for d in logical_dims:
+            if isinstance(d, tuple):
+                out.append(self.dim(d[0], d[1]))
+            else:
+                out.append(self.dim(d))
+        return P(*out)
+
+    def named(self, *logical_dims) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical_dims))
+
+
+# A policy that shards nothing — the default for CPU tests.
+UNSHARDED = ShardingPolicy()
+
+
+def shard_hint(x, policy: ShardingPolicy, *logical_dims, force: bool = False):
+    """with_sharding_constraint against the policy; no-op when unsharded.
+
+    Logical dims are names or (name, size) pairs; a mismatch in rank is an
+    error (catches model refactors silently desyncing their hints).
+    ``force=True`` emits the constraint even when it resolves all-None —
+    that is how the sequence-parallel recipe pins the ONE all-gather at a
+    matmul entry instead of letting GSPMD reshard every internal slice.
+    """
+    if policy.mesh is None:
+        return x
+    if len(logical_dims) != x.ndim:
+        raise ValueError(
+            f"shard_hint rank mismatch: {len(logical_dims)} dims for shape {x.shape}")
+    resolved = []
+    for d, size in zip(logical_dims, x.shape):
+        if isinstance(d, tuple):
+            resolved.append(policy.dim(d[0], d[1]))
+        else:
+            resolved.append(policy.dim(d, size))
+    if not force and all(r is None for r in resolved):
+        return x  # nothing to constrain (and an all-None constraint would
+        # force replication under vmap — the FL client-stacked path)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(policy.mesh, P(*resolved)))
+
+
+def make_policy(mesh: Optional[Mesh], fsdp: bool = False,
+                seq_shard: bool = False) -> ShardingPolicy:
+    """Standard policy for a production mesh built by
+    ``repro.launch.mesh.make_production_mesh`` (axes: [pod,] data, model)."""
+    if mesh is None:
+        return UNSHARDED
+    names = mesh.axis_names
+    batch = tuple(a for a in names if a in ("pod", "data"))
+    fsdp_axes = batch if fsdp else None
+    model = "model" if "model" in names else None
+    return ShardingPolicy(mesh=mesh, batch_axes=batch or None,
+                          model_axis=model, fsdp_axes=fsdp_axes,
+                          seq_axis=model if seq_shard else None)

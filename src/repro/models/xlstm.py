@@ -1,0 +1,415 @@
+"""xLSTM: alternating mLSTM (matrix-memory, chunkwise-parallel) and sLSTM
+(scalar-memory, true recurrence) blocks.  [arXiv:2405.04517]
+
+Faithfulness notes (recorded per DESIGN.md hardware-adaptation policy):
+
+* mLSTM uses exponential input gates and sigmoid forget gates. We run the
+  *chunkwise-parallel* form (the TPU-friendly formulation: intra-chunk
+  (C x C) attention-like einsums on the MXU + an inter-chunk scan over
+  matrix state), with the input-gate pre-activation soft-capped at 15
+  (``cap * tanh(x / cap)``, the Gemma-style capping) instead of the
+  paper's running-max stabilizer — mathematically a bounded
+  reparameterization of the gate, numerically safe in f32, and linear in
+  S like the original.
+* The mLSTM normalizer is the paper's ``max(|q . n|, 1)``.
+* sLSTM keeps the paper's running-max stabilizer (m_t) exactly, and is a
+  genuine sequential ``lax.scan`` over time with block-diagonal (per-head)
+  recurrent weights — on TPU this is the latency-bound path the paper's
+  custom kernels target; the Pallas analogue is kernels/rglru.py's
+  time-blocked pattern.
+
+Decode state per layer: mLSTM {"C": (B,H,dk,dv), "n": (B,H,dk)};
+sLSTM {"h","c","n","m": (B,H,dh)}. Both O(1) in sequence length — this is
+why xlstm runs ``long_500k`` natively.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.api import Model
+from repro.models.sharding import ShardingPolicy, UNSHARDED, shard_hint
+
+GATE_CAP = 15.0
+
+
+def _cap(x):
+    return GATE_CAP * jnp.tanh(x / GATE_CAP)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_mlstm_block(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_in = int(cfg.xlstm_proj_factor * d)
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": common.init_rmsnorm(d, dtype),
+        "w_up": common.dense_init(ks[0], (d, 2 * d_in), dtype),
+        "wq": common.dense_init(ks[1], (d_in, d_in), dtype),
+        "wk": common.dense_init(ks[2], (d_in, d_in), dtype),
+        "wv": common.dense_init(ks[3], (d_in, d_in), dtype),
+        "w_if": common.dense_init(ks[4], (d_in, 2 * h), dtype, scale=0.01),
+        "b_if": jnp.concatenate([
+            jnp.zeros((h,), jnp.float32),                 # input gate bias
+            jnp.linspace(3.0, 6.0, h, dtype=jnp.float32)  # forget gate bias
+        ]).astype(dtype),
+        "out_norm": common.init_rmsnorm(d_in, dtype),
+        "w_down": common.dense_init(ks[5], (d_in, d), dtype),
+    }
+
+
+def _init_slstm_block(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": common.init_rmsnorm(d, dtype),
+        "w_in": common.dense_init(ks[0], (d, 4 * d), dtype),      # z,i,f,o
+        "r": common.dense_init(ks[1], (h, dh, 4 * dh), dtype, scale=0.02),
+        "b": jnp.zeros((4 * d,), dtype),
+        "out_norm": common.init_rmsnorm(d, dtype),
+        "w_out": common.dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def init_xlstm_params(rng, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_m, k_s, k_out = jax.random.split(rng, 4)
+    n_s = cfg.n_layers // cfg.xlstm_slstm_every
+    n_m = cfg.n_layers - n_s
+    m_keys = jax.random.split(k_m, n_m)
+    s_keys = jax.random.split(k_s, n_s)
+    return {
+        "embed": common.init_embedding(k_emb, cfg.padded_vocab, cfg.d_model, dtype),
+        "mlstm": jax.vmap(lambda k: _init_mlstm_block(k, cfg, dtype))(m_keys),
+        "slstm": jax.vmap(lambda k: _init_slstm_block(k, cfg, dtype))(s_keys),
+        "ln_f": common.init_rmsnorm(cfg.d_model, dtype),
+        "lm_head": common.init_unembed(k_out, cfg.padded_vocab, cfg.d_model, dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel
+# --------------------------------------------------------------------------
+
+def _mlstm_qkvif(block: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """x (B,S,D) -> q,k,v (B,S,H,dh); li,lf (B,S,H); z gate (B,S,D_in)."""
+    d_in = block["wq"].shape[0]
+    h = cfg.n_heads
+    dh = d_in // h
+    dt = x.dtype
+    up = jnp.einsum("bsd,de->bse", x, block["w_up"].astype(dt))
+    main, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ef->bsf", main, block["wq"].astype(dt))
+    k = jnp.einsum("bse,ef->bsf", main, block["wk"].astype(dt))
+    v = jnp.einsum("bse,ef->bsf", main, block["wv"].astype(dt))
+    gates = (jnp.einsum("bse,eg->bsg", main, block["w_if"].astype(dt))
+             .astype(jnp.float32) + block["b_if"].astype(jnp.float32))
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)   # (B,S,H)
+    li = _cap(i_raw)                               # log input gate
+    lf = jax.nn.log_sigmoid(f_raw)                 # log forget gate
+    b, s, _ = x.shape
+    shape = (b, s, h, dh)
+    return (q.reshape(shape) / math.sqrt(dh), k.reshape(shape),
+            v.reshape(shape), li, lf, z)
+
+
+def mlstm_chunkwise(q, k, v, li, lf, chunk: int, state=None):
+    """Chunkwise mLSTM. q,k,v (B,S,H,dh); li,lf (B,S,H) f32.
+
+    Returns (y (B,S,H,dh), final_state {"C","n"}).
+    """
+    b, s, h, dh = q.shape
+    c = min(chunk, s)
+    if s % c != 0:
+        c = s
+    n_chunks = s // c
+
+    def to_chunks(x):
+        return x.reshape(b, n_chunks, c, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)   # (N,B,C,H,dh)
+    lic, lfc = to_chunks(li), to_chunks(lf)                  # (N,B,C,H)
+
+    if state is None:
+        C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+    else:
+        C0, n0 = state["C"], state["n"]
+
+    def chunk_step(carry, xs):
+        Cm, n = carry
+        qb, kb, vb, lib, lfb = xs
+        qb32 = qb.astype(jnp.float32)
+        kb32 = kb.astype(jnp.float32)
+        vb32 = vb.astype(jnp.float32)
+        bcum = jnp.cumsum(lfb, axis=1)               # (B,C,H) inclusive
+        # intra-chunk decayed weights: w[t,j] = exp(b_t - b_j + li_j), j<=t
+        bt = bcum[:, :, None, :]                     # (B,C,1,H)
+        bj = bcum[:, None, :, :]                     # (B,1,C,H)
+        lij = lib[:, None, :, :]
+        logw = bt - bj + lij                          # (B,C,C,H)
+        mask = jnp.tril(jnp.ones((c, c), bool))[None, :, :, None]
+        w = jnp.where(mask, jnp.exp(logw), 0.0)
+        scores = jnp.einsum("bthd,bjhd->btjh", qb32, kb32) * w
+        y_intra = jnp.einsum("btjh,bjhd->bthd", scores, vb32)
+        # q.n_t = sum_j w_tj (q_t . k_j) = row-sum of the weighted scores
+        n_intra = jnp.sum(scores, axis=2)             # (B,C,H)
+        # inter-chunk: carry contribution decayed by exp(b_t)
+        eb = jnp.exp(bcum)                            # (B,C,H)
+        y_inter = jnp.einsum("bthd,bhde->bthe", qb32 * eb[..., None], Cm)
+        n_inter = jnp.einsum("bthd,bhd->bth", qb32 * eb[..., None], n)
+        y = y_inter + y_intra
+        qn = n_inter + n_intra
+        denom = jnp.maximum(jnp.abs(qn), 1.0)
+        y = y / denom[..., None]
+        # chunk-end state update
+        btot = bcum[:, -1, :]                         # (B,H)
+        decay_j = jnp.exp(btot[:, None, :] - bcum + lib)  # (B,C,H)
+        kd = kb32 * decay_j[..., None]
+        C_new = Cm * jnp.exp(btot)[:, :, None, None] + \
+            jnp.einsum("bjhd,bjhe->bhde", kd, vb32)
+        n_new = n * jnp.exp(btot)[:, :, None] + jnp.einsum("bjhd->bhd", kd)
+        return (C_new, n_new), y
+
+    (C_f, n_f), ys = jax.lax.scan(chunk_step, (C0, n0),
+                                  (qc, kc, vc, lic, lfc))
+    y = ys.swapaxes(0, 1).reshape(b, s, h, dh).astype(q.dtype)
+    return y, {"C": C_f, "n": n_f}
+
+
+def mlstm_step(q, k, v, li, lf, state):
+    """Single-token mLSTM. q,k,v (B,1,H,dh); li,lf (B,1,H)."""
+    q32 = q[:, 0].astype(jnp.float32)   # (B,H,dh)
+    k32 = k[:, 0].astype(jnp.float32)
+    v32 = v[:, 0].astype(jnp.float32)
+    i_g = jnp.exp(li[:, 0])[..., None]   # (B,H,1)
+    f_g = jnp.exp(lf[:, 0])[..., None]
+    C = state["C"] * f_g[..., None] + \
+        jnp.einsum("bhd,bhe->bhde", k32 * i_g, v32)
+    n = state["n"] * f_g + k32 * i_g
+    y = jnp.einsum("bhd,bhde->bhe", q32, C)
+    qn = jnp.einsum("bhd,bhd->bh", q32, n)
+    y = y / jnp.maximum(jnp.abs(qn), 1.0)[..., None]
+    return y[:, None].astype(q.dtype), {"C": C, "n": n}
+
+
+def mlstm_block(block: dict, x: jnp.ndarray, cfg: ModelConfig,
+                state=None, decode: bool = False):
+    xn = common.rmsnorm(block["ln"], x, cfg.norm_eps)
+    q, k, v, li, lf, z = _mlstm_qkvif(block, xn, cfg)
+    if decode:
+        y, new_state = mlstm_step(q, k, v, li, lf, state)
+    else:
+        y, new_state = mlstm_chunkwise(q, k, v, li, lf, cfg.xlstm_chunk, state)
+    b, s, h, dh = y.shape
+    y = y.reshape(b, s, h * dh)
+    y = common.rmsnorm(block["out_norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, block["w_down"].astype(y.dtype))
+    return x + out.astype(x.dtype), new_state
+
+
+# --------------------------------------------------------------------------
+# sLSTM cell — sequential scan with running-max stabilizer
+# --------------------------------------------------------------------------
+
+def slstm_cell(wx: jnp.ndarray, r: jnp.ndarray, state: dict):
+    """One sLSTM step. wx: (B,H,4,dh) precomputed input contribution;
+    r: (H, dh, 4*dh) recurrent weights; state {"h","c","n","m"}: (B,H,dh).
+    """
+    h_prev = state["h"]
+    rec = jnp.einsum("bhd,hde->bhe", h_prev, r.astype(jnp.float32))
+    b_, hh, dh4 = rec.shape
+    dh = dh4 // 4
+    pre = wx + rec.reshape(b_, hh, 4, dh)
+    z_r, i_r, f_r, o_r = pre[:, :, 0], pre[:, :, 1], pre[:, :, 2], pre[:, :, 3]
+    z = jnp.tanh(z_r)
+    m_new = jnp.maximum(f_r + state["m"], i_r)
+    i_g = jnp.exp(i_r - m_new)
+    f_g = jnp.exp(f_r + state["m"] - m_new)
+    c = f_g * state["c"] + i_g * z
+    n = f_g * state["n"] + i_g
+    h = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1e-6)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_init_state(batch: int, h: int, dh: int):
+    zero = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"h": zero, "c": zero, "n": zero,
+            "m": jnp.full((batch, h, dh), -1e30, jnp.float32)}
+
+
+def slstm_block(block: dict, x: jnp.ndarray, cfg: ModelConfig,
+                state=None, decode: bool = False):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    xn = common.rmsnorm(block["ln"], x, cfg.norm_eps)
+    wx = (jnp.einsum("bsd,de->bse", xn, block["w_in"].astype(xn.dtype))
+          .astype(jnp.float32) + block["b"].astype(jnp.float32))
+    wx = wx.reshape(b, s, h, 4, dh)
+    if state is None:
+        state = slstm_init_state(b, h, dh)
+    if decode:
+        new_state = slstm_cell(wx[:, 0], block["r"], state)
+        hs = new_state["h"][:, None]                      # (B,1,H,dh)
+    else:
+        def step(st, wx_t):
+            st = slstm_cell(wx_t, block["r"], st)
+            return st, st["h"]
+        new_state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+        hs = hs.swapaxes(0, 1)                            # (B,S,H,dh)
+    y = hs.reshape(b, -1, d).astype(x.dtype)
+    y = common.rmsnorm(block["out_norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, block["w_out"].astype(y.dtype))
+    return x + out.astype(x.dtype), new_state
+
+
+# --------------------------------------------------------------------------
+# full model
+# --------------------------------------------------------------------------
+
+def _forward(params, tokens, cfg: ModelConfig, states=None, decode=False,
+             policy=None):
+    """Run the alternating stack. Layer order: for every pair index p,
+    mLSTM block p then sLSTM block p (when xlstm_slstm_every == 2)."""
+    x = common.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    n_s = cfg.n_layers // cfg.xlstm_slstm_every
+    n_m = cfg.n_layers - n_s
+
+    m_states = states["mlstm"] if states is not None else None
+    s_states = states["slstm"] if states is not None else None
+
+    # sequence parallelism: the residual stream is S-sharded between
+    # blocks (the scan carry + remat stash shrink by the model-axis
+    # size); ONE pinned gather at each block entry feeds the full-S
+    # recurrence, and the exit hint reduce-scatters back.
+    seq_par = (policy is not None and policy.mesh is not None
+               and policy.seq_axis is not None and not decode)
+
+    def m_body(x, xs):
+        block, st = xs
+        if seq_par:
+            x = shard_hint(x, policy, "batch", None, None, force=True)
+        x, new = mlstm_block(block, x, cfg, st, decode)
+        if seq_par:
+            x = shard_hint(x, policy, "batch", "seq", None)
+        return x, new
+
+    def s_body(x, xs):
+        block, st = xs
+        if seq_par:
+            x = shard_hint(x, policy, "batch", None, None, force=True)
+        x, new = slstm_block(block, x, cfg, st, decode)
+        if seq_par:
+            x = shard_hint(x, policy, "batch", "seq", None)
+        return x, new
+
+    if cfg.remat and not decode:
+        m_body = jax.checkpoint(m_body)
+        s_body = jax.checkpoint(s_body)
+
+    # interleave via two scans per "super-layer" group: all mLSTM blocks of
+    # the stack run as one scan, then sLSTM. (Exact interleaving order has
+    # no cross-block weight sharing, so grouping by type is equivalent up
+    # to block permutation and keeps two scan bodies total in the HLO.)
+    b = tokens.shape[0]
+    if m_states is None:
+        dh_m = int(cfg.xlstm_proj_factor * cfg.d_model) // cfg.n_heads
+        m_init = {
+            "C": jnp.zeros((n_m, b, cfg.n_heads, dh_m, dh_m), jnp.float32),
+            "n": jnp.zeros((n_m, b, cfg.n_heads, dh_m), jnp.float32),
+        }
+        s_init = jax.tree.map(
+            lambda z: jnp.broadcast_to(z, (n_s,) + z.shape),
+            slstm_init_state(b, cfg.n_heads, cfg.d_model // cfg.n_heads))
+    else:
+        m_init, s_init = m_states, s_states
+
+    x, m_new = jax.lax.scan(m_body, x, (params["mlstm"], m_init))
+    x, s_new = jax.lax.scan(s_body, x, (params["slstm"], s_init))
+    x = common.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, {"mlstm": m_new, "slstm": s_new}
+
+
+def build_xlstm_model(cfg: ModelConfig, policy: ShardingPolicy = UNSHARDED,
+                      window: Optional[int] = None) -> Model:
+    def loss_fn(params, batch):
+        x, _ = _forward(params, batch["tokens"], cfg, policy=policy)
+        logits = common.unembed_untied(params["lm_head"], x)
+        loss = common.softmax_xent(logits, batch["labels"], cfg.vocab_size)
+        return loss, {"xent": loss}
+
+    def prefill_fn(params, batch):
+        x, states = _forward(params, batch["tokens"], cfg, policy=policy)
+        logits = common.unembed_untied(params["lm_head"], x[:, -1:])
+        return logits, {"states": states,
+                        "pos": jnp.asarray(batch["tokens"].shape[1] - 1, jnp.int32)}
+
+    def decode_fn(params, state, batch):
+        x, states = _forward(params, batch["token"], cfg,
+                             states=state["states"], decode=True)
+        logits = common.unembed_untied(params["lm_head"], x)
+        return logits, {"states": states, "pos": state["pos"] + 1}
+
+    def init_decode_state(batch_size: int, cache_len: int):
+        n_s = cfg.n_layers // cfg.xlstm_slstm_every
+        n_m = cfg.n_layers - n_s
+        dh_m = int(cfg.xlstm_proj_factor * cfg.d_model) // cfg.n_heads
+        dh_s = cfg.d_model // cfg.n_heads
+        m_state = {
+            "C": jnp.zeros((n_m, batch_size, cfg.n_heads, dh_m, dh_m), jnp.float32),
+            "n": jnp.zeros((n_m, batch_size, cfg.n_heads, dh_m), jnp.float32),
+        }
+        s_state = jax.tree.map(
+            lambda z: jnp.broadcast_to(z, (n_s,) + z.shape).copy(),
+            slstm_init_state(batch_size, cfg.n_heads, dh_s))
+        return {"states": {"mlstm": m_state, "slstm": s_state},
+                "pos": jnp.asarray(cache_len - 1, jnp.int32)}
+
+    def spec_rule(path: str, shape):
+        if policy.mesh is None:
+            return P()
+        m = policy.model_axis
+        f = policy.fsdp_axes
+        f = f[0] if f and len(f) == 1 else f
+        stacked = path.startswith(("mlstm/", "slstm/"))
+        lead = (None,) if stacked else ()
+        if path.endswith("embed/table"):
+            return P(m, None)
+        if path.endswith("lm_head/proj"):
+            return P(None, m)
+        if path.endswith(("w_up", "wq", "wk", "wv", "w_in")):
+            return P(*lead, f, m)
+        if path.endswith(("w_down", "w_out")):
+            return P(*lead, m, f)
+        return P(*([None] * len(shape)))
+
+    def state_spec_rule(path: str, shape):
+        if policy.mesh is None:
+            return P()
+        # (L, B, H, ...) — batch over data axes, rest replicated (heads=4)
+        if len(shape) >= 3:
+            batch = policy.dim("batch", shape[1])
+            return P(None, batch, *([None] * (len(shape) - 2)))
+        return P(*([None] * len(shape)))
+
+    return Model(
+        config=cfg, policy=policy,
+        init=lambda rng: init_xlstm_params(rng, cfg),
+        loss_fn=loss_fn, prefill_fn=prefill_fn, decode_fn=decode_fn,
+        init_decode_state=init_decode_state,
+        spec_rule=spec_rule, state_spec_rule=state_spec_rule,
+    )

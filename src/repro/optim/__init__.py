@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (
+    OptState,
+    adamw,
+    sgd,
+    Optimizer,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_schedule,
+    warmup_cosine_schedule,
+    linear_schedule,
+)
+
+__all__ = [
+    "OptState", "adamw", "sgd", "Optimizer", "clip_by_global_norm",
+    "constant_schedule", "cosine_schedule", "warmup_cosine_schedule",
+    "linear_schedule",
+]

@@ -1,0 +1,129 @@
+"""Optimizers built from scratch (no optax offline).
+
+An ``Optimizer`` is a pair of pure functions over param pytrees:
+
+    opt = adamw(lr=3e-4)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state)
+
+Optimizer state mirrors the param pytree leaf-for-leaf, so whatever
+sharding the params carry is inherited by the state under pjit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.trees import tree_global_norm
+
+ScheduleOrFloat = Union[float, Callable]
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any        # first moment (or momentum); zeros pytree for sgd w/o momentum
+    nu: Any        # second moment; None-like empty tuple for sgd
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def _lr_at(lr: ScheduleOrFloat, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, dtype=jnp.float32)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw(lr: ScheduleOrFloat = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          grad_clip: Optional[float] = 1.0) -> Optimizer:
+    """AdamW with decoupled weight decay and optional global-norm clipping.
+
+    Moments are kept in float32 regardless of param dtype (mixed-precision
+    convention: bf16 compute, fp32 master state).
+    """
+
+    def init(params) -> OptState:
+        mu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        nu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+    def update(params, grads, state: OptState):
+        if grad_clip is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def _upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.mu)
+        flat_v = jax.tree.leaves(state.nu)
+        out = [_upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, OptState(step=step, mu=new_m, nu=new_v)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: ScheduleOrFloat = 1e-2, momentum: float = 0.0,
+        grad_clip: Optional[float] = None) -> Optimizer:
+    """SGD with optional (heavy-ball) momentum — used for the FL clients'
+    local steps, matching standard FedAvg practice."""
+
+    def init(params) -> OptState:
+        # momentum-free SGD carries NO per-param state — this is what lets
+        # the FL replica path hold per-client params + grads only
+        mu = () if momentum == 0.0 else jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=())
+
+    def update(params, grads, state: OptState):
+        if grad_clip is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+
+        if momentum == 0.0:
+            new_p = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_p, OptState(step=step, mu=(), nu=())
+
+        def _upd(p, g, m):
+            g32 = g.astype(jnp.float32)
+            m = momentum * m + g32
+            return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.mu)
+        out = [_upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        return new_p, OptState(step=step, mu=new_m, nu=())
+
+    return Optimizer(init=init, update=update)

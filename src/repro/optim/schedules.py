@@ -1,0 +1,34 @@
+"""Learning-rate schedules as pure step -> lr callables (jnp-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def sched(step):
+        return jnp.asarray(lr, dtype=jnp.float32)
+    return sched
+
+
+def linear_schedule(start: float, end: float, steps: int):
+    def sched(step):
+        t = jnp.clip(step / max(steps, 1), 0.0, 1.0)
+        return jnp.asarray(start + (end - start) * t, dtype=jnp.float32)
+    return sched
+
+
+def cosine_schedule(peak: float, steps: int, floor: float = 0.0):
+    def sched(step):
+        t = jnp.clip(step / max(steps, 1), 0.0, 1.0)
+        return jnp.asarray(floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t)),
+                           dtype=jnp.float32)
+    return sched
+
+
+def warmup_cosine_schedule(peak: float, warmup: int, steps: int, floor: float = 0.0):
+    cos = cosine_schedule(peak, max(steps - warmup, 1), floor)
+
+    def sched(step):
+        warm = peak * jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, warm, cos(step - warmup)).astype(jnp.float32)
+    return sched

@@ -1,0 +1,4 @@
+"""Serving substrate: request scheduling over the zoo's prefill/decode."""
+from repro.serving.scheduler import Request, WaveScheduler
+
+__all__ = ["Request", "WaveScheduler"]

@@ -1,0 +1,4 @@
+"""Training-loop substrate: checkpointed, resumable, metric-logging."""
+from repro.train.loop import TrainLoop, TrainLoopConfig
+
+__all__ = ["TrainLoop", "TrainLoopConfig"]

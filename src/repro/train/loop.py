@@ -1,0 +1,116 @@
+"""Checkpointed training loop: the production driver around
+``make_train_step``.
+
+Features a real trainer needs and nothing it doesn't:
+  * jit'd step (sharded or not — the step fn decides),
+  * periodic eval on a held-out batch,
+  * atomic checkpoints (params + optimizer state + step + RNG-free
+    dataset cursor) every ``save_every`` steps,
+  * crash-safe resume: ``TrainLoop(...).run()`` continues from the
+    newest checkpoint if one exists — byte-identical to an uninterrupted
+    run (tested in tests/test_train_loop.py),
+  * a metrics log (list of dicts; JSON-serializable).
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+
+from repro.checkpoint.store import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.models.api import Model, make_train_step
+
+
+@dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    eval_every: int = 20
+    save_every: int = 50
+    log_every: int = 10
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+
+
+class TrainLoop:
+    """Drives ``(params, opt_state, batch) -> (params, opt_state, metrics)``
+    over a ``batch_fn(step) -> batch`` data source."""
+
+    def __init__(self, model: Model, optimizer, batch_fn: Callable,
+                 cfg: TrainLoopConfig, *,
+                 eval_batch_fn: Optional[Callable] = None, seed: int = 0):
+        self.model = model
+        self.optimizer = optimizer
+        self.batch_fn = batch_fn
+        self.eval_batch_fn = eval_batch_fn
+        self.cfg = cfg
+        self.step_fn = jax.jit(make_train_step(model, optimizer))
+        self._eval = jax.jit(lambda p, b: model.loss_fn(p, b)) \
+            if eval_batch_fn else None
+
+        self.params = model.init(jax.random.key(seed))
+        self.opt_state = optimizer.init(self.params)
+        self.start_step = 0
+        self.metrics_log: List[Dict[str, Any]] = []
+
+        if cfg.checkpoint_dir and latest_step(cfg.checkpoint_dir) is not None:
+            self._resume()
+
+    # ------------------------------------------------------------------
+    def _resume(self) -> None:
+        like = {"params": self.params, "opt": self.opt_state}
+        tree, extra = restore_checkpoint(self.cfg.checkpoint_dir, like)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.start_step = int(extra.get("step", 0))
+        self.metrics_log = extra.get("metrics_log", [])
+
+    def _save(self, step: int) -> None:
+        if not self.cfg.checkpoint_dir:
+            return
+        save_checkpoint(
+            self.cfg.checkpoint_dir, step,
+            {"params": self.params, "opt": self.opt_state},
+            extra={"step": step, "metrics_log": self.metrics_log})
+        self._prune()
+
+    def _prune(self) -> None:
+        d = Path(self.cfg.checkpoint_dir)
+        steps = sorted(int(p.name.split("_")[1]) for p in d.iterdir()
+                       if p.name.startswith("step_"))
+        for s in steps[: -self.cfg.keep_checkpoints]:
+            import shutil
+            shutil.rmtree(d / f"step_{s:08d}", ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def run(self, verbose: bool = False) -> dict:
+        t0 = time.time()
+        for step in range(self.start_step, self.cfg.total_steps):
+            batch = self.batch_fn(step)
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            if (step + 1) % self.cfg.log_every == 0 or \
+                    step + 1 == self.cfg.total_steps:
+                rec = {"step": step + 1,
+                       **{k: float(v) for k, v in metrics.items()}}
+                if self._eval and (step + 1) % self.cfg.eval_every == 0:
+                    el, em = self._eval(self.params,
+                                        self.eval_batch_fn(step))
+                    rec["eval_loss"] = float(el)
+                self.metrics_log.append(rec)
+                if verbose:
+                    print(json.dumps(rec))
+            if (step + 1) % self.cfg.save_every == 0 or \
+                    step + 1 == self.cfg.total_steps:
+                self._save(step + 1)
+        return {
+            "steps": self.cfg.total_steps,
+            "wall_s": time.time() - t0,
+            "final": self.metrics_log[-1] if self.metrics_log else {},
+            "metrics_log": self.metrics_log,
+        }

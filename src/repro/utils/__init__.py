@@ -1,0 +1,24 @@
+from repro.utils.trees import (
+    tree_size,
+    tree_bytes,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_weighted_sum,
+    tree_allclose,
+    tree_global_norm,
+)
+from repro.utils.hlo import collective_bytes, count_hlo_ops
+
+__all__ = [
+    "tree_size",
+    "tree_bytes",
+    "tree_zeros_like",
+    "tree_add",
+    "tree_scale",
+    "tree_weighted_sum",
+    "tree_allclose",
+    "tree_global_norm",
+    "collective_bytes",
+    "count_hlo_ops",
+]

@@ -1,0 +1,470 @@
+"""Structural HLO profiling: FLOPs / bytes / collective volume from the
+optimized HLO text, with while-loop trip counts applied.
+
+``compiled.cost_analysis()`` counts every while body ONCE — a layer stack
+driven by ``lax.scan`` (our whole model zoo) would be undercounted by
+``n_layers``x. XLA annotates loops it has unrolled knowledge of with
+``backend_config={"known_trip_count":{"n":"94"}}``, so this module walks
+the call graph (entry -> while bodies x trip_count -> called/fused
+computations) and accumulates:
+
+* **flops** — 2 * prod(out_dims) * prod(contracting_dims) per ``dot``
+  (counted inside fusions too, with the caller's multiplier);
+* **bytes** — operand + result bytes of every instruction at fusion
+  boundary level (the HBM-traffic model XLA itself uses: fusion internals
+  are VMEM-resident);
+* **collective_bytes** — result bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, trip-multiplied, with
+  per-op totals (the §Roofline collective term numerator).
+
+This is a structural profile — reasoning from the IR, not a wall-clock
+trace (the container has no TPU).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# bytes per element for HLO primitive types
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# one shape token, e.g. f32[256,4096]{1,0} or bf16[] or s32[]
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:\s*\{[\\"]*n[\\"]*:[\\"]*(\d+)')
+_CALLEE_RE = re.compile(
+    r"(?:to_apply|calls|body|condition|branch_computations|"
+    r"called_computations|true_computation|false_computation)="
+    r"(?:\{)?%?([\w.\-]+)")
+_CALLEES_LIST_RE = re.compile(
+    r"(?:branch_computations|called_computations)=\{([^}]*)\}")
+
+
+def _shape_elems_bytes(dtype: str, dims: str) -> Tuple[int, int]:
+    if dtype not in _DTYPE_BYTES:
+        return 0, 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n, n * _DTYPE_BYTES[dtype]
+
+
+def _all_shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        total += _shape_elems_bytes(m.group(1), m.group(2))[1]
+    return total
+
+
+@dataclass
+class Instruction:
+    name: str
+    opcode: str
+    out_bytes: int
+    operand_bytes: int
+    flops: int                  # dot/conv flops of THIS instruction only
+    callees: List[str]
+    trip_count: int             # for while ops
+    is_collective: bool
+    collective_op: str = ""
+    line: str = ""
+    operand_refs: List[str] = field(default_factory=list)
+    param_index: int = -1       # for parameter ops
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    # symbol table: instruction/parameter name -> (out_bytes, dims of first
+    # shape token) — used to resolve untyped "%ref" operands
+    symbols: Dict[str, Tuple[int, List[int]]] = field(default_factory=dict)
+    # parameter index -> parameter instruction name
+    params: Dict[int, str] = field(default_factory=dict)
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _parse_opcode(rhs: str) -> Tuple[str, int, str]:
+    """Return (opcode, end_of_result_type_idx, result_part)."""
+    # rhs = "<result type> <opcode>(<operands>), attrs"
+    # find the first "word(" that is the opcode — skip shape tokens
+    m = re.search(r"([\w\-]+)\(", rhs)
+    if not m:
+        return "", 0, rhs
+    return m.group(1), m.start(), rhs[: m.start()]
+
+
+def _operand_dims(operand_part: str, idx: int,
+                  symbols: Dict[str, Tuple[int, List[int]]]) -> List[int]:
+    """Dims of the idx-th operand: inline shape token if present, else the
+    symbol table entry of the idx-th %ref."""
+    shapes = _SHAPE_RE.findall(operand_part)
+    if shapes and len(shapes) > idx:
+        return [int(d) for d in shapes[idx][1].split(",") if d]
+    refs = _REF_RE.findall(operand_part)
+    if len(refs) > idx and refs[idx] in symbols:
+        return symbols[refs[idx]][1]
+    return []
+
+
+def _dot_flops(rhs: str, result_part: str, operand_part: str,
+               symbols) -> int:
+    """2 * prod(out) * prod(lhs contracting dims)."""
+    out_m = _SHAPE_RE.search(result_part)
+    if not out_m:
+        return 0
+    out_elems, _ = _shape_elems_bytes(out_m.group(1), out_m.group(2))
+    lhs_dims = _operand_dims(operand_part, 0, symbols)
+    if not lhs_dims:
+        return 0
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    contract = 1
+    if cm and cm.group(1):
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2 * out_elems * contract
+
+
+def _conv_flops(rhs: str, result_part: str, operand_part: str,
+                symbols) -> int:
+    """2 * prod(out) * (kernel spatial elems * in_features)."""
+    out_m = _SHAPE_RE.search(result_part)
+    if not out_m:
+        return 0
+    out_elems, _ = _shape_elems_bytes(out_m.group(1), out_m.group(2))
+    k_dims = _operand_dims(operand_part, 1, symbols)
+    k_elems = 1
+    for d in k_dims:
+        k_elems *= d
+    # divide by output features (last kernel dim by convention o)
+    if k_dims:
+        k_elems //= max(k_dims[-1], 1)
+    return 2 * out_elems * k_elems
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], str]:
+    """Parse HLO text into computations. Returns (comps, entry_name)."""
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        # computation header: "%name (args) -> type {" or "ENTRY %name ..."
+        # (arg lists may contain nested tuple parens, so match greedily on
+        # a line that ENDS with "{" and contains "->")
+        hm = None
+        if s.endswith("{") and "->" in s:
+            hm = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->", line)
+        if hm and not line.lstrip().startswith(("ROOT", "//")):
+            current = Computation(name=hm.group(2))
+            comps[current.name] = current
+            if hm.group(1):
+                entry = current.name
+            continue
+        if s == "}":
+            continue
+        if current is None or "=" not in s:
+            continue
+        om = _OP_RE.match(s)
+        if not om:
+            continue
+        name, rhs = om.group(1), om.group(2)
+        opcode, _, result_part = _parse_opcode(rhs)
+        if not opcode:
+            continue
+        # strip async -start/-done wrappers for classification
+        base_op = opcode
+        for suffix in ("-start", "-done"):
+            if base_op.endswith(suffix):
+                base_op = base_op[: -len(suffix)]
+        out_b = _all_shape_bytes(result_part)
+        fm = _SHAPE_RE.search(result_part)
+        out_dims = ([int(d) for d in fm.group(2).split(",") if d]
+                    if fm else [])
+        current.symbols[name] = (out_b, out_dims)
+        par = rhs.find("(")
+        close = rhs.rfind(")")
+        operand_part = rhs[par + 1: close] if par >= 0 else ""
+        refs = _REF_RE.findall(operand_part)
+        opnd_b = _all_shape_bytes(operand_part)
+        if opnd_b == 0 and operand_part:
+            # untyped "%ref" operands: resolve via the symbol table
+            for ref in refs:
+                if ref in current.symbols:
+                    opnd_b += current.symbols[ref][0]
+        if base_op == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", rhs)
+            if pm:
+                current.params[int(pm.group(1))] = name
+        flops = 0
+        if base_op == "dot":
+            flops = _dot_flops(rhs, result_part, operand_part,
+                               current.symbols)
+        elif base_op == "convolution":
+            flops = _conv_flops(rhs, result_part, operand_part,
+                                current.symbols)
+        callees = []
+        for cm in _CALLEES_LIST_RE.finditer(rhs):
+            callees.extend(c.strip().lstrip("%")
+                           for c in cm.group(1).split(",") if c.strip())
+        for cm in _CALLEE_RE.finditer(rhs):
+            if cm.group(1) not in callees:
+                callees.append(cm.group(1))
+        trip = 1
+        if base_op == "while":
+            tm = _TRIP_RE.search(rhs)
+            trip = int(tm.group(1)) if tm else 1
+        is_coll = base_op in COLLECTIVE_OPS and not opcode.endswith("-done")
+        current.instructions.append(Instruction(
+            name=name, opcode=base_op, out_bytes=out_b,
+            operand_bytes=opnd_b, flops=flops, callees=callees,
+            trip_count=trip, is_collective=is_coll,
+            collective_op=base_op if is_coll else "", line=s[:160],
+            operand_refs=refs))
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+@dataclass
+class HloProfile:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    top_flops: List[Tuple[str, float]] = field(default_factory=list)
+    top_collectives: List[Tuple[str, float]] = field(default_factory=list)
+    top_bytes: List[Tuple[str, float]] = field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "per_collective": dict(self.per_collective),
+            "collective_counts": dict(self.collective_counts),
+            "top_flops": [list(t) for t in self.top_flops[:12]],
+            "top_collectives": [list(t) for t in self.top_collectives[:12]],
+            "top_bytes": [list(t) for t in self.top_bytes[:12]],
+        }
+
+
+# opcodes whose callees are *inlined* (do not execute separately for bytes,
+# but flops inside them DO count once per call of the fusion)
+_FUSION_OPS = {"fusion"}
+# opcodes that call computations which execute per-invocation
+_CALL_OPS = {"while", "call", "conditional", "async-start", "custom-call",
+             "reduce", "reduce-window", "scatter", "sort", "map",
+             "select-and-scatter", "all-reduce", "reduce-scatter"}
+
+
+def profile_hlo(hlo_text: str) -> HloProfile:
+    comps, entry = parse_module(hlo_text)
+    prof = HloProfile()
+    per_coll: Dict[str, float] = defaultdict(float)
+    coll_counts: Dict[str, float] = defaultdict(float)
+    flop_items: Dict[str, float] = defaultdict(float)
+    coll_items: Dict[str, float] = defaultdict(float)
+    byte_items: Dict[str, float] = defaultdict(float)
+
+    def comp_flops_only(cname: str, mult: float, seen: tuple) -> float:
+        """FLOPs of a fused/applied computation (no byte accounting)."""
+        if cname not in comps or cname in seen:
+            return 0.0
+        total = 0.0
+        for ins in comps[cname].instructions:
+            total += ins.flops * mult
+            for cal in ins.callees:
+                total += comp_flops_only(cal, mult * ins.trip_count,
+                                         seen + (cname,))
+        return total
+
+    def fusion_bytes(ins: Instruction, caller: Computation) -> float:
+        """Slice-aware HBM traffic of one fusion call.
+
+        A kLoop fusion often takes a whole scan-carry stack as an operand
+        and ``dynamic-slice``s one layer's worth inside; in-place
+        ``dynamic-update-slice`` roots write only the update. Charging
+        full operand/result sizes would bill the stack trip_count times.
+        """
+        callee = comps.get(ins.callees[0]) if ins.callees else None
+        if callee is None:
+            return float(ins.out_bytes + ins.operand_bytes)
+        # alias map through size-preserving ops
+        alias: Dict[str, str] = {}
+
+        def root_of(ref: str) -> str:
+            while ref in alias:
+                ref = alias[ref]
+            return ref
+
+        sliced: Dict[str, int] = {}
+        dus_targets: set = set()
+        dus_update_bytes = 0
+        for inner in callee.instructions:
+            # convert counts as an alias for slice/target detection: the
+            # TPU build keeps the dtype (the f32 widening is a CPU-pipeline
+            # artifact), so a DUS through a convert is still in-place
+            if inner.opcode in ("bitcast", "copy", "reshape", "transpose",
+                                "convert") and inner.operand_refs:
+                alias[inner.name] = inner.operand_refs[0]
+            elif inner.opcode == "dynamic-slice" and inner.operand_refs:
+                tgt = root_of(inner.operand_refs[0])
+                sliced[tgt] = sliced.get(tgt, 0) + inner.out_bytes
+            elif inner.opcode == "dynamic-update-slice" \
+                    and inner.operand_refs:
+                dus_targets.add(root_of(inner.operand_refs[0]))
+                if len(inner.operand_refs) > 1:
+                    u = root_of(inner.operand_refs[1])
+                    dus_update_bytes += callee.symbols.get(u, (0, []))[0]
+        reads = 0.0
+        for idx, ref in enumerate(ins.operand_refs):
+            pname = callee.params.get(idx)
+            full = caller.symbols.get(ref, (0, []))[0]
+            if pname is None:
+                reads += full
+            elif pname in dus_targets:
+                pass  # aliased in-place target: not re-read
+            elif pname in sliced:
+                reads += min(sliced[pname], full)
+            else:
+                reads += full
+        writes = float(dus_update_bytes if dus_targets else ins.out_bytes)
+        return reads + writes
+
+    def inst_bytes(ins: Instruction, caller: Computation) -> float:
+        """HBM-traffic model with aliasing-aware special cases."""
+        if ins.opcode in ("while", "call", "conditional"):
+            return 0.0  # carries are aliased in place; bodies are walked
+        if ins.opcode == "fusion":
+            return fusion_bytes(ins, caller)
+        tag = ins.name + ":" + ins.opcode
+        if "dynamic-update-slice" in tag or ins.opcode == "scatter":
+            upd = max(ins.operand_bytes - ins.out_bytes, 0)
+            return 2.0 * (upd if upd else ins.out_bytes)
+        if "dynamic-slice" in tag or ins.opcode == "gather":
+            return 2.0 * ins.out_bytes
+        return float(ins.out_bytes + ins.operand_bytes)
+
+    def walk(cname: str, mult: float, seen: tuple) -> None:
+        if cname not in comps or cname in seen:
+            return
+        caller = comps[cname]
+        for ins in caller.instructions:
+            if ins.opcode in _SKIP_BYTES_OPS:
+                continue
+            by = inst_bytes(ins, caller) * mult
+            prof.bytes_accessed += by
+            byte_items[f"{cname}/{ins.name}:{ins.opcode}"] += by
+            if ins.flops:
+                prof.flops += ins.flops * mult
+                flop_items[f"{cname}/{ins.name}"] += ins.flops * mult
+            if ins.is_collective:
+                # ICI wire-cost model (ring algorithms): all-reduce moves
+                # ~2x the tensor (reduce-scatter + all-gather phases);
+                # all-gather / all-to-all / collective-permute move ~the
+                # result; reduce-scatter moves ~the operand (= result x n)
+                if ins.collective_op == "all-reduce":
+                    b = 2.0 * ins.out_bytes * mult
+                elif ins.collective_op == "reduce-scatter":
+                    b = float(max(ins.operand_bytes, ins.out_bytes)) * mult
+                else:
+                    b = float(ins.out_bytes) * mult
+                prof.collective_bytes += b
+                per_coll[ins.collective_op] += b
+                coll_counts[ins.collective_op] += mult
+                coll_items[f"{cname}/{ins.name}"] += b
+            if ins.opcode in _FUSION_OPS:
+                for cal in ins.callees:
+                    f = comp_flops_only(cal, mult, seen + (cname,))
+                    prof.flops += f
+                    if f:
+                        flop_items[f"{cname}/{ins.name}"] += f
+            elif ins.callees and ins.opcode == "while":
+                for cal in ins.callees:
+                    walk(cal, mult * ins.trip_count, seen + (cname,))
+            elif ins.callees and ins.opcode == "conditional":
+                # walk the first branch (conditionals are rare here and
+                # branches are near-symmetric when they appear)
+                walk(ins.callees[0], mult, seen + (cname,))
+            elif ins.callees and ins.opcode not in _FUSION_OPS:
+                for cal in ins.callees:
+                    # reduce/scatter/sort apply tiny computations; walking
+                    # them would double count bytes — flops only
+                    f = comp_flops_only(cal, mult, seen + (cname,))
+                    prof.flops += f
+
+    walk(entry, 1.0, ())
+    prof.per_collective = {k: float(v) for k, v in per_coll.items()}
+    prof.collective_counts = {k: float(v) for k, v in coll_counts.items()}
+    prof.top_flops = sorted(flop_items.items(), key=lambda kv: -kv[1])[:20]
+    prof.top_collectives = sorted(coll_items.items(),
+                                  key=lambda kv: -kv[1])[:20]
+    prof.top_bytes = sorted(byte_items.items(), key=lambda kv: -kv[1])[:20]
+    return prof
+
+
+# --------------------------------------------------------------------------
+# legacy helpers (kept for tests / simple summaries)
+# --------------------------------------------------------------------------
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Trip-count-aware collective volume summary of an HLO module."""
+    p = profile_hlo(hlo_text)
+    return {
+        "total": int(p.collective_bytes),
+        "per_op": {k: int(v) for k, v in p.per_collective.items()},
+        "counts": {k: int(v) for k, v in p.collective_counts.items()},
+    }
+
+
+def count_hlo_ops(hlo_text: str, opnames=("fusion", "dot", "convolution",
+                                          "reshape", "transpose",
+                                          "custom-call", "while",
+                                          "all-reduce", "all-gather",
+                                          "reduce-scatter", "all-to-all",
+                                          "collective-permute")) -> dict:
+    """Count occurrences of selected HLO op kinds (structural profile)."""
+    counts = {k: 0 for k in opnames}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        rhs = line.partition("=")[2]
+        for op in opnames:
+            if re.search(rf"\b{op}(-start)?\(", rhs):
+                counts[op] += 1
+                break
+    return counts

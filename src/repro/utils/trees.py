@@ -1,0 +1,74 @@
+"""Pytree helpers used across the framework.
+
+Everything here is pure-functional over arbitrary param pytrees so the FL
+layer can aggregate any architecture's parameters without knowing its
+structure.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree (uses each leaf's dtype)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_weighted_sum(trees, weights):
+    """sum_i weights[i] * trees[i], the FedAvg primitive.
+
+    ``trees`` is a list of pytrees with identical structure; ``weights``
+    a list/array of scalars. Done leaf-by-leaf with a single stack so it
+    fuses into one reduction per leaf.
+    """
+    weights = jnp.asarray(weights)
+
+    def _leaf(*leaves):
+        stacked = jnp.stack(leaves)  # (K, ...)
+        w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1)).astype(stacked.dtype)
+        return jnp.sum(stacked * w, axis=0)
+
+    return jax.tree.map(_leaf, *trees)
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+               for x, y in zip(la, lb))
+
+
+def tree_global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)

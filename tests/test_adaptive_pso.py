@@ -1,0 +1,109 @@
+"""Drift-adaptive Flag-Swap (beyond paper — its stated future work):
+when client speeds change after convergence, the adaptive variant
+re-ignites and recovers while frozen PSO stays on the stale placement."""
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.hierarchy import ClientPool, Hierarchy
+from repro.core.placement import AdaptivePSOPlacement, PSOPlacement
+from repro.core.pso import FlagSwapPSO
+
+
+def _drive(strategy, cost_fn, rounds):
+    tpds = []
+    for r in range(rounds):
+        p = strategy.propose(r)
+        t = cost_fn(r, p)
+        strategy.observe(p, t)
+        tpds.append(t)
+    return np.asarray(tpds)
+
+
+def test_reignite_resets_swarm():
+    pso = FlagSwapPSO(7, 16, n_particles=6, seed=0)
+    # force a converged swarm with learned memory
+    pso.x[:] = pso.x[0]
+    pso.v[:] = 0.0
+    pso.tell(-2.0)
+    assert pso.converged
+    best_before = pso.placement(0).copy()
+    pso.reignite(keep_best=True)
+    assert not pso.converged                  # diversity restored
+    assert pso.gbest_f == -np.inf             # stale memory dropped
+    np.testing.assert_array_equal(
+        pso._dedup(pso.x[0]), pso._dedup(best_before.astype(np.float64)))
+
+
+def test_adaptive_recovers_from_drift():
+    h = Hierarchy(depth=3, width=2, trainers_per_leaf=2)
+    pool_a = ClientPool.random(h.total_clients, seed=0)
+    pool_b = ClientPool.random(h.total_clients, seed=0)
+    # drift at round 60: the fast clients become the slow ones
+    pool_b.pspeed = pool_b.pspeed[::-1].copy()
+    cm_a, cm_b = CostModel(h, pool_a), CostModel(h, pool_b)
+
+    def cost(r, p):
+        return (cm_a if r < 60 else cm_b).tpd(p)
+
+    frozen = PSOPlacement(h, seed=1)
+    adaptive = AdaptivePSOPlacement(h, seed=1, drift_factor=1.15,
+                                    probe_every=5)
+    t_frozen = _drive(frozen, cost, 160)
+    t_adapt = _drive(adaptive, cost, 160)
+
+    assert adaptive.reignitions >= 1
+    # after the drift + re-optimization, adaptive's tail beats frozen's
+    assert t_adapt[-20:].mean() < t_frozen[-20:].mean()
+
+
+def test_adaptive_no_false_triggers():
+    """Stationary system: adaptive must behave like plain PSO."""
+    h = Hierarchy(depth=2, width=2, trainers_per_leaf=2)
+    pool = ClientPool.random(h.total_clients, seed=2)
+    cm = CostModel(h, pool)
+    adaptive = AdaptivePSOPlacement(h, seed=2, drift_factor=1.3)
+    _drive(adaptive, lambda r, p: cm.tpd(p), 120)
+    assert adaptive.reignitions == 0
+
+
+def test_sa_and_cem_propose_valid_placements():
+    from repro.core.placement import (CEMPlacement,
+                                      SimulatedAnnealingPlacement)
+    h = Hierarchy(depth=3, width=2, trainers_per_leaf=2)
+    pool = ClientPool.random(h.total_clients, seed=0)
+    cm = CostModel(h, pool)
+    for strat in (SimulatedAnnealingPlacement(h, seed=0),
+                  CEMPlacement(h, seed=0)):
+        best = np.inf
+        for r in range(60):
+            p = strat.propose(r)
+            h.validate_placement(p)      # distinct, in-range
+            t = cm.tpd(p)
+            strat.observe(p, t)
+            best = min(best, t)
+        # both must learn: the best found beats the first proposal
+        assert best <= cm.tpd(strat.propose(61)) + 1e-9
+        assert strat.best_f > -np.inf
+
+
+def test_two_tier_cost_model():
+    from repro.core.cost_model import TwoTierCostModel
+    h = Hierarchy(depth=2, width=2, trainers_per_leaf=1, n_clients=8)
+    pool = ClientPool.random(h.total_clients, seed=0)
+    pod_of = np.repeat(np.arange(2), 4)
+    base = CostModel(h, pool)
+    two = TwoTierCostModel(h, pool, pod_of=pod_of)
+    p = np.arange(h.dimensions)
+    # comm costs strictly add on top of eq.6
+    assert two.tpd(p) > base.tpd(p)
+    # an all-same-pod placement pays less comm than a max-crossing one
+    local = np.asarray([0, 1, 2])       # all pod 0
+    crossing = np.asarray([0, 4, 5])    # root pod0, children pod1
+    cl, tl = two.cross_pod_edges(local)
+    cc, tc = two.cross_pod_edges(crossing)
+    assert cc > cl
+    # batch_fitness (scalar fallback) agrees with scalar
+    ps = np.stack([local, crossing])
+    np.testing.assert_allclose(
+        two.batch_fitness(ps), [two.fitness(local), two.fitness(crossing)],
+        rtol=1e-6)

@@ -1,0 +1,85 @@
+"""The core FL invariant: hierarchical FedAvg along ANY valid placement
+tree equals flat weighted FedAvg — placement changes the *delay*, never
+the result (property-tested, per the paper's claim that the optimizer is
+free to rearrange aggregation without touching model semantics)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hierarchy import Hierarchy
+from repro.fl.aggregation import AggregationPlan, fedavg, hierarchical_fedavg
+
+
+def _random_updates(n, rng, shapes=((3, 4), (5,))):
+    return [
+        {"w": jnp.asarray(rng.standard_normal(shapes[0]), jnp.float32),
+         "b": jnp.asarray(rng.standard_normal(shapes[1]), jnp.float32)}
+        for _ in range(n)
+    ]
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_hierarchical_equals_flat(seed):
+    rng = np.random.default_rng(seed)
+    depth = int(rng.integers(1, 4))
+    width = int(rng.integers(1, 4)) if depth > 1 else 2
+    h = Hierarchy(depth=depth, width=width, trainers_per_leaf=2)
+    n = h.total_clients
+    updates = _random_updates(n, rng)
+    w = rng.dirichlet(np.ones(n)).astype(np.float32)
+    placement = rng.permutation(n)[: h.dimensions]
+
+    flat = fedavg(updates, list(w))
+    hier = hierarchical_fedavg(updates, list(w), h, placement)
+    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(hier)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_placement_invariance(seed):
+    """Two different placements must aggregate to the same global model."""
+    rng = np.random.default_rng(seed)
+    h = Hierarchy(depth=3, width=2, trainers_per_leaf=2)
+    n = h.total_clients
+    updates = _random_updates(n, rng)
+    w = rng.dirichlet(np.ones(n)).astype(np.float32)
+    p1 = rng.permutation(n)[: h.dimensions]
+    p2 = rng.permutation(n)[: h.dimensions]
+    g1 = hierarchical_fedavg(updates, list(w), h, p1)
+    g2 = hierarchical_fedavg(updates, list(w), h, p2)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_plan_build_validations():
+    h = Hierarchy(depth=2, width=2, trainers_per_leaf=1)
+    placement = np.arange(h.dimensions)
+    with pytest.raises(ValueError):
+        AggregationPlan.build(h, placement, n_devices=h.total_clients + 1)
+    plan = AggregationPlan.build(h, placement, n_devices=h.total_clients * 2)
+    assert plan.n_devices == h.total_clients * 2
+    # weights: each client's device weights sum to the client weight
+    w = plan.weight_of_device
+    per = 2
+    for c in range(h.total_clients):
+        assert w[c * per: (c + 1) * per].sum() == pytest.approx(
+            1.0 / h.total_clients, rel=1e-5)
+
+
+def test_plan_levels_structure():
+    h = Hierarchy(depth=3, width=2, trainers_per_leaf=2)
+    placement = np.arange(h.dimensions)
+    plan = AggregationPlan.build(h, placement, n_devices=h.total_clients)
+    assert len(plan.levels) == h.depth
+    for groups, carrier, in_group in plan.levels:
+        devs = [d for g in groups for d in g]
+        assert sorted(devs) == list(range(plan.n_devices))  # full partition
+        assert carrier.sum() >= 1
+    assert plan.root_rep_mask.sum() == 1

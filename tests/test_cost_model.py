@@ -1,0 +1,75 @@
+"""TPD cost model (paper eqs. 6-7) — scalar vs vectorized consistency."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import CostModel
+from repro.core.hierarchy import ClientPool, Hierarchy
+
+
+def _setup(depth=3, width=2, tpl=2, extra=0, seed=0):
+    h = Hierarchy(depth=depth, width=width, trainers_per_leaf=tpl,
+                  n_clients=None if extra == 0 else
+                  Hierarchy(depth, width, tpl).min_clients + extra)
+    pool = ClientPool.random(h.total_clients, seed=seed)
+    return h, pool, CostModel(h, pool)
+
+
+def test_cluster_delay_eq6():
+    h, pool, cm = _setup()
+    d = cm.cluster_delay(3, [5, 6])
+    mds = pool.mdatasize
+    expect = (mds[3] + mds[5] + mds[6]) / pool.pspeed[3]
+    assert d == pytest.approx(expect)
+
+
+def test_tpd_eq7_manual():
+    h, pool, cm = _setup(depth=2, width=2, tpl=1)
+    placement = np.arange(h.dimensions)
+    children = h.children_clients(placement)
+    lvl1 = max(cm.cluster_delay(int(placement[s]), children[s])
+               for s in (1, 2))
+    lvl0 = cm.cluster_delay(int(placement[0]), children[0])
+    assert cm.tpd(placement) == pytest.approx(lvl0 + lvl1)
+
+
+def test_fitness_is_negative_tpd():
+    h, pool, cm = _setup()
+    p = np.arange(h.dimensions)
+    assert cm.fitness(p) == pytest.approx(-cm.tpd(p))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_batch_tpd_matches_scalar(seed):
+    """Property: the jit'd swarm evaluator equals the per-placement loop
+    (uniform mdatasize => trainer identity does not matter, only counts)."""
+    h, pool, cm = _setup(seed=seed % 7)
+    rng = np.random.default_rng(seed)
+    placements = np.stack([
+        rng.permutation(h.total_clients)[: h.dimensions] for _ in range(6)])
+    batch = np.asarray(cm.batch_tpd(placements.astype(np.int32)))
+    scalar = np.array([cm.tpd(p) for p in placements])
+    np.testing.assert_allclose(batch, scalar, rtol=1e-5)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_batch_tpd_with_extra_trainers(seed):
+    h, pool, cm = _setup(extra=5, seed=seed % 5)
+    rng = np.random.default_rng(seed)
+    placements = np.stack([
+        rng.permutation(h.total_clients)[: h.dimensions] for _ in range(4)])
+    batch = np.asarray(cm.batch_tpd(placements.astype(np.int32)))
+    scalar = np.array([cm.tpd(p) for p in placements])
+    np.testing.assert_allclose(batch, scalar, rtol=1e-5)
+
+
+def test_memory_penalty_increases_delay():
+    h, pool, _ = _setup()
+    cm0 = CostModel(h, pool, memory_penalty=0.0)
+    cm1 = CostModel(h, pool, memory_penalty=5.0)
+    # force an overload: tiny memcap
+    pool.memcap[:] = 1.0
+    p = np.arange(h.dimensions)
+    assert cm1.tpd(p) > cm0.tpd(p)

@@ -1,0 +1,74 @@
+"""Hierarchy structure (paper Sec. IV-A, eq. 5)."""
+import numpy as np
+import pytest
+
+from repro.core.hierarchy import ClientPool, Hierarchy
+
+
+@pytest.mark.parametrize("depth,width", [(1, 1), (2, 2), (3, 2), (3, 4),
+                                         (4, 4), (5, 4), (3, 5)])
+def test_dimensions_eq5(depth, width):
+    h = Hierarchy(depth=depth, width=width)
+    assert h.dimensions == sum(width ** i for i in range(depth))
+
+
+def test_levels_bfs_order():
+    h = Hierarchy(depth=3, width=2)
+    assert list(h.levels) == [0, 1, 1, 2, 2, 2, 2]
+    assert h.level_starts == [0, 1, 3, 7]
+    assert h.leaf_slots == [3, 4, 5, 6]
+
+
+def test_children_parent_roundtrip():
+    h = Hierarchy(depth=3, width=3)
+    for s in range(h.dimensions):
+        for c in h.children_slots(s):
+            assert h.parent_slot(c) == s
+
+
+def test_trainer_assignment_partitions_pool():
+    h = Hierarchy(depth=3, width=2, trainers_per_leaf=2, n_clients=20)
+    placement = np.arange(h.dimensions)
+    trainers = h.trainer_assignment(placement)
+    pool = sorted(c for leaf in trainers for c in leaf)
+    assert pool == sorted(set(range(20)) - set(range(h.dimensions)))
+    # balanced round-robin: sizes differ by at most 1
+    sizes = [len(t) for t in trainers]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_clusters_cover_all_clients():
+    h = Hierarchy(depth=3, width=2, trainers_per_leaf=2)
+    placement = np.arange(h.dimensions)
+    clusters = h.clusters(placement)
+    assert len(clusters) == h.depth
+    # deepest level covers all trainers + leaf aggregators
+    deepest = {c for grp in clusters[0] for c in grp}
+    trainers = {c for leaf in h.trainer_assignment(placement) for c in leaf}
+    assert trainers <= deepest
+    # root level is a single cluster containing the root host
+    assert len(clusters[-1]) == 1
+    assert int(placement[0]) in clusters[-1][0]
+
+
+def test_validate_placement_rejects_bad():
+    h = Hierarchy(depth=2, width=2)
+    with pytest.raises(ValueError):
+        h.validate_placement([0, 1])           # wrong length
+    with pytest.raises(ValueError):
+        h.validate_placement([0, 0, 1])        # duplicate
+    with pytest.raises(ValueError):
+        h.validate_placement([0, 1, h.total_clients])  # out of range
+
+
+def test_min_clients_enforced():
+    with pytest.raises(ValueError):
+        Hierarchy(depth=3, width=2, trainers_per_leaf=2, n_clients=5)
+
+
+def test_client_pool_attributes():
+    pool = ClientPool.random(50, seed=3)
+    assert len(pool) == 50
+    assert (pool.pspeed >= 5).all() and (pool.pspeed < 15).all()
+    assert (pool.memcap >= 10).all() and (pool.memcap < 50).all()
+    assert (pool.mdatasize == 5.0).all()

@@ -1,0 +1,201 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.fedavg import fedavg_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rglru import rglru_scan_pallas
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# fedavg
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,n", [(2, 64), (8, 2048), (5, 5000), (16, 300),
+                                 (64, 4096)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_kernel_matches_ref(k, n, dtype):
+    x = jnp.asarray(RNG.standard_normal((k, n)), dtype)
+    w = jnp.asarray(RNG.dirichlet(np.ones(k)), dtype)
+    out = fedavg_pallas(x, w, interpret=True)
+    expect = ref.fedavg_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_fedavg_tree_wrapper():
+    trees = [{"a": jnp.asarray(RNG.standard_normal((4, 3)), jnp.float32),
+              "b": jnp.asarray(RNG.standard_normal(11), jnp.float32)}
+             for _ in range(5)]
+    w = list(RNG.dirichlet(np.ones(5)).astype(np.float32))
+    out = ops.fedavg_tree(trees, w, use_pallas=True, interpret=True)
+    expect = jax.tree.map(lambda *xs: sum(wi * x for wi, x in zip(w, xs)),
+                          *trees)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                                   atol=2e-6)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,s,hd", [
+    (1, 2, 2, 128, 64),      # MHA
+    (2, 4, 2, 256, 64),      # GQA 2:1
+    (1, 8, 2, 256, 128),     # GQA 4:1
+    (1, 16, 1, 128, 64),     # MQA
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 128),
+                                           (False, None)])
+def test_flash_attention_matches_ref(b, hq, hkv, s, hd, causal, window):
+    q = jnp.asarray(RNG.standard_normal((b, hq, s, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, hd)), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    b, hq, hkv, s, hd = 1, 4, 2, 256, 64
+    q = jnp.asarray(RNG.standard_normal((b, hq, s, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, hd)), dtype)
+    out = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_padded_via_ops():
+    """Non-block-multiple S goes through the ops.py padding path."""
+    for s in (200, 130, 257):
+        q = jnp.asarray(RNG.standard_normal((1, 4, s, 64)), jnp.float32)
+        k = jnp.asarray(RNG.standard_normal((1, 2, s, 64)), jnp.float32)
+        v = jnp.asarray(RNG.standard_normal((1, 2, s, 64)), jnp.float32)
+        for causal in (True, False):
+            out = ops.flash_attention(q, k, v, causal=causal,
+                                      use_pallas=True, interpret=True)
+            expect = ops.flash_attention(q, k, v, causal=causal,
+                                         use_pallas=False)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                       rtol=2e-5, atol=2e-5)
+
+
+def test_flash_block_size_invariance():
+    q = jnp.asarray(RNG.standard_normal((1, 2, 512, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 512, 64)), jnp.float32)
+    outs = [flash_attention_pallas(q, k, v, causal=True, block_q=bq,
+                                   block_kv=bkv, interpret=True)
+            for bq, bkv in ((128, 128), (256, 128), (128, 256), (512, 512))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU scan
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,d,bt,bd", [
+    (1, 128, 64, 64, 64),
+    (2, 512, 128, 256, 128),
+    (1, 256, 512, 64, 256),
+    (3, 1024, 96, 128, 96),
+])
+def test_rglru_kernel_matches_ref(b, t, d, bt, bd):
+    a = jnp.asarray(RNG.uniform(0.7, 0.999, (b, t, d)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((b, t, d)) * 0.1, jnp.float32)
+    out = rglru_scan_pallas(a, u, block_t=bt, block_d=bd, interpret=True)
+    expect = ref.rglru_scan_ref(a, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rglru_ops_padding_path():
+    a = jnp.asarray(RNG.uniform(0.8, 0.99, (2, 100, 48)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((2, 100, 48)) * 0.1, jnp.float32)
+    out = ops.rglru_scan(a, u, use_pallas=True, interpret=True)
+    expect = ops.rglru_scan(a, u, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rglru_block_invariance():
+    a = jnp.asarray(RNG.uniform(0.7, 0.999, (1, 512, 128)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((1, 512, 128)), jnp.float32)
+    outs = [rglru_scan_pallas(a, u, block_t=bt, block_d=bd, interpret=True)
+            for bt, bd in ((64, 128), (128, 64), (512, 128), (256, 32))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_dispatch_defaults_to_ref_on_cpu():
+    """use_pallas=None must pick the oracle on the CPU backend."""
+    x = jnp.ones((2, 8), jnp.float32)
+    w = jnp.asarray([0.5, 0.5], jnp.float32)
+    out = ops.fedavg(x, w)  # would raise if it tried real pallas on CPU
+    np.testing.assert_allclose(np.asarray(out), np.ones(8), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# fused AdamW
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,bn", [(1000, 256), (65536, 65536), (70000, 16384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_adamw_matches_ref(n, bn, dtype):
+    from repro.kernels.fused_adamw import fused_adamw_pallas
+    p = jnp.asarray(RNG.standard_normal(n), dtype)
+    g = jnp.asarray(RNG.standard_normal(n) * 0.1, dtype)
+    m = jnp.asarray(RNG.standard_normal(n) * 0.01, jnp.float32)
+    v = jnp.asarray(np.abs(RNG.standard_normal(n)) * 0.01, jnp.float32)
+    args = (p, g, m, v, 1e-3, 0.1, 0.0975)
+    got = fused_adamw_pallas(*args, block_n=bn, interpret=True)
+    want = ref.fused_adamw_ref(*args)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=3e-2 if dtype == jnp.bfloat16
+                                   else 2e-5,
+                                   atol=3e-2 if dtype == jnp.bfloat16
+                                   else 1e-6)
+
+
+def test_fused_adamw_steps_like_optimizer():
+    """One fused step == one optim.adamw step on a flat param vector."""
+    from repro.kernels import ops
+    from repro.optim import adamw
+    n = 513
+    p = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    g = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    opt = adamw(1e-2, b1=0.9, b2=0.95, weight_decay=0.1, grad_clip=None)
+    state = opt.init({"w": p})
+    ref_p, ref_state = opt.update({"w": p}, {"w": g}, state)
+    step = 1
+    bc1 = 1 - 0.9 ** step
+    bc2 = 1 - 0.95 ** step
+    got_p, got_m, got_v = ops.fused_adamw(
+        p, g, jnp.zeros(n), jnp.zeros(n), 1e-2, bc1, bc2,
+        b1=0.9, b2=0.95, wd=0.1, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(ref_p["w"]),
+                               rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_m),
+                               np.asarray(ref_state.mu["w"]), rtol=2e-5)

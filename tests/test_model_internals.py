@@ -1,0 +1,126 @@
+"""Deeper model-internals properties: the sharded cross-entropy vs the
+naive formulation, MoE routing invariants, and the mlstm chunked scan
+vs its sequential step recurrence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.moe import _route
+from repro.configs import MoEConfig
+
+
+# --------------------------------------------------------------------------
+# sharded cross-entropy (§Perf it. 5) == naive take_along_axis version
+# --------------------------------------------------------------------------
+
+def _naive_xent(logits, labels, vocab_size):
+    logits = logits.astype(jnp.float32)
+    v_pad = logits.shape[-1]
+    if v_pad > vocab_size:
+        neg = jnp.full((v_pad - vocab_size,), -1e9, jnp.float32)
+        logits = logits.at[..., vocab_size:].set(neg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_sharded_xent_equals_naive(seed):
+    rng = np.random.default_rng(seed)
+    b, s = int(rng.integers(1, 4)), int(rng.integers(1, 9))
+    vocab = int(rng.integers(3, 40))
+    v_pad = vocab + int(rng.integers(0, 9))
+    logits = jnp.asarray(rng.standard_normal((b, s, v_pad)) * 3, jnp.float32)
+    labels = jnp.asarray(rng.integers(0, vocab, (b, s)), jnp.int32)
+    got = common.softmax_xent(logits, labels, vocab)
+    want = _naive_xent(logits, labels, vocab)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_xent_with_mask():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.standard_normal((2, 6, 11)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 10, (2, 6)), jnp.int32)
+    mask = jnp.asarray([[1, 1, 1, 0, 0, 0], [1, 1, 1, 1, 1, 1]], jnp.float32)
+    full = common.softmax_xent(logits, labels, 10)
+    masked = common.softmax_xent(logits, labels, 10, mask=mask)
+    assert float(masked) != float(full)
+    # mask of ones == unmasked mean
+    ones = common.softmax_xent(logits, labels, 10,
+                               mask=jnp.ones((2, 6), jnp.float32))
+    np.testing.assert_allclose(float(ones), float(full), rtol=1e-6)
+
+
+def test_xent_pads_never_win():
+    """Padded vocab ids must carry ~zero probability."""
+    logits = jnp.full((1, 1, 8), 5.0)  # uniform incl. pads
+    labels = jnp.zeros((1, 1), jnp.int32)
+    vocab = 5
+    loss = common.softmax_xent(logits, labels, vocab)
+    np.testing.assert_allclose(float(loss), np.log(vocab), rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# MoE routing
+# --------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_route_gates_renormalized(seed):
+    rng = np.random.default_rng(seed)
+    t, d, e, k = 12, 8, 6, 2
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    router = jnp.asarray(rng.standard_normal((d, e)), jnp.float32)
+    gates, aux = _route(x, router, k)
+    g = np.asarray(gates)
+    # exactly k nonzeros per token, summing to 1
+    assert ((g > 0).sum(axis=1) == k).all()
+    np.testing.assert_allclose(g.sum(axis=1), 1.0, rtol=1e-5)
+    assert np.isfinite(float(aux))
+
+
+def test_route_aux_balanced_vs_skewed():
+    """The Switch aux loss must penalize a collapsed router."""
+    t, d, e = 64, 8, 4
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    balanced = jnp.zeros((d, e), jnp.float32)
+    collapsed = jnp.zeros((d, e), jnp.float32).at[:, 0].set(10.0) \
+        + jnp.asarray(rng.standard_normal((d, e)) * 1e-3, jnp.float32)
+    _, aux_b = _route(x, balanced, 1)
+    _, aux_c = _route(x, collapsed, 1)
+    assert float(aux_c) > float(aux_b)
+
+
+# --------------------------------------------------------------------------
+# mlstm chunked scan == sequential step recurrence
+# --------------------------------------------------------------------------
+
+def test_mlstm_chunkwise_matches_steps():
+    from repro.models.xlstm import mlstm_chunkwise, mlstm_step
+    rng = np.random.default_rng(0)
+    b, t, h, dh, chunk = 1, 32, 2, 8, 8
+    q = jnp.asarray(rng.standard_normal((b, t, h, dh)) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, t, h, dh)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, t, h, dh)) * 0.3, jnp.float32)
+    li = jnp.asarray(rng.standard_normal((b, t, h)) * 0.3, jnp.float32)
+    lf = jnp.asarray(rng.standard_normal((b, t, h)) * 0.3 + 2.0, jnp.float32)
+
+    out_chunk, _ = mlstm_chunkwise(q, k, v, li, lf, chunk=chunk)
+
+    state = {"C": jnp.zeros((b, h, dh, dh), jnp.float32),
+             "n": jnp.zeros((b, h, dh), jnp.float32),
+             "m": jnp.full((b, h), -jnp.inf, jnp.float32)}
+    outs = []
+    for i in range(t):
+        o, state = mlstm_step(q[:, i:i + 1], k[:, i:i + 1], v[:, i:i + 1],
+                              li[:, i:i + 1], lf[:, i:i + 1], state)
+        outs.append(o)
+    out_steps = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_chunk), np.asarray(out_steps),
+                               rtol=5e-4, atol=5e-4)

@@ -1,0 +1,96 @@
+"""Flag-Swap PSO (paper Sec. III, eqs. 1-4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hierarchy import ClientPool, Hierarchy
+from repro.core.cost_model import CostModel
+from repro.core.pso import FlagSwapPSO
+
+
+def _pso(slots=7, clients=16, particles=8, seed=0, **kw):
+    return FlagSwapPSO(slots, clients, n_particles=particles, seed=seed, **kw)
+
+
+def test_initial_positions_are_valid_placements():
+    pso = _pso()
+    for i in range(pso.n_particles):
+        p = pso.placement(i)
+        assert len(set(p.tolist())) == pso.n_slots
+        assert p.min() >= 0 and p.max() < pso.n_clients
+
+
+def test_vmax_eq3():
+    pso = _pso(slots=7)
+    assert pso.v_max == max(1.0, 7 * 0.1)
+    pso2 = FlagSwapPSO(100, 200, velocity_factor=0.1)
+    assert pso2.v_max == 10.0
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_dedup_always_unique(seed):
+    pso = _pso(seed=seed)
+    rngl = np.random.default_rng(seed)
+    pos = rngl.uniform(0, pso.n_clients, pso.n_slots)
+    d = pso._dedup(pos)
+    assert len(set(d.tolist())) == pso.n_slots
+    assert d.min() >= 0 and d.max() < pso.n_clients
+
+
+def test_velocity_clamped_after_steps():
+    pso = _pso()
+    for _ in range(30):
+        pso.tell(-np.random.default_rng(0).uniform(1, 10))
+    assert np.all(np.abs(pso.v) <= pso.v_max + 1e-9)
+
+
+def test_gbest_monotone_improves():
+    h = Hierarchy(depth=3, width=2)
+    pool = ClientPool.random(h.total_clients, seed=1)
+    cm = CostModel(h, pool)
+    pso = _pso(h.dimensions, h.total_clients, particles=6, seed=1)
+    best_seen = -np.inf
+    for r in range(60):
+        placement = pso.ask()
+        f = cm.fitness(placement)
+        pso.tell(f)
+        assert pso.gbest_f >= best_seen - 1e-12
+        best_seen = pso.gbest_f
+
+
+def test_run_converges_and_improves():
+    h = Hierarchy(depth=3, width=2)
+    pool = ClientPool.random(h.total_clients, seed=0)
+    cm = CostModel(h, pool)
+    pso = _pso(h.dimensions, h.total_clients, particles=10, seed=0)
+    best = pso.run(cm.fitness, iterations=100,
+                   batch_fitness_fn=cm.batch_fitness)
+    hist = pso.history
+    assert hist.mean[-1] <= hist.mean[0]              # swarm improved
+    assert -pso.gbest_f <= hist.best[0] + 1e-9        # gbest at least initial
+    h.validate_placement(best)
+
+
+def test_pso_beats_mean_random(rng):
+    """PSO's found placement should beat the average random placement."""
+    h = Hierarchy(depth=3, width=2)
+    pool = ClientPool.random(h.total_clients, seed=2)
+    cm = CostModel(h, pool)
+    pso = _pso(h.dimensions, h.total_clients, particles=10, seed=2)
+    pso.run(cm.fitness, iterations=100, batch_fitness_fn=cm.batch_fitness)
+    pso_tpd = cm.tpd(pso.best_placement)
+    rand_tpds = [cm.tpd(rng.permutation(h.total_clients)[: h.dimensions])
+                 for _ in range(200)]
+    assert pso_tpd < np.mean(rand_tpds)
+
+
+def test_ask_tell_cycles_through_particles():
+    pso = _pso(particles=4)
+    seen = [tuple(pso.ask()) or pso.tell(-1.0) for _ in range(4)]
+    assert pso._cursor == 0
+    assert pso.evaluations == 0  # ask alone does not evaluate
+    for _ in range(4):
+        pso.ask()
+        pso.tell(-1.0)
+    assert pso.evaluations == 4
