@@ -1,0 +1,13 @@
+# Tier-1 verification: the full test suite exactly as CI runs it.
+PY ?= python
+
+.PHONY: verify test bench-round bench-fig4
+
+verify test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench-round:
+	PYTHONPATH=src $(PY) benchmarks/bench_round_engine.py
+
+bench-fig4:
+	PYTHONPATH=src $(PY) benchmarks/bench_fig4_cluster.py --rounds 50

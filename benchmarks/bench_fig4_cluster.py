@@ -50,7 +50,8 @@ def make_cluster(seed: int = 0):
 
 def run_strategy(name: str, rounds: int, seed: int = 0,
                  local_steps: int = 2, verbose: bool = False,
-                 timing: str = "deterministic") -> dict:
+                 timing: str = "deterministic",
+                 engine: str = "auto") -> dict:
     cfg = get_config("paper-mlp-1m8")
     model = get_model(cfg)
     h, pool = make_cluster(seed)
@@ -60,7 +61,7 @@ def run_strategy(name: str, rounds: int, seed: int = 0,
     orch = FederatedOrchestrator(model, h, pool, data,
                                  local_steps=local_steps, batch_size=32,
                                  seed=seed, comm_latency=0.002,
-                                 timing=timing)
+                                 timing=timing, engine=engine)
     res = orch.run(strat, rounds=rounds, verbose=verbose)
     out = res.summary()
     out["per_round_tpd"] = res.tpds.tolist()
@@ -70,18 +71,21 @@ def run_strategy(name: str, rounds: int, seed: int = 0,
 
 def main(rounds: int = 50, seed: int = 0, n_seeds: int = 1,
          strategies=("random", "uniform", "pso", "ga", "greedy"),
-         timing: str = "deterministic") -> dict:
+         timing: str = "deterministic", engine: str = "auto") -> dict:
     """``timing='deterministic'`` (default) charges eq.6 unit-work
     delays through the black-box interface — reproducible anywhere.
     ``'measured'`` is the docker-faithful wall-clock mode: it needs a
     QUIET machine (CPU-contended runs drown the 4:1 speed signal in
-    scheduler noise); use n_seeds>1 there."""
+    scheduler noise); use n_seeds>1 there, and prefer ``engine='loop'``
+    (per-cluster wall attribution; the batched engine splits level wall
+    time by load share)."""
     print(f"== Fig. 4: 10-client heterogeneous cluster, {rounds} rounds, "
-          f"{n_seeds} seed(s), timing={timing} ==")
+          f"{n_seeds} seed(s), timing={timing}, engine={engine} ==")
     results = {}
     for s in strategies:
         t0 = time.perf_counter()
-        runs = [run_strategy(s, rounds, seed=seed + 17 * i, timing=timing)
+        runs = [run_strategy(s, rounds, seed=seed + 17 * i, timing=timing,
+                             engine=engine)
                 for i in range(n_seeds)]
         agg = {
             "total_tpd": float(np.mean([r["total_tpd"] for r in runs])),
@@ -128,6 +132,9 @@ if __name__ == "__main__":
     ap.add_argument("--seeds", type=int, default=1, dest="n_seeds")
     ap.add_argument("--measured", action="store_true",
                     help="wall-clock TPD (docker-faithful; quiet box only)")
+    ap.add_argument("--engine", choices=["auto", "loop", "batched"],
+                    default="auto")
     args = ap.parse_args()
     main(rounds=args.rounds, seed=args.seed, n_seeds=args.n_seeds,
-         timing="measured" if args.measured else "deterministic")
+         timing="measured" if args.measured else "deterministic",
+         engine=args.engine)

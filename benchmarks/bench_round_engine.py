@@ -1,0 +1,134 @@
+"""Round-engine scaling: batched (vmap + segment-sum) vs sequential loop.
+
+The paper's Fig. 4 regime is many small docker clients; the seed
+emulation dispatched one jit call per client per local step and one per
+aggregation cluster, capping practical runs at a few dozen clients. The
+batched engine turns each round into one jit'd vmap-of-scan (local
+training) plus one fused segment-sum program (aggregation), so per-round
+cost stops scaling with Python dispatch count.
+
+Sweeps 16 -> 256 clients on the paper-family MLP at emulation scale
+(d_model=64 by default — the dispatch-bound many-client regime; pass
+--full for the 1.8M-param paper MLP, where both engines converge to the
+same memory-bandwidth floor on CPU and the win shrinks accordingly).
+Also reports the swarm-evaluator speedup (CostModel.batch_tpd vs the
+seed's per-particle Python fallback) at each scale.
+
+Run:  PYTHONPATH=src python benchmarks/bench_round_engine.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cost_model import TwoTierCostModel
+from repro.core.hierarchy import ClientPool
+from repro.data.synthetic import make_federated_dataset
+from repro.fl.distributed import choose_fl_hierarchy
+from repro.fl.orchestrator import FederatedOrchestrator
+from repro.models import get_model
+
+OUT = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
+
+
+def bench_engine(model, h, clients, data, engine: str, rounds: int,
+                 local_steps: int, batch_size: int) -> float:
+    orch = FederatedOrchestrator(model, h, clients, data,
+                                 local_steps=local_steps,
+                                 batch_size=batch_size, seed=0,
+                                 timing="deterministic", engine=engine)
+    orch._warmup()
+    placement = np.arange(h.dimensions)
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        if engine == "batched":
+            stacked, _ = orch._train_all_batched(r)
+            orch.params, _ = orch._agg_batched(stacked, placement)
+        else:
+            new_params, _, _ = orch._round_loop(r, placement)
+            orch.params = new_params
+    return (time.perf_counter() - t0) / rounds
+
+
+def bench_swarm_eval(n_clients: int, seed: int = 0,
+                     particles: int = 10) -> dict:
+    h = choose_fl_hierarchy(n_clients)
+    pool = ClientPool.random(n_clients, seed=seed)
+    rng = np.random.default_rng(seed)
+    tt = TwoTierCostModel(h, pool, pod_of=rng.integers(0, 4, n_clients))
+    placements = np.stack([rng.permutation(n_clients)[: h.dimensions]
+                           for _ in range(particles)]).astype(np.int32)
+    tt.batch_tpd(placements)                      # warm caches
+    reps = 200
+
+    def best(f, outer=5, inner=reps):
+        ts = []
+        for _ in range(outer):
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                f()
+            ts.append((time.perf_counter() - t0) / inner)
+        return min(ts)
+
+    tb = best(lambda: np.asarray(tt.batch_tpd(placements)))
+    ts = best(lambda: np.asarray([tt.fitness(p) for p in placements]),
+              inner=5)
+    return {"batch_ms": tb * 1e3, "scalar_ms": ts * 1e3,
+            "speedup": ts / tb}
+
+
+def main(clients=(16, 32, 64, 128, 256), rounds: int = 3,
+         local_steps: int = 4, batch_size: int = 8,
+         full_mlp: bool = False, loop_cap: int = 256) -> dict:
+    cfg = get_config("paper-mlp-1m8")
+    if not full_mlp:
+        cfg = cfg.replace(d_model=64)            # emulation-scale MLP
+    model = get_model(cfg)
+    print(f"== round engine sweep: {cfg.d_model=} {local_steps=} "
+          f"{batch_size=} {rounds=} ==")
+    results = {"config": {"d_model": cfg.d_model,
+                          "local_steps": local_steps,
+                          "batch_size": batch_size}, "sweep": []}
+    for n in clients:
+        h = choose_fl_hierarchy(n)
+        pool = ClientPool.random(h.total_clients, seed=0)
+        data = make_federated_dataset(cfg, h.total_clients, seed=0)
+        tb = bench_engine(model, h, pool, data, "batched", rounds,
+                          local_steps, batch_size)
+        tl = (bench_engine(model, h, pool, data, "loop", rounds,
+                           local_steps, batch_size)
+              if n <= loop_cap else float("nan"))
+        sw = bench_swarm_eval(h.total_clients)
+        row = {"clients": h.total_clients, "slots": h.dimensions,
+               "batched_s": tb, "loop_s": tl,
+               "round_speedup": tl / tb,
+               "swarm_eval_speedup": sw["speedup"]}
+        results["sweep"].append(row)
+        print(f"n={h.total_clients:4d} slots={h.dimensions:3d} | "
+              f"batched {tb:7.3f}s/round  loop {tl:7.3f}s/round  "
+              f"-> {tl / tb:5.1f}x | swarm eval {sw['speedup']:5.1f}x "
+              f"({sw['scalar_ms']:.2f} -> {sw['batch_ms']:.2f} ms)")
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "round_engine.json").write_text(json.dumps(results, indent=1))
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--clients", type=int, nargs="+",
+                    default=[16, 32, 64, 128, 256])
+    ap.add_argument("--full", action="store_true",
+                    help="use the 1.8M-param paper MLP (bandwidth-bound "
+                         "on CPU; the engines converge)")
+    args = ap.parse_args()
+    main(clients=tuple(args.clients), rounds=args.rounds,
+         local_steps=args.local_steps, batch_size=args.batch_size,
+         full_mlp=args.full)

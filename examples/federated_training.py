@@ -27,6 +27,10 @@ ap.add_argument("--rounds", type=int, default=200)
 ap.add_argument("--clients", type=int, default=15)
 ap.add_argument("--strategies", nargs="+",
                 default=["pso", "random", "uniform"])
+ap.add_argument("--engine", choices=["auto", "loop", "batched"],
+                default="auto",
+                help="'batched' (default via auto): one vmap'd jit per "
+                     "round; 'loop': per-client dispatch (seed behavior)")
 args = ap.parse_args()
 
 cfg = get_config("paper-mlp-1m8")
@@ -42,7 +46,8 @@ for strat_name in args.strategies:
     strategy = make_strategy(strat_name, hierarchy, seed=0, clients=clients,
                              cost_model=CostModel(hierarchy, clients))
     orch = FederatedOrchestrator(model, hierarchy, clients, data,
-                                 local_steps=2, batch_size=32, seed=0)
+                                 local_steps=2, batch_size=32, seed=0,
+                                 engine=args.engine)
     res = orch.run(strategy, rounds=args.rounds)
     results[strat_name] = res
     s = res.summary()

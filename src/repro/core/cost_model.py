@@ -65,67 +65,160 @@ class CostModel:
     # ------------------------------------------------------------------
     # vectorized path (all particles at once, jit'd)
     # ------------------------------------------------------------------
-    def _static_tables(self):
-        h = self.hierarchy
-        levels = jnp.asarray(h.levels)                       # (slots,)
-        # child count per slot for a *canonical* trainer split: W for
-        # internal slots; per-leaf trainer counts for leaves.
-        n_pool = h.total_clients - h.dimensions
-        n_leaves = h.n_leaves
-        base = n_pool // n_leaves
-        extra = n_pool % n_leaves
-        counts = []
-        for s in range(h.dimensions):
-            if h.children_slots(s):
-                counts.append(h.width)
-            else:
-                leaf_idx = s - h.level_starts[h.depth - 1]
-                counts.append(base + (1 if leaf_idx < extra else 0))
-        return levels, jnp.asarray(counts, jnp.float32)
+    # a 10-particle swarm over a few hundred clients is a handful of
+    # sub-microsecond array ops; below this many placement entries the
+    # numpy evaluator beats the jit'd one (per-op XLA-CPU overhead)
+    _NP_FASTPATH_ELEMS = 32768
 
-    def _make_batch_tpd(self):
-        """Build the jit'd (P, slots) -> (P,) TPD evaluator.
+    def _make_batch_tpd(self, xp=None):
+        """Build the (P, slots) -> (P,) TPD evaluator over namespace
+        ``xp`` (numpy or jax.numpy; the jax build is jit'd).
 
-        Uses the canonical trainer split (uniform mdatasize makes the TPD
-        independent of *which* trainers land where — only counts matter),
-        which is exactly the paper's uniform-mdatasize simulation.
+        Mirrors the scalar path exactly: the canonical round-robin
+        trainer split is recomputed per particle (rank of each unplaced
+        client in ascending id order, mod n_leaves), so heterogeneous
+        ``mdatasize`` charges the ACTUAL per-child loads — not a mean —
+        and subclasses can layer per-edge costs (``pod_of`` + ICI/DCN
+        rates, the TwoTier model) on true child identities.
         """
-        levels, counts = self._static_tables()
-        pspeed = jnp.asarray(self.clients.pspeed, jnp.float32)
-        mds = jnp.asarray(self.clients.mdatasize, jnp.float32)
-        memcap = jnp.asarray(self.clients.memcap, jnp.float32)
-        n_levels = self.hierarchy.depth
+        h = self.hierarchy
+        C, D, depth = h.total_clients, h.dimensions, h.depth
+        n_leaves = h.n_leaves
+        leaf_start = h.level_starts[depth - 1]
+        kids_np = np.full((D, h.width), -1, np.int32)
+        for s in range(D):
+            ks = h.children_slots(s)
+            kids_np[s, : len(ks)] = ks
         penalty = self.memory_penalty
+        pod_np = getattr(self, "pod_of", None)
+        ici = float(getattr(self, "ici_cost", 0.0))
+        dcn = float(getattr(self, "dcn_cost", 0.0))
+        # level boundaries are static: per-level max is a sliced reduce
+        # (scatter/segment ops are 50x slower than dense math on CPU XLA,
+        # so the whole evaluator is dense: one-hot einsums, no scatter)
+        level_bounds = [(h.level_starts[l], h.level_starts[l + 1])
+                        for l in range(depth)]
 
-        @jax.jit
-        def batch_tpd(placements):
-            host_speed = pspeed[placements]                   # (P, slots)
-            host_mds = mds[placements]
-            # uniform mdatasize: children contribute counts * mdatasize
-            load = host_mds + counts[None, :] * mds.mean()
-            delay = load / host_speed
+        if xp is None:
+            xp = jnp
+        if xp is jnp:
+            def bincount(idx, w, m):
+                return jnp.bincount(
+                    idx.ravel(),
+                    weights=None if w is None else w.ravel(), length=m)
+        else:
+            def bincount(idx, w, m):
+                return np.bincount(
+                    idx.ravel(),
+                    weights=None if w is None else w.ravel(),
+                    minlength=m)
+        kids = xp.asarray(kids_np)
+        kids_valid = kids >= 0
+        is_leaf_slot = xp.asarray(h.levels == depth - 1)
+        slot_leaf_idx = xp.clip(xp.arange(D) - leaf_start, 0, n_leaves - 1)
+        f32 = np.float32
+        # stacked client-attribute table: ONE fancy-index gathers every
+        # per-host attribute (numpy per-op dispatch is the floor here)
+        have_pods = pod_np is not None
+        attr_rows = [self.clients.mdatasize, 1.0 / self.clients.pspeed,
+                     self.clients.memcap]
+        if have_pods:
+            attr_rows.append(np.asarray(pod_np))  # pod ids exact in f32
+        attrs = xp.asarray(np.stack(attr_rows).astype(f32))      # (A, C)
+        mds = attrs[0]
+        pods_f = attrs[3] if have_pods else None
+        level_starts_np = np.asarray(h.level_starts[:-1], np.int32)
+
+        def batch(placements):                         # (P, D) int
+            placements = placements.astype(np.int32)
+            P = placements.shape[0]
+            p_off = xp.arange(P)[:, None]
+            # placed mask via bincount, not a (P, D, C) compare
+            placed = bincount(placements + C * p_off, None,
+                              P * C).reshape(P, C)
+            unplaced = placed == 0
+            t_mds = xp.where(unplaced, mds[None], f32(0.0))
+            # canonical trainer split: rank among unplaced ids, mod leaves
+            leaf_of = (xp.cumsum(unplaced, axis=1) - 1) % n_leaves
+            leaf_bins = leaf_of + n_leaves * p_off
+
+            host = attrs[:, placements]                          # (A, P, D)
+            kid_host = placements[:, xp.clip(kids, 0, D - 1)]    # (P, D, W)
+            kid_attr = attrs[:, kid_host]                        # (A,P,D,W)
+            kid_mds = xp.where(kids_valid[None], kid_attr[0], f32(0.0))
+
+            if have_pods:  # TwoTier per-edge transfer costs
+                host_pod = host[3]                               # (P, D)
+                kid_rate = xp.where(kid_attr[3] == host_pod[:, :, None],
+                                    f32(ici), f32(dcn))
+                edge_int = xp.sum(
+                    xp.where(kids_valid[None], kid_mds * kid_rate,
+                             f32(0.0)), axis=2)
+                t_host_pod = host_pod.reshape(-1)[
+                    (leaf_start + leaf_of) + D * p_off]          # (P, C)
+                t_rate = xp.where(pods_f[None] == t_host_pod,
+                                  f32(ici), f32(dcn))
+                # one bincount for both leaf accumulators: trainer loads
+                # in the first P*L bins, edge costs in the second
+                two = bincount(
+                    xp.concatenate([leaf_bins,
+                                    leaf_bins + P * n_leaves], axis=0),
+                    xp.concatenate([t_mds, t_mds * t_rate], axis=0),
+                    2 * P * n_leaves)
+                leaf_load = two[: P * n_leaves].reshape(P, n_leaves)
+                edge_leaf = two[P * n_leaves:].reshape(P, n_leaves)
+            else:
+                leaf_load = bincount(leaf_bins, t_mds,
+                                     P * n_leaves).reshape(P, n_leaves)
+
+            child_load = xp.where(is_leaf_slot[None],
+                                  leaf_load[:, slot_leaf_idx].astype(f32),
+                                  xp.sum(kid_mds, axis=2))
+            load = host[0] + child_load
+            delay = load * host[1]
             if penalty > 0:
-                over = jnp.maximum(0.0, load - memcap[placements])
+                over = xp.maximum(f32(0.0), load - host[2])
                 delay = delay * (1.0 + penalty * over /
-                                 jnp.maximum(memcap[placements], 1e-9))
+                                 xp.maximum(host[2], f32(1e-9)))
+            if have_pods:
+                delay = delay + xp.where(is_leaf_slot[None],
+                                         edge_leaf[:, slot_leaf_idx
+                                                   ].astype(f32),
+                                         edge_int)
 
-            def per_particle(d):
-                return jax.ops.segment_max(d, levels, num_segments=n_levels)
+            if xp is np:  # per-level max in one reduceat call
+                level_max = np.maximum.reduceat(delay, level_starts_np,
+                                                axis=1)
+                return level_max.sum(axis=1)
+            level_max = [xp.max(delay[:, a:b], axis=1)
+                         for a, b in level_bounds]
+            return xp.sum(xp.stack(level_max, axis=1), axis=1)
 
-            level_max = jax.vmap(per_particle)(delay)         # (P, levels)
-            return jnp.sum(level_max, axis=1)
+        return jax.jit(batch) if xp is jnp else batch
 
-        return batch_tpd
+    def _client_token(self) -> tuple:
+        """Cheap fingerprint of the client attrs baked into the cached
+        evaluators — rebuilt on mismatch so in-place ClientPool edits
+        (a pattern the tests use) can't serve stale TPDs."""
+        pod = getattr(self, "pod_of", None)
+        return (self.clients.mdatasize.tobytes(),
+                self.clients.pspeed.tobytes(),
+                self.clients.memcap.tobytes(),
+                None if pod is None else np.asarray(pod).tobytes())
 
-    def batch_tpd(self, placements: jnp.ndarray) -> jnp.ndarray:
-        fn = getattr(self, "_batch_tpd_fn", None)
-        if fn is None:
-            fn = self._make_batch_tpd()
-            object.__setattr__(self, "_batch_tpd_fn", fn)
-        return fn(placements)
+    def batch_tpd(self, placements) -> np.ndarray:
+        placements = np.asarray(placements, np.int32)
+        small = placements.size // max(self.hierarchy.dimensions, 1) \
+            * self.hierarchy.total_clients <= self._NP_FASTPATH_ELEMS
+        attr = "_batch_tpd_np" if small else "_batch_tpd_jax"
+        token = self._client_token()
+        cached = getattr(self, attr, None)
+        if cached is None or cached[0] != token:
+            cached = (token, self._make_batch_tpd(np if small else jnp))
+            object.__setattr__(self, attr, cached)
+        return cached[1](placements)
 
     def batch_fitness(self, placements) -> np.ndarray:
-        placements = jnp.asarray(np.asarray(placements, np.int32))
         return -np.asarray(self.batch_tpd(placements))
 
 
@@ -157,12 +250,9 @@ class TwoTierCostModel(CostModel):
         comm = sum(self._edge_cost(host, c) for c in children)
         return base + comm
 
-    # the vectorized swarm evaluator assumes position-independent trainer
-    # contributions, which no longer holds (pods!) — fall back to the
-    # scalar path for correctness.
-    def batch_fitness(self, placements) -> np.ndarray:
-        return np.asarray([self.fitness(np.asarray(p, np.int64))
-                           for p in placements], np.float64)
+    # batch_tpd/batch_fitness are inherited: the base vectorized path
+    # reconstructs true child identities per particle, so the pod-aware
+    # edge costs ride the same jit'd evaluator (no scalar fallback).
 
     def cross_pod_edges(self, placement) -> tuple:
         """(cross, total) aggregation edges — the locality metric."""

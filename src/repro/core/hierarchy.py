@@ -18,9 +18,41 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import cached_property
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+@dataclass(frozen=True)
+class LevelPlan:
+    """Flattened gather/segment tables for ONE aggregation level.
+
+    The level's clusters are laid out back-to-back, each as
+    ``[host, child_1, ..., child_k]``; ``seg`` maps every entry to its
+    cluster. ``src`` indexes the level's value pool: client ids for the
+    deepest level, and for internal levels either a client id (< C, the
+    host's own update) or ``C + j`` (the j-th cluster value of the level
+    below). ``member_clients`` is the client id *charged* for each entry
+    (eq. 6 payloads: a child slot is carried by its host client), which
+    is what deterministic timing and the cost model consume.
+    """
+    src: np.ndarray             # (M,) int32 indices into the level pool
+    seg: np.ndarray             # (M,) int32 cluster index, sorted ascending
+    member_clients: np.ndarray  # (M,) int32 client id charged per entry
+    hosts: np.ndarray           # (G,) int32 host client id per cluster
+    n_parts: np.ndarray         # (G,) int32 member count per cluster
+    n_clusters: int
+
+
+@dataclass(frozen=True)
+class RoundPlan:
+    """Per-level segment-sum plans for one placement, deepest level first.
+
+    Shapes are placement-independent (the canonical round-robin trainer
+    split fixes every cluster's member count), so jit'd consumers compile
+    once per hierarchy and stream each round's index tables as data.
+    """
+    levels: Tuple[LevelPlan, ...]
 
 
 @dataclass(frozen=True)
@@ -141,6 +173,50 @@ class Hierarchy:
                 groups.append(sorted(children[s] + [int(placement[s])]))
             out.append(groups)
         return out
+
+    def round_plan(self, placement: Sequence[int]) -> RoundPlan:
+        """Segment-sum tables for one round's aggregation (deepest first).
+
+        Member ordering inside each cluster matches the sequential
+        reference (``hierarchical_fedavg``): host first, then children —
+        so a segment reduction reproduces the same partial-sum grouping.
+        """
+        placement = np.asarray(placement, np.int64)
+        trainers = self.trainer_assignment(placement)
+        C = self.total_clients
+        out: List[LevelPlan] = []
+        for level in range(self.depth - 1, -1, -1):
+            start, stop = self.level_starts[level], self.level_starts[level + 1]
+            src: List[int] = []
+            mem: List[int] = []
+            seg: List[int] = []
+            hosts: List[int] = []
+            counts: List[int] = []
+            for g, s in enumerate(range(start, stop)):
+                host = int(placement[s])
+                e_src, e_mem = [host], [host]
+                kids = self.children_slots(s)
+                if kids:
+                    child_base = self.level_starts[level + 1]
+                    e_src += [C + (k - child_base) for k in kids]
+                    e_mem += [int(placement[k]) for k in kids]
+                else:
+                    li = s - self.level_starts[self.depth - 1]
+                    e_src += list(trainers[li])
+                    e_mem += list(trainers[li])
+                src += e_src
+                mem += e_mem
+                seg += [g] * len(e_src)
+                hosts.append(host)
+                counts.append(len(e_src))
+            out.append(LevelPlan(
+                src=np.asarray(src, np.int32),
+                seg=np.asarray(seg, np.int32),
+                member_clients=np.asarray(mem, np.int32),
+                hosts=np.asarray(hosts, np.int32),
+                n_parts=np.asarray(counts, np.int32),
+                n_clusters=stop - start))
+        return RoundPlan(levels=tuple(out))
 
     def validate_placement(self, placement: Sequence[int]) -> None:
         p = np.asarray(placement, np.int64)

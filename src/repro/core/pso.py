@@ -49,7 +49,9 @@ class SwarmHistory:
 
     def as_dict(self) -> dict:
         return {
-            "per_particle": np.stack(self.per_particle).tolist(),
+            # np.stack([]) raises, so guard the no-record case
+            "per_particle": (np.stack(self.per_particle).tolist()
+                             if self.per_particle else []),
             "best": self.best, "worst": self.worst, "mean": self.mean,
         }
 

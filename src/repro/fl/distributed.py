@@ -32,6 +32,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.hierarchy import Hierarchy
 from repro.fl.aggregation import AggregationPlan, flat_psum, hierarchical_psum
+from repro.kernels import compat
 from repro.models.api import Model
 from repro.models.sharding import ShardingPolicy
 
@@ -156,19 +157,16 @@ class FLTrainStep:
                     out = flat_psum(squeezed, plan, "data", pod_axis)
                 return jax.tree.map(lambda x: x[None], out)
 
+            # Full-manual over every mesh axis: the body is elementwise
+            # (grouped psums over pod/data), so model-axis shards pass
+            # through untouched. Partial-auto shard_map would also work
+            # on current JAX, but on 0.4.x it lowers axis_index to a
+            # PartitionId op the CPU SPMD partitioner rejects.
             specs = self.stacked_param_pspecs()
-            manual = set(a for a in ("pod", "data") if a in mesh.axis_names)
-
-            def spec_manual_only(spec):
-                return P(*[s if (s in manual or (isinstance(s, tuple))) else None
-                           for s in spec])
-
-            manual_specs = jax.tree.map(spec_manual_only, specs,
-                                        is_leaf=lambda s: isinstance(s, P))
-            return jax.shard_map(
+            return compat.shard_map(
                 agg_body, mesh=mesh,
-                in_specs=(manual_specs,), out_specs=manual_specs,
-                axis_names=manual, check_vma=False,
+                in_specs=(specs,), out_specs=specs,
+                axis_names=set(mesh.axis_names), check_vma=False,
             )(params_stacked)
 
         def round_fn(params_stacked, opt_stacked, batch_stacked):

@@ -4,8 +4,8 @@ This is the single-host emulation of the paper's docker/MQTT deployment
 (Sec. IV-C): N heterogeneous clients train a real model (the paper's
 1.8M-param MLP by default) on non-IID partitions; every round a
 placement strategy proposes the aggregation tree; aggregation is
-actually computed cluster-by-cluster with wall-clock timing; the round's
-Total Processing Delay composes the measured per-cluster times exactly
+actually computed cluster-by-cluster with per-cluster timing; the
+round's Total Processing Delay composes the per-cluster times exactly
 like the physical system would experience them:
 
     TPD = max_c (local train time) + sum_levels max_cluster (agg time)
@@ -14,12 +14,26 @@ Heterogeneity: each client's measured compute time is scaled by
 1/pspeed_c — the emulation analogue of the paper's docker cpu/memory
 limits. The coordinator never reads pspeed to *decide* anything: the
 strategy only ever sees the final TPD (black-box, as in the paper).
+
+Two round engines drive the same semantics:
+
+* ``engine='batched'`` (default): client params ride a leading ``C``
+  dim; local training is ONE jit'd ``vmap``-of-``scan`` per round (per
+  batch-shape bucket) and aggregation is ONE jit'd weighted
+  ``segment_sum`` per tree level, driven by ``Hierarchy.round_plan``
+  index tables. This is what scales the emulation past a few dozen
+  clients (benchmarks/bench_round_engine.py sweeps 16 -> 256).
+* ``engine='loop'``: the original per-client / per-cluster dispatch.
+  Its wall-clock timing is per-cluster-faithful (the docker-faithful
+  'measured' mode on a quiet box); the batched engine necessarily
+  *attributes* measured wall time across clients/clusters by load share
+  instead. Deterministic timing is identical between engines.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,9 +43,8 @@ import jax.numpy as jnp
 from repro.core.hierarchy import ClientPool, Hierarchy
 from repro.core.placement import PlacementStrategy
 from repro.data.synthetic import FederatedDataset
-from repro.fl.aggregation import hierarchical_fedavg
-from repro.models.api import Model, make_train_step
-from repro.optim import sgd
+from repro.fl.aggregation import SegmentAggregator
+from repro.models.api import Model
 from repro.utils.trees import tree_weighted_sum
 
 
@@ -60,13 +73,17 @@ class FederatedRunResult:
         return float(self.tpds.sum())
 
     def summary(self) -> dict:
+        if not self.rounds:  # zero rounds: well-defined empties, no NaN
+            return {"strategy": self.strategy, "rounds": 0,
+                    "total_tpd": 0.0, "mean_tpd": 0.0,
+                    "last10_mean_tpd": 0.0, "final_accuracy": 0.0}
         return {
             "strategy": self.strategy,
             "rounds": len(self.rounds),
             "total_tpd": self.total_processing_time,
             "mean_tpd": float(self.tpds.mean()),
             "last10_mean_tpd": float(self.tpds[-10:].mean()),
-            "final_accuracy": self.rounds[-1].accuracy if self.rounds else 0.0,
+            "final_accuracy": self.rounds[-1].accuracy,
         }
 
 
@@ -78,11 +95,15 @@ class FederatedOrchestrator:
                  local_lr: float = 0.05, local_steps: int = 4,
                  batch_size: int = 32, time_scale: float = 1.0,
                  comm_latency: float = 0.0, seed: int = 0,
-                 rng_noise: float = 0.0, timing: str = "measured"):
+                 rng_noise: float = 0.0, timing: str = "measured",
+                 engine: str = "auto"):
         """``timing``: 'measured' uses wall-clock (the docker-faithful
         mode — requires a quiet machine); 'deterministic' charges eq.6
         unit-work/pspeed delays through the SAME black-box interface
-        (reproducible on loaded CI boxes). Training math is identical."""
+        (reproducible on loaded CI boxes). Training math is identical.
+
+        ``engine``: 'batched' (vmap'd clients + segment-sum levels),
+        'loop' (per-client dispatch), or 'auto' (batched)."""
         assert len(clients) == hierarchy.total_clients == data.n_clients
         self.model = model
         self.hierarchy = hierarchy
@@ -96,6 +117,8 @@ class FederatedOrchestrator:
         self.rng_noise = rng_noise
         assert timing in ("measured", "deterministic")
         self.timing = timing
+        assert engine in ("auto", "loop", "batched")
+        self.engine = "batched" if engine == "auto" else engine
 
         self.params = model.init(jax.random.key(seed))
         self.local_lr = local_lr
@@ -104,11 +127,39 @@ class FederatedOrchestrator:
         self._eval = jax.jit(lambda p, b: model.loss_fn(p, b))
         self.weights = data.client_weights()
 
-        # weighted-sum of a cluster's updates, jit'd once
+        # weighted-sum of a cluster's updates, jit'd once (loop engine)
         self._wsum = jax.jit(
             lambda trees, w: tree_weighted_sum(trees, w))
 
-    # ------------------------------------------------------------------
+        # batched engine state (built lazily in _warmup)
+        self._agg: Optional[SegmentAggregator] = None
+        self._local_fns: Dict[tuple, Callable] = {}
+
+    # ==================================================================
+    # deterministic per-cluster delay (eq. 6), shared by both engines
+    # ==================================================================
+    # eq. 6 payload units / this = charged delay units: puts aggregation
+    # in the paper's regime — the 30 MB JSON model on a 64 MB container
+    # dominated the 20-30 s docker rounds, and placement moves exactly
+    # this term
+    EQ6_PAYLOAD_SCALE = 10.0
+
+    def _det_cluster_work(self, member_clients: Sequence[int]) -> float:
+        """eq. 6 payload units: own + ACTUAL children model payloads."""
+        mds = self.clients.mdatasize
+        return float(sum(mds[int(c)] for c in member_clients)) \
+            / self.EQ6_PAYLOAD_SCALE
+
+    def _cluster_time(self, host: int, dt: float, n_parts: int) -> float:
+        """Emulated heterogeneity + comm hops + optional noise."""
+        t = dt / self.clients.pspeed[host] + self.comm_latency * n_parts
+        if self.rng_noise:
+            t *= 1.0 + self.rng.normal(0, self.rng_noise)
+        return t
+
+    # ==================================================================
+    # loop engine (original per-client / per-cluster dispatch)
+    # ==================================================================
     def _local_train(self, client_id: int, round_idx: int):
         """Client's local steps. Returns (new_params, loss, measured_time)."""
         params = self.params
@@ -133,7 +184,7 @@ class FederatedOrchestrator:
 
         Returns (global_params, total_agg_time) where total_agg_time =
         sum over levels of the level's max cluster time (eq. 7 semantics,
-        with *measured* times instead of the model's estimate).
+        with per-cluster times instead of the model's estimate).
         """
         h = self.hierarchy
         weighted = [jax.tree.map(lambda x, w=w: x * w, u)
@@ -146,37 +197,179 @@ class FederatedOrchestrator:
             for s in range(h.level_starts[level], h.level_starts[level + 1]):
                 host = int(placement[s])
                 parts = [weighted[host]]
+                members = [host]
                 kids = h.children_slots(s)
                 if kids:
                     parts.extend(slot_value[k] for k in kids)
+                    members.extend(int(placement[k]) for k in kids)
                 else:
                     li = s - h.level_starts[h.depth - 1]
                     parts.extend(weighted[t] for t in trainers[li])
+                    members.extend(trainers[li])
                 t0 = time.perf_counter()
                 acc = self._wsum(parts, [1.0] * len(parts))
                 jax.block_until_ready(jax.tree.leaves(acc)[0])
                 if self.timing == "deterministic":
-                    # eq. 6: load = own + children model payloads (units).
-                    # /10 puts aggregation in the paper's regime — the
-                    # 30 MB JSON model on a 64 MB container dominated the
-                    # 20-30 s docker rounds, and placement moves exactly
-                    # this term.
-                    dt = float(self.clients.mdatasize[host]
-                               + sum(self.clients.mdatasize[0]
-                                     for _ in range(len(parts) - 1))) / 10.0
+                    dt = self._det_cluster_work(members)
                 else:
                     dt = time.perf_counter() - t0
                 slot_value[s] = acc
-                # emulated heterogeneity: host speed scales the measured
-                # compute; each child contributes a comm hop
-                cluster_t = (dt / self.clients.pspeed[host]
-                             + self.comm_latency * len(parts))
-                if self.rng_noise:
-                    cluster_t *= 1.0 + self.rng.normal(0, self.rng_noise)
+                cluster_t = self._cluster_time(host, dt, len(parts))
                 level_max = max(level_max, cluster_t)
             total += level_max
         return slot_value[0], total
 
+    def _round_loop(self, r: int, placement: np.ndarray):
+        updates, train_times = [], []
+        for c in range(self.hierarchy.total_clients):
+            p, _, t = self._local_train(c, r)
+            updates.append(p)
+            train_times.append(t)
+        new_params, agg_time = self._aggregate(updates, placement)
+        return new_params, max(train_times), agg_time
+
+    # ==================================================================
+    # batched engine: vmap'd local steps + per-level segment sums
+    # ==================================================================
+    def _collect_batches(self, round_idx: int):
+        """Per-client step batches, bucketed by batch shape.
+
+        Returns [(client_ids, stacked)] where stacked leaves are
+        (C_bucket, local_steps, batch, ...) — identical values to what
+        the loop engine would feed step-by-step.
+        """
+        C = self.hierarchy.total_clients
+        buckets: Dict[tuple, list] = {}
+        for c in range(C):
+            steps = [self.data.client_batch(
+                c, self.batch_size, round_idx * self.local_steps + s)
+                for s in range(self.local_steps)]
+            sig = tuple(sorted((k, v.shape, str(np.asarray(v).dtype))
+                               for k, v in steps[0].items()))
+            buckets.setdefault(sig, []).append((c, steps))
+        out = []
+        for sig, entries in buckets.items():
+            ids = np.asarray([c for c, _ in entries], np.int64)
+            keys = entries[0][1][0].keys()
+            stacked = {k: np.stack([np.stack([np.asarray(st[k])
+                                              for st in steps])
+                                    for _, steps in entries])
+                       for k in keys}
+            out.append((ids, stacked))
+        return out
+
+    def _local_fn_for(self, sig: tuple) -> Callable:
+        fn = self._local_fns.get(sig)
+        if fn is not None:
+            return fn
+        loss_fn = self.model.loss_fn
+        lr = self.local_lr
+
+        def local_all(params, batches):
+            def per_client(client_batches):
+                def step(p, b):
+                    l, g = jax.value_and_grad(
+                        lambda q: loss_fn(q, b)[0])(p)
+                    return jax.tree.map(
+                        lambda x, gg: x - lr * gg, p, g), l
+
+                final, losses = jax.lax.scan(step, params, client_batches)
+                return final, losses[-1]
+
+            return jax.vmap(per_client)(batches)
+
+        fn = jax.jit(local_all)
+        self._local_fns[sig] = fn
+        return fn
+
+    def _train_all_batched(self, round_idx: int):
+        """All clients' local training. Returns (stacked_updates (C,...),
+        train_times (C,))."""
+        C = self.hierarchy.total_clients
+        t0 = time.perf_counter()
+        pieces: List[Tuple[np.ndarray, object]] = []
+        for ids, stacked in self._collect_batches(round_idx):
+            sig = tuple(sorted((k, v.shape[2:], str(v.dtype))
+                               for k, v in stacked.items()))
+            new_p, _ = self._local_fn_for(sig)(self.params, stacked)
+            pieces.append((ids, new_p))
+        jax.block_until_ready(jax.tree.leaves(pieces[-1][1])[0])
+        wall = time.perf_counter() - t0
+
+        if len(pieces) == 1 and np.array_equal(
+                pieces[0][0], np.arange(C)):
+            stacked_updates = pieces[0][1]
+        else:
+            order = np.concatenate([ids for ids, _ in pieces])
+            perm = jnp.asarray(np.argsort(order))
+            stacked_updates = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0)[perm],
+                *[p for _, p in pieces])
+
+        if self.timing == "deterministic":
+            per_client_dt = float(self.local_steps)
+        else:
+            # one fused dispatch: attribute wall time evenly (the loop
+            # engine measures each client; here C clients share the call)
+            per_client_dt = wall / C
+        train_times = per_client_dt / self.clients.pspeed
+        return stacked_updates, train_times
+
+    def _agg_batched(self, stacked_updates, placement: np.ndarray):
+        """Per-level segment-sum aggregation + per-cluster timing charge.
+
+        Deterministic timing charges eq. 6 from the plan's ACTUAL member
+        payloads (same formula, same rng stream as the loop engine);
+        measured timing splits each level's wall clock across its
+        clusters by payload share before the pspeed/comm composition.
+        """
+        h = self.hierarchy
+        plan = h.round_plan(placement)
+        mds = self.clients.mdatasize
+
+        def level_time(lp, cluster_dt) -> float:
+            """pspeed/comm/noise composition, vectorized per level (one
+            rng draw per cluster, same stream order as the loop engine)."""
+            ts = (cluster_dt / self.clients.pspeed[lp.hosts]
+                  + self.comm_latency * lp.n_parts)
+            if self.rng_noise:
+                ts = ts * (1.0 + self.rng.normal(0, self.rng_noise,
+                                                 size=lp.n_clusters))
+            return float(ts.max())
+
+        if self.timing == "deterministic":
+            # charge eq. 6 analytically; run the whole aggregation as
+            # ONE jit call (no per-level host syncs needed)
+            new_global = self._agg.aggregate_fused(
+                stacked_updates, self.weights, plan)
+            total = 0.0
+            for lp in plan.levels:
+                loads = np.zeros(lp.n_clusters)
+                np.add.at(loads, lp.seg, mds[lp.member_clients])
+                total += level_time(lp, loads / self.EQ6_PAYLOAD_SCALE)
+            return new_global, total
+
+        weighted = self._agg.weighted(stacked_updates, self.weights)
+        total = 0.0
+        vals = None
+        for idx, lp in enumerate(plan.levels):
+            t0 = time.perf_counter()
+            vals = self._agg.run_level(idx, weighted, vals, plan)
+            jax.block_until_ready(jax.tree.leaves(vals)[0])
+            wall = time.perf_counter() - t0
+            loads = np.zeros(lp.n_clusters)
+            np.add.at(loads, lp.seg, mds[lp.member_clients])
+            total += level_time(lp, wall * loads / max(loads.sum(), 1e-12))
+        return jax.tree.map(lambda x: x[0], vals), total
+
+    def _round_batched(self, r: int, placement: np.ndarray):
+        if self._agg is None:
+            self._agg = SegmentAggregator(self.hierarchy)
+        stacked_updates, train_times = self._train_all_batched(r)
+        new_params, agg_time = self._agg_batched(stacked_updates, placement)
+        return new_params, float(np.max(train_times)), agg_time
+
+    # ==================================================================
     def _evaluate(self, n: int = 512) -> tuple:
         if hasattr(self.data, "eval_batch"):
             batch = self.data.eval_batch(n)
@@ -191,6 +384,18 @@ class FederatedOrchestrator:
     def _warmup(self) -> None:
         """Trace/compile everything once so round-0 timing is not skewed
         by compilation (the docker system has no such artifact)."""
+        if self.engine == "batched":
+            if self._agg is None:
+                self._agg = SegmentAggregator(self.hierarchy)
+            stacked, _ = self._train_all_batched(0)
+            noise, self.rng_noise = self.rng_noise, 0.0  # keep rng stream
+            try:
+                self._agg_batched(stacked,
+                                  np.arange(self.hierarchy.dimensions))
+            finally:
+                self.rng_noise = noise
+            self._evaluate()
+            return
         batch = self.data.client_batch(0, self.batch_size, 0)
         l, g = self._grad_step(self.params, batch)
         jax.block_until_ready(l)
@@ -211,17 +416,14 @@ class FederatedOrchestrator:
             placement = np.asarray(strategy.propose(r), np.int64)
             self.hierarchy.validate_placement(placement)
 
-            updates, losses, train_times = [], [], []
-            for c in range(self.hierarchy.total_clients):
-                p, l, t = self._local_train(c, r)
-                updates.append(p)
-                losses.append(l)
-                train_times.append(t)
-
-            new_params, agg_time = self._aggregate(updates, placement)
+            if self.engine == "loop":
+                new_params, train_time, agg_time = \
+                    self._round_loop(r, placement)
+            else:
+                new_params, train_time, agg_time = \
+                    self._round_batched(r, placement)
             self.params = new_params
 
-            train_time = max(train_times)
             tpd = (train_time + agg_time) * self.time_scale
             strategy.observe(placement, tpd)
 

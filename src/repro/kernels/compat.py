@@ -1,0 +1,53 @@
+"""Feature-detected shims over JAX API drift.
+
+The repo targets the current JAX API surface (``jax.shard_map``,
+``pltpu.CompilerParams``); older 0.4.x releases spell those
+``jax.experimental.shard_map.shard_map`` (with ``check_rep``/``auto``
+instead of ``check_vma``/``axis_names``) and ``pltpu.TPUCompilerParams``.
+Everything that needs either API goes through this module so a single
+feature-detection decides per interpreter, not per call site.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Optional, Set
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams", "shard_map"]
+
+# pallas-TPU compiler params: renamed TPUCompilerParams -> CompilerParams.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Set[str]] = None,
+              check_vma: bool = True):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``.
+
+    ``axis_names`` follows the new-API convention: the set of mesh axes
+    the body is *manual* over (``None`` = all of them). On old JAX this
+    is translated to the complementary ``auto`` set; ``check_vma`` maps
+    to ``check_rep``.
+    """
+    new = getattr(jax, "shard_map", None)
+    # key on kwarg support, not existence: mid-range releases export
+    # jax.shard_map with the legacy check_rep/auto signature
+    if new is not None and "check_vma" in inspect.signature(new).parameters:
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return new(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=check_vma, **kw)
+
+    if new is None:
+        from jax.experimental.shard_map import shard_map as legacy
+    else:
+        legacy = new
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma, auto=auto)

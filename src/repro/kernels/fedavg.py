@@ -28,6 +28,49 @@ def _fedavg_kernel(x_ref, w_ref, o_ref):
     o_ref[...] = jnp.sum(x * w[:, None], axis=0).astype(o_ref.dtype)
 
 
+def _fedavg_batched_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)        # (1, K, BN)
+    w = w_ref[...].astype(jnp.float32)        # (1, K)
+    o_ref[...] = jnp.sum(x * w[:, :, None], axis=1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def fedavg_batched_pallas(stacked: jnp.ndarray, weights: jnp.ndarray,
+                          block_n: int = DEFAULT_BLOCK_N,
+                          interpret: bool = False) -> jnp.ndarray:
+    """stacked (G, K, N), weights (G, K) -> (G, N): one weighted FedAvg
+    reduction per aggregation cluster, all clusters in one launch.
+
+    TPU-kernel counterpart of the batched round engine's per-level
+    reduction (the engine itself runs ``segment_sum``; this kernel is
+    not yet wired in — it is the TPU lowering for when the emulation
+    moves on-device): a level's clusters are padded to a common fan-in
+    K (zero weights on the padding — adding 0 terms keeps the reference
+    reduction exact) and the grid walks (cluster, block) so every VMEM
+    tile is reused across its K-reduction, same as the single-cluster
+    kernel.
+    """
+    g, k, n = stacked.shape
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, 0), (0, pad)))
+    n_padded = n + pad
+    grid = (g, n_padded // block_n)
+    out = pl.pallas_call(
+        _fedavg_batched_kernel,
+        out_shape=jax.ShapeDtypeStruct((g, n_padded), stacked.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k, block_n), lambda ig, i: (ig, 0, i)),
+            pl.BlockSpec((1, k), lambda ig, i: (ig, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda ig, i: (ig, i)),
+        interpret=interpret,
+    )(stacked, weights)
+    return out[:, :n]
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def fedavg_pallas(stacked: jnp.ndarray, weights: jnp.ndarray,
                   block_n: int = DEFAULT_BLOCK_N,

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.kernels import compat
 from repro.models import common
 from repro.models.sharding import ShardingPolicy
 from repro.models.transformer import (init_decoder_params, logits_fn,
@@ -65,8 +66,11 @@ def make_pp_loss_fn(cfg: ModelConfig, policy: ShardingPolicy, mesh: Mesh,
                                    layers_local)
         return x, aux
 
-    def pp_body(params, batch):
-        stage = jax.lax.axis_index("pod")
+    def pp_body(params, batch, stage_arr):
+        # stage index arrives as a pod-sharded arange instead of
+        # lax.axis_index: partial-auto shard_map on JAX 0.4.x lowers
+        # axis_index to a PartitionId op the CPU SPMD partitioner rejects
+        stage = stage_arr[0]
         tokens = batch["tokens"]          # full batch (replicated on pod)
         labels = batch["labels"]
         b = tokens.shape[0]
@@ -130,14 +134,15 @@ def make_pp_loss_fn(cfg: ModelConfig, policy: ShardingPolicy, mesh: Mesh,
             if _path_str(path).startswith("layers/")
             else P(*((None,) * l.ndim)),
             params)
-        return jax.shard_map(
+        return compat.shard_map(
             pp_body, mesh=mesh,
             in_specs=(param_specs,
-                      jax.tree.map(lambda _: P(), batch)),
+                      jax.tree.map(lambda _: P(), batch),
+                      P("pod")),
             out_specs=(P(), {"xent": P()} if cfg.moe is None else
                        {"xent": P(), "moe_aux": P()}),
             axis_names={"pod"}, check_vma=False,
-        )(params, batch)
+        )(params, batch, jnp.arange(n_stages, dtype=jnp.int32))
 
     return loss_fn
 

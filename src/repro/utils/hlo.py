@@ -412,7 +412,9 @@ def profile_hlo(hlo_text: str) -> HloProfile:
                     prof.flops += f
                     if f:
                         flop_items[f"{cname}/{ins.name}"] += f
-            elif ins.callees and ins.opcode == "while":
+            elif ins.callees and ins.opcode in ("while", "call"):
+                # while bodies run trip_count times; plain calls (XLA CPU
+                # outlines large elementwise graphs into them) run once
                 for cal in ins.callees:
                     walk(cal, mult * ins.trip_count, seen + (cname,))
             elif ins.callees and ins.opcode == "conditional":

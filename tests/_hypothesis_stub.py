@@ -1,0 +1,91 @@
+"""Minimal fixed-seed stand-in for ``hypothesis`` on network-less boxes.
+
+Implements exactly the surface the property tests use — ``given`` over
+positional strategies, ``settings(max_examples=..., deadline=...)``, and
+``strategies.integers/floats/sampled_from/booleans`` — by sampling
+``max_examples`` examples from a deterministic per-test RNG (seeded by
+the test name, so runs are reproducible and order-independent). No
+shrinking, no database, no health checks: this is a fallback so
+``pytest`` collects and meaningfully exercises the properties, not a
+replacement for real hypothesis (install it when you have a network).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value=0, max_value=2**31 - 1) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value=0.0, max_value=1.0, **_ignored) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def lists(elem: _Strategy, min_size=0, max_size=10) -> _Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elem.example(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+class strategies:
+    """Namespace mirror so ``from hypothesis import strategies as st`` and
+    ``st.integers(...)`` keep working against the stub."""
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+
+
+def settings(max_examples: int = 10, **_ignored):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return decorate
+
+
+def given(*strats: _Strategy, **kw_strats: _Strategy):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_stub_max_examples", 10)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                ex_args = tuple(s.example(rng) for s in strats)
+                ex_kw = {k: s.example(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, *ex_args, **kwargs, **ex_kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"stub-hypothesis example {i}/{n} "
+                        f"args={ex_args} kwargs={ex_kw} failed: {e}") from e
+        # keep pytest from fixture-resolving the strategy parameters:
+        # drop the wraps-installed __wrapped__ and present a bare signature
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return decorate

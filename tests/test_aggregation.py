@@ -4,7 +4,10 @@ the result (property-tested, per the paper's claim that the optimizer is
 free to rearrange aggregation without touching model semantics)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # network-less box: fixed-seed fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,10 @@
 """TPD cost model (paper eqs. 6-7) — scalar vs vectorized consistency."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # network-less box: fixed-seed fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.cost_model import CostModel
 from repro.core.hierarchy import ClientPool, Hierarchy
@@ -61,6 +64,73 @@ def test_batch_tpd_with_extra_trainers(seed):
     placements = np.stack([
         rng.permutation(h.total_clients)[: h.dimensions] for _ in range(4)])
     batch = np.asarray(cm.batch_tpd(placements.astype(np.int32)))
+    scalar = np.array([cm.tpd(p) for p in placements])
+    np.testing.assert_allclose(batch, scalar, rtol=1e-5)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_batch_tpd_heterogeneous_mdatasize(seed):
+    """Property: with per-client payload sizes the batch evaluator must
+    charge the ACTUAL trainer/child loads (not a mean)."""
+    rng = np.random.default_rng(seed)
+    h, pool, _ = _setup(extra=int(rng.integers(0, 6)), seed=seed % 5)
+    pool.mdatasize = rng.uniform(1.0, 40.0, h.total_clients)
+    cm = CostModel(h, pool,
+                   memory_penalty=float(rng.choice([0.0, 4.0])))
+    placements = np.stack([
+        rng.permutation(h.total_clients)[: h.dimensions] for _ in range(6)])
+    batch = np.asarray(cm.batch_tpd(placements.astype(np.int32)))
+    scalar = np.array([cm.tpd(p) for p in placements])
+    np.testing.assert_allclose(batch, scalar, rtol=1e-5)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_two_tier_batch_tpd_matches_scalar(seed):
+    """Property: the vectorized TwoTier evaluator (pod gather + per-edge
+    ICI/DCN rates) equals the scalar eq. 6 + edge composition."""
+    from repro.core.cost_model import TwoTierCostModel
+    rng = np.random.default_rng(seed)
+    h, pool, _ = _setup(extra=int(rng.integers(0, 6)), seed=seed % 5)
+    pool.mdatasize = rng.uniform(1.0, 40.0, h.total_clients)
+    tt = TwoTierCostModel(h, pool,
+                          pod_of=rng.integers(0, 4, h.total_clients))
+    placements = np.stack([
+        rng.permutation(h.total_clients)[: h.dimensions] for _ in range(6)])
+    batch = np.asarray(tt.batch_tpd(placements.astype(np.int32)))
+    scalar = np.array([tt.tpd(p) for p in placements])
+    np.testing.assert_allclose(batch, scalar, rtol=1e-5)
+
+
+def test_batch_tpd_jax_and_numpy_paths_agree():
+    """Both namespace builds of the evaluator are live code paths (the
+    numpy one below the small-swarm threshold); pin them to each other."""
+    import jax.numpy as jnp  # noqa: F401
+    h, pool, cm = _setup(extra=3, seed=2)
+    rng = np.random.default_rng(2)
+    pool.mdatasize = rng.uniform(1.0, 40.0, h.total_clients)
+    cm = CostModel(h, pool)
+    placements = np.stack([
+        rng.permutation(h.total_clients)[: h.dimensions]
+        for _ in range(5)]).astype(np.int32)
+    np_fn = cm._make_batch_tpd(np)
+    jax_fn = cm._make_batch_tpd()
+    np.testing.assert_allclose(np.asarray(np_fn(placements)),
+                               np.asarray(jax_fn(placements)), rtol=1e-6)
+
+
+def test_batch_tpd_tracks_in_place_client_mutation():
+    """Mutating the ClientPool after a batch_tpd call must not serve a
+    stale cached evaluator."""
+    h, pool, cm = _setup(seed=4)
+    rng = np.random.default_rng(4)
+    placements = np.stack([
+        rng.permutation(h.total_clients)[: h.dimensions]
+        for _ in range(4)]).astype(np.int32)
+    np.asarray(cm.batch_tpd(placements))          # build + cache
+    pool.mdatasize[:] = rng.uniform(1.0, 40.0, h.total_clients)
+    batch = np.asarray(cm.batch_tpd(placements))
     scalar = np.array([cm.tpd(p) for p in placements])
     np.testing.assert_allclose(batch, scalar, rtol=1e-5)
 

@@ -3,7 +3,10 @@ naive formulation, MoE routing invariants, and the mlstm chunked scan
 vs its sequential step recurrence."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # network-less box: fixed-seed fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp

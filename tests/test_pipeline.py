@@ -1,6 +1,7 @@
 """Pipeline parallelism: GPipe over the pod axis must be numerically
 identical (loss AND grads) to the unpipelined model. Forged 2-pod mesh
 in a subprocess."""
+import inspect
 import json
 import os
 import subprocess
@@ -8,6 +9,9 @@ import sys
 import textwrap
 
 import numpy as np
+import pytest
+
+import jax
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -53,6 +57,14 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.skipif(
+    not hasattr(jax, "shard_map") or
+    "check_vma" not in inspect.signature(jax.shard_map).parameters,
+    reason="JAX 0.4.x partial-auto shard_map cannot lower the pipeline's "
+           "grouped collectives on CPU (XLA hard-CHECKs on "
+           "hlo_sharding_util.cc IsManualSubgroup), and the full-manual "
+           "fallback breaks the 0.4.x shard_map transpose; needs "
+           "jax>=0.5 (jax.shard_map)")
 def test_pipeline_matches_unpipelined():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

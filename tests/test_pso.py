@@ -1,7 +1,10 @@
 """Flag-Swap PSO (paper Sec. III, eqs. 1-4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # network-less box: fixed-seed fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.hierarchy import ClientPool, Hierarchy
 from repro.core.cost_model import CostModel

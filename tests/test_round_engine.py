@@ -1,0 +1,142 @@
+"""The batched round engine vs the sequential loop engine: identical
+training math, identical deterministic TPD, and the eq. 6/7 composition
+contract against the cost model (heterogeneous mdatasize)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.cost_model import CostModel
+from repro.core.hierarchy import ClientPool, Hierarchy
+from repro.core.placement import make_strategy
+from repro.data.synthetic import make_federated_dataset
+from repro.fl.aggregation import (batched_hierarchical_fedavg,
+                                  hierarchical_fedavg)
+from repro.fl.orchestrator import FederatedOrchestrator, FederatedRunResult
+from repro.models import get_model
+
+
+@pytest.fixture(scope="module")
+def mlp_setup():
+    cfg = get_config("paper-mlp-1m8")
+    model = get_model(cfg)
+    h = Hierarchy(depth=2, width=2, trainers_per_leaf=2, n_clients=11)
+    clients = ClientPool.random(h.total_clients, seed=0)
+    data = make_federated_dataset(cfg, h.total_clients, seed=0)
+    return model, h, clients, data
+
+
+def _run(mlp_setup, engine, rounds=4, **kw):
+    model, h, clients, data = mlp_setup
+    strat = make_strategy("pso", h, seed=0)
+    orch = FederatedOrchestrator(model, h, clients, data, local_steps=2,
+                                 batch_size=16, seed=0,
+                                 timing="deterministic", engine=engine, **kw)
+    return orch.run(strat, rounds=rounds)
+
+
+def test_batched_engine_matches_loop_trace(mlp_setup):
+    """The tentpole contract: same per-round loss/accuracy/TPD trace on
+    the paper MLP config (identical training math; fp reassociation in
+    the per-level segment sums is the only permitted delta)."""
+    a = _run(mlp_setup, "loop")
+    b = _run(mlp_setup, "batched")
+    for ra, rb in zip(a.rounds, b.rounds):
+        assert ra.placement == rb.placement
+        assert ra.tpd == rb.tpd                 # deterministic: exact
+        assert ra.accuracy == rb.accuracy
+        assert abs(ra.loss - rb.loss) < 5e-6
+
+
+def test_engines_agree_with_noise_and_comm(mlp_setup):
+    """rng stream parity: per-cluster noise draws must line up exactly."""
+    a = _run(mlp_setup, "loop", rounds=3, rng_noise=0.05, comm_latency=0.01)
+    b = _run(mlp_setup, "batched", rounds=3, rng_noise=0.05,
+             comm_latency=0.01)
+    np.testing.assert_array_equal(a.tpds, b.tpds)
+
+
+@pytest.mark.parametrize("engine", ["loop", "batched"])
+def test_deterministic_tpd_composes_cost_model(engine):
+    """Regression for the child-payload bug (charged mdatasize[0] for
+    every child): with heterogeneous mdatasize, the orchestrator's
+    deterministic agg time must equal the CostModel eq. 6/7 composition
+    (scaled by the /10 emulation factor), for BOTH engines."""
+    cfg = get_config("paper-mlp-1m8")
+    model = get_model(cfg)
+    h = Hierarchy(depth=2, width=2, trainers_per_leaf=2, n_clients=12)
+    clients = ClientPool.random(h.total_clients, seed=3)
+    rng = np.random.default_rng(7)
+    clients.mdatasize = rng.uniform(1.0, 40.0, h.total_clients)
+    data = make_federated_dataset(cfg, h.total_clients, seed=3)
+    placement = rng.permutation(h.total_clients)[: h.dimensions]
+    orch = FederatedOrchestrator(model, h, clients, data, local_steps=1,
+                                 batch_size=8, seed=3,
+                                 timing="deterministic", engine=engine)
+    strat = make_strategy("static", h, placement=placement)
+    res = orch.run(strat, rounds=1)
+    r = res.rounds[0]
+    cm = CostModel(h, clients)
+    assert r.agg_time == pytest.approx(cm.tpd(placement) / 10.0, rel=1e-9)
+    assert r.train_time == pytest.approx(1.0 / clients.pspeed.min())
+    assert r.tpd == pytest.approx(r.train_time + r.agg_time)
+
+
+def test_batched_fedavg_matches_sequential_reference():
+    """segment-sum levels == the per-cluster sequential reference for
+    random placements and weights."""
+    rng = np.random.default_rng(0)
+    for trial in range(5):
+        depth = int(rng.integers(1, 4))
+        width = int(rng.integers(1, 4)) if depth > 1 else 2
+        h = Hierarchy(depth=depth, width=width, trainers_per_leaf=2)
+        n = h.total_clients
+        updates = [
+            {"w": jnp.asarray(rng.standard_normal((3, 4)), jnp.float32),
+             "b": jnp.asarray(rng.standard_normal((5,)), jnp.float32)}
+            for _ in range(n)]
+        w = rng.dirichlet(np.ones(n)).astype(np.float32)
+        placement = rng.permutation(n)[: h.dimensions]
+        ref = hierarchical_fedavg(updates, list(w), h, placement)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *updates)
+        got = batched_hierarchical_fedavg(stacked, w, h, placement)
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-5, atol=2e-6)
+
+
+def test_round_plan_shapes_placement_independent():
+    """Plan tables must have placement-independent shapes (one compile)
+    and host-first member ordering."""
+    h = Hierarchy(depth=3, width=2, trainers_per_leaf=2, n_clients=20)
+    rng = np.random.default_rng(1)
+    p1 = rng.permutation(20)[: h.dimensions]
+    p2 = rng.permutation(20)[: h.dimensions]
+    plan1, plan2 = h.round_plan(p1), h.round_plan(p2)
+    assert len(plan1.levels) == h.depth
+    for l1, l2 in zip(plan1.levels, plan2.levels):
+        assert l1.src.shape == l2.src.shape
+        np.testing.assert_array_equal(l1.seg, l2.seg)  # static segments
+        np.testing.assert_array_equal(l1.n_parts, l2.n_parts)
+    # deepest level: first member of each cluster is the leaf's host
+    leaf = plan1.levels[0]
+    starts = np.searchsorted(leaf.seg, np.arange(leaf.n_clusters))
+    np.testing.assert_array_equal(leaf.src[starts], leaf.hosts)
+
+
+def test_zero_round_summary_is_well_defined():
+    res = FederatedRunResult(strategy="none")
+    s = res.summary()
+    assert s["rounds"] == 0
+    assert s["total_tpd"] == 0.0 and s["mean_tpd"] == 0.0
+    assert s["final_accuracy"] == 0.0
+    assert all(np.isfinite(v) for v in s.values()
+               if isinstance(v, float))
+
+
+def test_empty_swarm_history_as_dict():
+    from repro.core.pso import SwarmHistory
+    d = SwarmHistory().as_dict()
+    assert d == {"per_particle": [], "best": [], "worst": [], "mean": []}
