@@ -1,7 +1,7 @@
 # Tier-1 verification: the full test suite exactly as CI runs it.
 PY ?= python
 
-.PHONY: verify test bench-round bench-fig4
+.PHONY: verify test bench-round bench-fig4 experiments-smoke
 
 verify test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -11,3 +11,20 @@ bench-round:
 
 bench-fig4:
 	PYTHONPATH=src $(PY) benchmarks/bench_fig4_cluster.py --rounds 50
+
+# the CI smoke job, runnable locally: both paper tracks + one event
+# scenario through the experiments CLI, then schema validation
+experiments-smoke:
+	PYTHONPATH=src $(PY) -m repro.experiments run paper-fig4 \
+		--rounds 3 --strategies pso,random \
+		--out artifacts/experiments/fig4_smoke.json
+	PYTHONPATH=src $(PY) -m repro.experiments run paper-fig3 \
+		--rounds 10 --strategies pso --set depth=3 --set width=4 \
+		--out artifacts/experiments/fig3_smoke.json
+	PYTHONPATH=src $(PY) -m repro.experiments run churn \
+		--rounds 10 --seeds 0,1 --strategies pso,random \
+		--out artifacts/experiments/churn_smoke.json
+	PYTHONPATH=src $(PY) -m repro.experiments validate \
+		artifacts/experiments/fig4_smoke.json \
+		artifacts/experiments/fig3_smoke.json \
+		artifacts/experiments/churn_smoke.json

@@ -1,10 +1,14 @@
 """Beyond-paper: drift adaptation (the paper's Sec. VI future work).
 
-A simulated SDFL system whose client speeds are shuffled mid-run (the
+A simulated SDFL system whose client speeds are reversed mid-run (the
 "container got throttled" scenario). Plain Flag-Swap keeps trusting its
 stale swarm memory; the adaptive variant probes the best-known placement
 every few rounds (zero regret while stationary) and re-ignites the swarm
 when the probe contradicts the remembered fitness.
+
+Thin wrapper over the unified experiment API: the drifting world is the
+registered ``drift`` ScenarioSpec (a ``PSpeedDrift`` event at round 60)
+and all three strategies run through ``run_experiment``.
 """
 from __future__ import annotations
 
@@ -13,45 +17,29 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core.cost_model import CostModel
-from repro.core.hierarchy import ClientPool, Hierarchy
-from repro.core.placement import (AdaptivePSOPlacement, PSOPlacement,
-                                  RandomPlacement)
+from repro.experiments import run_experiment
 
 OUT = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
 
 
-def run(drift_round: int = 60, rounds: int = 180, seed: int = 0) -> dict:
-    h = Hierarchy(depth=3, width=2, trainers_per_leaf=2)
-    pool_a = ClientPool.random(h.total_clients, seed=seed)
-    pool_b = ClientPool.random(h.total_clients, seed=seed)
-    pool_b.pspeed = pool_b.pspeed[::-1].copy()   # fast hosts become slow
-    cms = (CostModel(h, pool_a), CostModel(h, pool_b))
-
-    def cost(r, p):
-        return cms[r >= drift_round].tpd(p)
-
+def run(rounds: int = 180, seed: int = 0) -> dict:
+    result = run_experiment(
+        "drift",
+        ["pso", ("pso-adaptive", {"drift_factor": 1.15}), "random"],
+        rounds=rounds, seeds=[seed], progress=False)
     out = {}
-    for strat in (PSOPlacement(h, seed=seed),
-                  AdaptivePSOPlacement(h, seed=seed, drift_factor=1.15),
-                  RandomPlacement(h, seed=seed)):
-        tpds = []
-        for r in range(rounds):
-            p = strat.propose(r)
-            t = cost(r, p)
-            strat.observe(p, t)
-            tpds.append(t)
-        tail = float(np.mean(tpds[-20:]))
-        out[strat.name] = {
-            "total_tpd": float(np.sum(tpds)),
-            "tail20_mean": tail,
-            "reignitions": getattr(strat, "reignitions", None),
+    for name in result.strategies:
+        srun = result.runs_for(name)[0]
+        out[name] = {
+            "total_tpd": float(np.sum(srun.tpds)),
+            "tail20_mean": float(np.mean(srun.tpds[-20:])),
+            "reignitions": srun.diagnostics.get("reignitions"),
         }
     return out
 
 
 def main() -> dict:
-    print("== drift adaptation (speeds shuffled at round 60/180) ==")
+    print("== drift adaptation (speeds reversed at round 60/180) ==")
     res = run()
     for k, v in res.items():
         extra = (f" reignitions={v['reignitions']}"

@@ -20,9 +20,8 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core.cost_model import CostModel
-from repro.core.hierarchy import ClientPool, Hierarchy
 from repro.core.pso import FlagSwapPSO
+from repro.experiments import get_scenario
 
 GRID_DEPTH = (3, 4, 5)
 GRID_WIDTH = (4, 5)
@@ -34,9 +33,12 @@ OUT = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
 
 def run_cell(depth: int, width: int, particles: int, seed: int = 0,
              iterations: int = ITERATIONS) -> dict:
-    h = Hierarchy(depth=depth, width=width, trainers_per_leaf=2)
-    pool = ClientPool.random(h.total_clients, seed=seed)
-    cm = CostModel(h, pool)
+    # one grid cell = the paper-fig3 scenario at (depth, width); the
+    # environment owns pool + cost model construction
+    spec = get_scenario("paper-fig3").with_overrides(depth=depth,
+                                                     width=width)
+    env = spec.make_environment(seed)
+    h, cm = env.hierarchy, env.cost_model
     pso = FlagSwapPSO(h.dimensions, h.total_clients, n_particles=particles,
                       inertia=0.01, c1=0.01, c2=1.0, velocity_factor=0.1,
                       seed=seed)

@@ -16,57 +16,20 @@ The paper's claims this harness checks:
 
 Beyond paper: also runs the GA baseline and the telemetry-cheating
 greedy placement (upper bound) for context.
+
+This is now a thin wrapper over the unified experiment API: the cluster
+lives in the registered ``paper-fig4`` ScenarioSpec and every strategy
+is swept through ``run_experiment`` (equivalently:
+``python -m repro.experiments run paper-fig4 ...``).
 """
 from __future__ import annotations
 
 import json
-import time
 from pathlib import Path
 
-import numpy as np
-
-from repro.configs import get_config
-from repro.core.cost_model import CostModel
-from repro.core.hierarchy import ClientPool, Hierarchy
-from repro.core.placement import make_strategy
-from repro.data.synthetic import make_federated_dataset
-from repro.fl.orchestrator import FederatedOrchestrator
-from repro.models import get_model
+from repro.experiments import get_scenario, run_experiment
 
 OUT = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
-
-# docker resource limits -> relative speed units (pspeed); the paper's
-# 3-core/2GB box is ~4x a 64MB/1-core container on this workload
-PSPEEDS = np.array([4.0, 2.0, 2.0] + [1.0] * 7)
-MEMCAPS = np.array([2048.0, 1024.0, 1024.0] + [64.0] * 7)
-
-
-def make_cluster(seed: int = 0):
-    h = Hierarchy(depth=2, width=2, trainers_per_leaf=1, n_clients=10)
-    pool = ClientPool(memcap=MEMCAPS.copy(), pspeed=PSPEEDS.copy(),
-                      mdatasize=np.full(10, 30.0))  # ~30MB json model
-    return h, pool
-
-
-def run_strategy(name: str, rounds: int, seed: int = 0,
-                 local_steps: int = 2, verbose: bool = False,
-                 timing: str = "deterministic",
-                 engine: str = "auto") -> dict:
-    cfg = get_config("paper-mlp-1m8")
-    model = get_model(cfg)
-    h, pool = make_cluster(seed)
-    data = make_federated_dataset(cfg, h.total_clients, seed=seed)
-    strat = make_strategy(name, h, seed=seed, clients=pool,
-                          cost_model=CostModel(h, pool))
-    orch = FederatedOrchestrator(model, h, pool, data,
-                                 local_steps=local_steps, batch_size=32,
-                                 seed=seed, comm_latency=0.002,
-                                 timing=timing, engine=engine)
-    res = orch.run(strat, rounds=rounds, verbose=verbose)
-    out = res.summary()
-    out["per_round_tpd"] = res.tpds.tolist()
-    out["per_round_acc"] = [r.accuracy for r in res.rounds]
-    return out
 
 
 def main(rounds: int = 50, seed: int = 0, n_seeds: int = 1,
@@ -81,29 +44,33 @@ def main(rounds: int = 50, seed: int = 0, n_seeds: int = 1,
     time by load share)."""
     print(f"== Fig. 4: 10-client heterogeneous cluster, {rounds} rounds, "
           f"{n_seeds} seed(s), timing={timing}, engine={engine} ==")
+    spec = get_scenario("paper-fig4").with_overrides(timing=timing,
+                                                     engine=engine)
+    seeds = [seed + 17 * i for i in range(n_seeds)]
+    result = run_experiment(spec, list(strategies), rounds=rounds,
+                            seeds=seeds)
+
+    # reshape into the historical fig4_cluster.json layout
     results = {}
-    for s in strategies:
-        t0 = time.perf_counter()
-        runs = [run_strategy(s, rounds, seed=seed + 17 * i, timing=timing,
-                             engine=engine)
-                for i in range(n_seeds)]
-        agg = {
-            "total_tpd": float(np.mean([r["total_tpd"] for r in runs])),
-            "total_tpd_std": float(np.std([r["total_tpd"] for r in runs])),
-            "mean_tpd": float(np.mean([r["mean_tpd"] for r in runs])),
-            "last10_mean_tpd": float(np.mean(
-                [r["last10_mean_tpd"] for r in runs])),
-            "final_accuracy": float(np.mean(
-                [r["final_accuracy"] for r in runs])),
-            "per_seed": runs,
+    for s, agg in result.aggregates.items():
+        per_seed = []
+        for run in result.runs_for(s):
+            per_seed.append({
+                "strategy": s, "rounds": rounds,
+                "total_tpd": run.total_tpd, "mean_tpd": run.mean_tpd,
+                "last10_mean_tpd": run.last10_mean_tpd,
+                "final_accuracy": run.final_metrics().get("accuracy", 0.0),
+                "per_round_tpd": run.tpds,
+                "per_round_acc": run.metrics.get("accuracy", []),
+            })
+        results[s] = {
+            "total_tpd": agg["total_tpd"],
+            "total_tpd_std": agg["total_tpd_std"],
+            "mean_tpd": agg["mean_tpd"],
+            "last10_mean_tpd": agg["last10_mean_tpd"],
+            "final_accuracy": agg.get("final_accuracy", 0.0),
+            "per_seed": per_seed,
         }
-        results[s] = agg
-        print(f"{s:8s} | total TPD {agg['total_tpd']:8.2f}s "
-              f"(±{agg['total_tpd_std']:.2f}) "
-              f"mean {agg['mean_tpd']:6.3f}s last10 "
-              f"{agg['last10_mean_tpd']:6.3f}s "
-              f"acc {agg['final_accuracy']:.3f} "
-              f"[{time.perf_counter() - t0:5.1f}s wall]")
 
     summary = {"rounds": rounds, "n_seeds": n_seeds, "results": results}
     if {"pso", "random", "uniform"} <= set(results):

@@ -5,6 +5,11 @@ the pod boundary pay DCN rates (~10x ICI). Flag-Swap sees only the total
 delay — if the black-box signal is enough to discover pod locality, the
 PSO placement should have FEWER cross-pod aggregation edges than random
 placement, without ever being told the topology.
+
+Thin wrapper over the unified experiment API: the pod world is the
+registered ``two-tier`` ScenarioSpec (a ``TwoTierCostModel``-backed
+SimulatedEnvironment); the swarm-mode PSO drive rides the environment's
+cost model directly.
 """
 from __future__ import annotations
 
@@ -13,19 +18,16 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core.cost_model import TwoTierCostModel
-from repro.core.hierarchy import ClientPool, Hierarchy
 from repro.core.pso import FlagSwapPSO
+from repro.experiments import get_scenario
 
 OUT = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
 
 
 def run(seed: int = 0, iterations: int = 150) -> dict:
     # two pods x 12 clients; depth-3/width-2 tree (7 aggregator slots)
-    h = Hierarchy(depth=3, width=2, trainers_per_leaf=2, n_clients=24)
-    pool = ClientPool.random(h.total_clients, seed=seed)
-    pod_of = np.repeat(np.arange(2), 12)
-    cm = TwoTierCostModel(h, pool, pod_of=pod_of)
+    env = get_scenario("two-tier").make_environment(seed)
+    h, cm = env.hierarchy, env.cost_model
 
     rng = np.random.default_rng(seed)
     rand_tpds, rand_cross = [], []

@@ -9,9 +9,8 @@ Run:  PYTHONPATH=src python examples/federated_llm.py \
 import argparse
 
 from repro.configs import ASSIGNED, get_config
-from repro.core.cost_model import CostModel
+from repro.core import create_strategy
 from repro.core.hierarchy import ClientPool
-from repro.core.placement import make_strategy
 from repro.data.synthetic import make_federated_dataset
 from repro.fl.distributed import choose_fl_hierarchy
 from repro.fl.orchestrator import FederatedOrchestrator
@@ -35,7 +34,7 @@ hierarchy = choose_fl_hierarchy(args.clients)
 clients = ClientPool.random(hierarchy.total_clients, seed=0)
 data = make_federated_dataset(cfg, hierarchy.total_clients, seed=0,
                               seq_len=args.seq_len)
-strategy = make_strategy("pso", hierarchy, seed=0)
+strategy = create_strategy("pso", hierarchy, seed=0)
 orch = FederatedOrchestrator(model, hierarchy, clients, data,
                              local_steps=1, batch_size=8, seed=0)
 res = orch.run(strategy, rounds=args.rounds, verbose=True)

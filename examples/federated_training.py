@@ -2,25 +2,21 @@
 with PSO-optimized aggregation placement (the docker experiment of
 Sec. IV-C, single-host emulation).
 
-15 heterogeneous clients train on non-IID Dirichlet partitions for a few
-hundred rounds; Flag-Swap tests one particle placement per round against
-the MEASURED round delay and converges to a fast tree, while random
-keeps paying for slow aggregation hosts.
+15 heterogeneous clients train on non-IID Dirichlet partitions; Flag-Swap
+tests one particle placement per round against the round delay and
+converges to a fast tree, while random keeps paying for slow aggregation
+hosts.
+
+The run is one ad-hoc ScenarioSpec (kind='emulated') swept through the
+unified experiment API — the same path as
+``python -m repro.experiments run paper-fig4``.
 
 Run:  PYTHONPATH=src python examples/federated_training.py [--rounds 200]
 """
 import argparse
 
-import numpy as np
-
-from repro.configs import get_config
-from repro.core.cost_model import CostModel
-from repro.core.hierarchy import ClientPool
-from repro.core.placement import make_strategy
-from repro.data.synthetic import make_federated_dataset
+from repro.experiments import ScenarioSpec, run_experiment
 from repro.fl.distributed import choose_fl_hierarchy
-from repro.fl.orchestrator import FederatedOrchestrator
-from repro.models import get_model
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--rounds", type=int, default=200)
@@ -31,33 +27,30 @@ ap.add_argument("--engine", choices=["auto", "loop", "batched"],
                 default="auto",
                 help="'batched' (default via auto): one vmap'd jit per "
                      "round; 'loop': per-client dispatch (seed behavior)")
+ap.add_argument("--measured", action="store_true",
+                help="wall-clock TPD (needs a quiet machine); default is "
+                     "the reproducible deterministic eq.6 timing")
 args = ap.parse_args()
 
-cfg = get_config("paper-mlp-1m8")
-model = get_model(cfg)
 hierarchy = choose_fl_hierarchy(args.clients)
 print(f"{args.clients} clients, hierarchy depth={hierarchy.depth} "
       f"width={hierarchy.width} ({hierarchy.dimensions} aggregator slots)")
 
-results = {}
-for strat_name in args.strategies:
-    clients = ClientPool.random(hierarchy.total_clients, seed=0)
-    data = make_federated_dataset(cfg, hierarchy.total_clients, seed=0)
-    strategy = make_strategy(strat_name, hierarchy, seed=0, clients=clients,
-                             cost_model=CostModel(hierarchy, clients))
-    orch = FederatedOrchestrator(model, hierarchy, clients, data,
-                                 local_steps=2, batch_size=32, seed=0,
-                                 engine=args.engine)
-    res = orch.run(strategy, rounds=args.rounds)
-    results[strat_name] = res
-    s = res.summary()
-    print(f"[{strat_name:8s}] total TPD {s['total_tpd']:8.2f}s | "
-          f"mean/round {s['mean_tpd']:.4f}s | "
-          f"last-10 mean {s['last10_mean_tpd']:.4f}s | "
-          f"final acc {s['final_accuracy']:.3f}")
+spec = ScenarioSpec(
+    name="federated-training", kind="emulated",
+    depth=hierarchy.depth, width=hierarchy.width,
+    trainers_per_leaf=hierarchy.trainers_per_leaf,
+    n_clients=hierarchy.total_clients,
+    model="paper-mlp-1m8", local_steps=2, batch_size=32,
+    timing="measured" if args.measured else "deterministic",
+    engine=args.engine, rounds=args.rounds,
+    description="choose_fl_hierarchy-sized emulated MLP training")
 
-if "pso" in results and "random" in results:
-    save = 1 - results["pso"].total_processing_time / \
-        results["random"].total_processing_time
+result = run_experiment(spec, args.strategies, rounds=args.rounds,
+                        seeds=(0,))
+
+agg = result.aggregates
+if "pso" in agg and "random" in agg:
+    save = 1 - agg["pso"]["total_tpd"] / agg["random"]["total_tpd"]
     print(f"\nPSO total processing time is {save:.1%} lower than random "
           f"placement (paper reports ~43% on the docker cluster).")

@@ -3,16 +3,19 @@
 1. Build a hierarchical SDFL topology (depth 3, width 2).
 2. Evaluate placements with the paper's TPD cost model (eqs. 6-7).
 3. Let PSO (the paper's optimizer, eqs. 2-4) find a good placement.
-4. Compare against random / uniform / exhaustive-optimal.
+4. Compare against random / uniform / greedy (typed strategy registry).
+5. Run a whole strategy sweep through the unified experiment API
+   (same thing as ``python -m repro.experiments run ...``).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+from repro.core import create_strategy
 from repro.core.cost_model import CostModel
 from repro.core.hierarchy import ClientPool, Hierarchy
-from repro.core.placement import make_strategy
 from repro.core.pso import FlagSwapPSO
+from repro.experiments import run_experiment
 
 # --- 1. the aggregation hierarchy (paper Sec. IV-A) -----------------------
 h = Hierarchy(depth=3, width=2, trainers_per_leaf=2)
@@ -42,12 +45,27 @@ rand_tpds = [cost.tpd(rng.permutation(h.total_clients)[: h.dimensions])
              for _ in range(100)]
 print(f"random placement TPD   = {np.mean(rand_tpds):.3f} (mean of 100)")
 
-uniform = make_strategy("uniform", h)
+uniform = create_strategy("uniform", h)
 print(f"uniform placement TPD  = {cost.tpd(uniform.propose(0)):.3f}")
 
-greedy = make_strategy("greedy", h, clients=clients)
+greedy = create_strategy("greedy", h, clients=clients)
 print(f"greedy (telemetry) TPD = {cost.tpd(greedy.propose(0)):.3f} "
       f"<- needs pspeed data the paper's threat model forbids")
 
 print(f"\nPSO reached {cost.tpd(best) / np.mean(rand_tpds):.1%} of the "
       f"mean-random TPD using only black-box delay feedback.")
+
+# --- 5. the unified experiment API ----------------------------------------
+# Every strategy x scenario x seed sweep goes through one declarative
+# entry point; presets cover both paper figures plus drift / churn /
+# straggler / latency / two-tier / large-256 worlds. Equivalent CLI:
+#   PYTHONPATH=src python -m repro.experiments run churn \
+#       --strategies pso,random --rounds 40 --seeds 0,1
+print("\nsweep: 'churn' scenario (25% of clients replaced every 10 "
+      "rounds), 2 seeds")
+result = run_experiment("churn", ["pso", "random"], rounds=40,
+                        seeds=(0, 1))
+pso_total = result.aggregates["pso"]["total_tpd"]
+rnd_total = result.aggregates["random"]["total_tpd"]
+print(f"under churn, PSO paid {pso_total / rnd_total:.1%} of random's "
+      f"cumulative TPD (artifact schema v{result.schema_version})")

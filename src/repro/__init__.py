@@ -7,12 +7,15 @@ using Particle Swarm Intelligence" (Ali-Pour et al., CS.DC 2025).
 
 Public API surface (the pieces a deployment touches):
 
+    from repro.experiments import run_experiment, get_scenario
     from repro.core import FlagSwapPSO, Hierarchy, CostModel
-    from repro.core.placement import make_strategy
+    from repro.core import create_strategy          # typed registry
     from repro.fl import FederatedOrchestrator
     from repro.models import get_model
     from repro.configs import get_config, list_configs
     from repro.launch.mesh import make_production_mesh
+
+CLI: ``python -m repro.experiments run <scenario> --strategies pso,...``
 """
 
 __version__ = "0.1.0"

@@ -4,17 +4,32 @@
 - ``ClientPool``: simulated client attributes (Sec. IV-A).
 - ``CostModel``: TPD (eqs. 6-7), scalar + swarm-vectorized.
 - ``FlagSwapPSO``: the black-box integer PSO (eqs. 1-4, Algorithm 1).
-- placement strategies: pso / random / uniform / ga / greedy / exhaustive.
+- placement strategies: pso / pso-adaptive / random / uniform / ga / sa /
+  cem / greedy / exhaustive / static — all registered in the typed
+  strategy registry (``create_strategy``; ``make_strategy`` is the
+  deprecated shim).
 """
 from repro.core.hierarchy import Hierarchy, ClientPool
-from repro.core.cost_model import CostModel
+from repro.core.cost_model import CostModel, TwoTierCostModel
 from repro.core.pso import FlagSwapPSO, SwarmHistory
+from repro.core.registry import (
+    StrategyInfo,
+    build_config,
+    create_strategy,
+    list_strategies,
+    register_strategy,
+    resolve_strategy,
+    strategy_names,
+)
 from repro.core.placement import (
     PlacementStrategy,
     RandomPlacement,
     UniformRoundRobinPlacement,
     PSOPlacement,
+    AdaptivePSOPlacement,
     GAPlacement,
+    SimulatedAnnealingPlacement,
+    CEMPlacement,
     GreedySpeedPlacement,
     ExhaustivePlacement,
     StaticPlacement,
@@ -22,8 +37,12 @@ from repro.core.placement import (
 )
 
 __all__ = [
-    "Hierarchy", "ClientPool", "CostModel", "FlagSwapPSO", "SwarmHistory",
+    "Hierarchy", "ClientPool", "CostModel", "TwoTierCostModel",
+    "FlagSwapPSO", "SwarmHistory",
+    "StrategyInfo", "build_config", "create_strategy", "list_strategies",
+    "register_strategy", "resolve_strategy", "strategy_names",
     "PlacementStrategy", "RandomPlacement", "UniformRoundRobinPlacement",
-    "PSOPlacement", "GAPlacement", "GreedySpeedPlacement",
+    "PSOPlacement", "AdaptivePSOPlacement", "GAPlacement",
+    "SimulatedAnnealingPlacement", "CEMPlacement", "GreedySpeedPlacement",
     "ExhaustivePlacement", "StaticPlacement", "make_strategy",
 ]

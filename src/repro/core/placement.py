@@ -12,16 +12,91 @@ All strategies share one black-box interface:
 
     placement = strategy.propose(round_idx)   # client ids per slot
     strategy.observe(placement, tpd)          # measured round delay
+
+Each strategy registers itself (``repro.core.registry``) under a
+canonical name + aliases, together with a typed config dataclass; build
+instances with ``create_strategy`` (``make_strategy`` below is a
+deprecation shim over it).
 """
 from __future__ import annotations
 
 import itertools
-from typing import List, Optional, Sequence
+import warnings
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.hierarchy import ClientPool, Hierarchy
 from repro.core.pso import FlagSwapPSO
+from repro.core.registry import create_strategy, register_strategy
+
+
+# ---------------------------------------------------------------------------
+# typed per-strategy configs (the registry validates overrides against
+# these fields, so a typo'd or misplaced kwarg fails loudly)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class RandomConfig:
+    pass
+
+
+@dataclass(frozen=True)
+class UniformConfig:
+    pass
+
+
+@dataclass(frozen=True)
+class StaticConfig:
+    placement: Tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class PSOConfig:
+    n_particles: int = 10
+    inertia: float = 0.01
+    c1: float = 0.01
+    c2: float = 1.0
+    velocity_factor: float = 0.1
+    exploit_after_convergence: bool = True
+    exploit_when_stagnant: bool = True
+
+
+@dataclass(frozen=True)
+class AdaptivePSOConfig(PSOConfig):
+    drift_factor: float = 1.3
+    probe_every: int = 5
+    probe_patience: int = 2
+
+
+@dataclass(frozen=True)
+class GAConfig:
+    population: int = 10
+    tournament: int = 3
+    mutate_p: float = 0.15
+
+
+@dataclass(frozen=True)
+class SAConfig:
+    t0: float = 1.0
+    cooling: float = 0.97
+
+
+@dataclass(frozen=True)
+class CEMConfig:
+    batch: int = 10
+    elite_frac: float = 0.3
+    smoothing: float = 0.7
+
+
+@dataclass(frozen=True)
+class GreedyConfig:
+    pass
+
+
+@dataclass(frozen=True)
+class ExhaustiveConfig:
+    limit: int = 2_000_000
 
 
 class PlacementStrategy:
@@ -38,6 +113,8 @@ class PlacementStrategy:
         pass
 
 
+@register_strategy("random", config=RandomConfig,
+                   description="fresh random arrangement every round")
 class RandomPlacement(PlacementStrategy):
     """Paper baseline: a fresh random arrangement every round."""
     name = "random"
@@ -47,6 +124,9 @@ class RandomPlacement(PlacementStrategy):
             self.hierarchy.total_clients)[: self.hierarchy.dimensions]
 
 
+@register_strategy("uniform", config=UniformConfig,
+                   aliases=("round-robin",),
+                   description="deterministic round-robin rotation")
 class UniformRoundRobinPlacement(PlacementStrategy):
     """Paper baseline: deterministic rotation — every client takes its
     turn hosting aggregation slots (uniform load spreading)."""
@@ -59,6 +139,8 @@ class UniformRoundRobinPlacement(PlacementStrategy):
         return np.asarray([(start + i) % n for i in range(d)], np.int64)
 
 
+@register_strategy("static", config=StaticConfig, aliases=("fixed",),
+                   description="fixed placement, never changes")
 class StaticPlacement(PlacementStrategy):
     """Fixed placement (e.g. the flat/CFL-equivalent root choice)."""
     name = "static"
@@ -73,6 +155,8 @@ class StaticPlacement(PlacementStrategy):
         return self._placement
 
 
+@register_strategy("pso", config=PSOConfig, aliases=("flag-swap",),
+                   description="Flag-Swap PSO, one particle per round")
 class PSOPlacement(PlacementStrategy):
     """Flag-Swap: one particle tested per FL round (paper Sec. III)."""
     name = "pso"
@@ -122,6 +206,9 @@ class PSOPlacement(PlacementStrategy):
             self._pending = False
 
 
+@register_strategy("pso-adaptive", config=AdaptivePSOConfig,
+                   aliases=("adaptive",),
+                   description="Flag-Swap + drift probes + re-ignition")
 class AdaptivePSOPlacement(PSOPlacement):
     """Flag-Swap + drift detection (the paper's Sec. VI future work).
 
@@ -175,6 +262,8 @@ class AdaptivePSOPlacement(PSOPlacement):
         self._probing = False
 
 
+@register_strategy("ga", config=GAConfig, aliases=("genetic",),
+                   description="genetic-algorithm baseline")
 class GAPlacement(PlacementStrategy):
     """Genetic-algorithm baseline (beyond paper; the paper cites GA's
     premature convergence as the reason to prefer PSO — this lets the
@@ -232,6 +321,9 @@ class GAPlacement(PlacementStrategy):
         self.fit = [-np.inf] * len(new)
 
 
+@register_strategy("greedy", config=GreedyConfig, aliases=("speed-sorted",),
+                   needs_clients=True,
+                   description="telemetry-cheating speed-sorted baseline")
 class GreedySpeedPlacement(PlacementStrategy):
     """Non-black-box upper baseline: sort clients by pspeed and fill slots
     top-down (fastest client at the root). Requires telemetry the paper's
@@ -248,6 +340,9 @@ class GreedySpeedPlacement(PlacementStrategy):
         return self._placement
 
 
+@register_strategy("exhaustive", config=ExhaustiveConfig,
+                   aliases=("oracle",), needs_cost_model=True,
+                   description="brute-force optimum (tiny scenarios only)")
 class ExhaustivePlacement(PlacementStrategy):
     """Brute-force oracle over all permutations (tiny scenarios only)."""
     name = "exhaustive"
@@ -276,34 +371,22 @@ class ExhaustivePlacement(PlacementStrategy):
 def make_strategy(name: str, hierarchy: Hierarchy, seed: int = 0,
                   clients: Optional[ClientPool] = None,
                   cost_model=None, **kw) -> PlacementStrategy:
-    name = name.lower()
-    if name == "random":
-        return RandomPlacement(hierarchy, seed)
-    if name == "uniform":
-        return UniformRoundRobinPlacement(hierarchy, seed)
-    if name == "pso":
-        return PSOPlacement(hierarchy, seed=seed, **kw)
-    if name in ("pso-adaptive", "adaptive"):
-        return AdaptivePSOPlacement(hierarchy, seed=seed, **kw)
-    if name == "sa":
-        return SimulatedAnnealingPlacement(hierarchy, seed=seed, **kw)
-    if name == "cem":
-        return CEMPlacement(hierarchy, seed=seed, **kw)
-    if name == "ga":
-        return GAPlacement(hierarchy, seed=seed, **kw)
-    if name == "greedy":
-        if clients is None:
-            raise ValueError("greedy needs the client pool")
-        return GreedySpeedPlacement(hierarchy, clients, seed)
-    if name == "exhaustive":
-        if cost_model is None:
-            raise ValueError("exhaustive needs a cost model")
-        return ExhaustivePlacement(hierarchy, cost_model, seed)
-    if name == "static":
-        return StaticPlacement(hierarchy, kw["placement"], seed)
-    raise KeyError(f"unknown placement strategy {name!r}")
+    """Deprecated shim over ``repro.core.registry.create_strategy``.
+
+    Unlike the historical factory it VALIDATES ``**kw`` against the
+    strategy's typed config (unknown kwargs raise instead of being
+    silently dropped).
+    """
+    warnings.warn(
+        "make_strategy is deprecated; use "
+        "repro.core.registry.create_strategy (typed configs, aliases)",
+        DeprecationWarning, stacklevel=2)
+    return create_strategy(name, hierarchy, seed=seed, clients=clients,
+                           cost_model=cost_model, **kw)
 
 
+@register_strategy("sa", config=SAConfig, aliases=("annealing",),
+                   description="simulated-annealing baseline")
 class SimulatedAnnealingPlacement(PlacementStrategy):
     """Simulated-annealing baseline (beyond paper; SA is among the
     black-box families the paper's related work compares against).
@@ -360,6 +443,8 @@ class SimulatedAnnealingPlacement(PlacementStrategy):
         self.temp *= self.cooling
 
 
+@register_strategy("cem", config=CEMConfig, aliases=("cross-entropy",),
+                   description="cross-entropy-method baseline")
 class CEMPlacement(PlacementStrategy):
     """Cross-entropy-method baseline: maintains per-slot categorical
     distributions over client ids, samples placements, refits on the

@@ -1,0 +1,57 @@
+"""repro.experiments — the unified experiment API.
+
+Three concepts:
+
+* :class:`~repro.experiments.scenarios.ScenarioSpec` — a declarative
+  description of an evaluation world (hierarchy, client-pool profile,
+  event schedule), with registered presets for both paper figures and
+  the beyond-paper drift/churn/straggler/latency/two-tier/large-256
+  scenarios.
+* ``Environment`` — one propose/observe protocol;
+  :class:`SimulatedEnvironment` wraps the analytical CostModel (Fig. 3),
+  :class:`EmulatedEnvironment` wraps the FederatedOrchestrator (Fig. 4).
+  Every PlacementStrategy runs identically in both worlds.
+* :func:`run_experiment` — the multi-seed sweep runner producing one
+  versioned :class:`ExperimentResult` JSON artifact, also exposed as a
+  CLI: ``python -m repro.experiments run paper-fig4 --strategies
+  pso,random --rounds 25 --seeds 0,17``.
+"""
+from repro.experiments.environments import (
+    EmulatedEnvironment,
+    Environment,
+    RoundObservation,
+    SimulatedEnvironment,
+    build_environment,
+)
+from repro.experiments.results import (
+    RESULT_SCHEMA,
+    RESULT_SCHEMA_VERSION,
+    ExperimentResult,
+    StrategyRun,
+    aggregate_runs,
+    validate_result_dict,
+)
+from repro.experiments.runner import run_experiment, run_single
+from repro.experiments.scenarios import (
+    ClientChurn,
+    LatencyNoise,
+    PoolProfile,
+    PSpeedDrift,
+    ScenarioSpec,
+    ScheduledEvent,
+    StragglerSpike,
+    get_scenario,
+    list_scenarios,
+    register_scenario,
+)
+
+__all__ = [
+    "Environment", "SimulatedEnvironment", "EmulatedEnvironment",
+    "RoundObservation", "build_environment",
+    "ExperimentResult", "StrategyRun", "aggregate_runs",
+    "validate_result_dict", "RESULT_SCHEMA", "RESULT_SCHEMA_VERSION",
+    "run_experiment", "run_single",
+    "ScenarioSpec", "PoolProfile", "ScheduledEvent", "PSpeedDrift",
+    "ClientChurn", "StragglerSpike", "LatencyNoise",
+    "get_scenario", "list_scenarios", "register_scenario",
+]

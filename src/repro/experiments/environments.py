@@ -1,0 +1,157 @@
+"""Environments: one propose/observe world per evaluation track.
+
+The paper evaluates placement strategies against two different oracles —
+the analytical TPD cost model (Fig. 3) and the measured round delay of a
+real federated run (Fig. 4). Both are the same *protocol* here: an
+:class:`Environment` answers ``step(round_idx, placement) ->
+RoundObservation`` and a :class:`~repro.core.placement.PlacementStrategy`
+is driven through the identical loop in both worlds:
+
+    env.begin()
+    for r in range(rounds):
+        p = strategy.propose(r)
+        obs = env.step(r, p)
+        strategy.observe(p, obs.tpd)
+
+``SimulatedEnvironment`` wraps :class:`repro.core.cost_model.CostModel`
+(or the two-tier pod variant); ``EmulatedEnvironment`` wraps
+:class:`repro.fl.orchestrator.FederatedOrchestrator` and reuses its
+``run_round`` step, so observations are bit-identical to
+``FederatedOrchestrator.run``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.cost_model import CostModel, TwoTierCostModel
+from repro.core.hierarchy import ClientPool, Hierarchy
+
+
+@dataclass
+class RoundObservation:
+    """What one environment step hands back to the runner/strategy."""
+    round_idx: int
+    placement: np.ndarray
+    tpd: float                              # the black-box signal
+    metrics: Dict[str, float] = field(default_factory=dict)
+
+
+@runtime_checkable
+class Environment(Protocol):
+    """The propose/observe world every strategy runs against."""
+    kind: str
+    hierarchy: Hierarchy
+    clients: ClientPool
+
+    def begin(self) -> None:
+        """One-time setup (compile/warmup) before round 0."""
+        ...
+
+    def step(self, round_idx: int, placement) -> RoundObservation:
+        """Execute/evaluate one round at ``placement``."""
+        ...
+
+
+class SimulatedEnvironment:
+    """The Fig. 3 world: rounds cost what eqs. 6-7 say they cost.
+
+    Exposes ``cost_model`` (scalar + swarm-vectorized evaluators) so
+    swarm-mode drivers (``FlagSwapPSO.run`` with ``batch_fitness_fn``)
+    ride the same object the step loop uses. The cost model reads the
+    pool by reference — event schedules that mutate ``clients`` in place
+    are reflected in the very next ``step``.
+    """
+    kind = "simulated"
+
+    def __init__(self, hierarchy: Hierarchy, clients: ClientPool,
+                 cost_model: Optional[CostModel] = None):
+        self.hierarchy = hierarchy
+        self.clients = clients
+        self.cost_model = cost_model if cost_model is not None \
+            else CostModel(hierarchy, clients)
+
+    def begin(self) -> None:
+        pass
+
+    def step(self, round_idx: int, placement) -> RoundObservation:
+        placement = np.asarray(placement, np.int64)
+        self.hierarchy.validate_placement(placement)
+        tpd = float(self.cost_model.tpd(placement))
+        return RoundObservation(round_idx=round_idx, placement=placement,
+                                tpd=tpd)
+
+
+class EmulatedEnvironment:
+    """The Fig. 4 world: rounds cost what the federated run measures.
+
+    Thin adapter over ``FederatedOrchestrator`` — ``step`` IS
+    ``orchestrator.run_round``, so a strategy driven through this
+    environment reproduces ``FederatedOrchestrator.run`` exactly
+    (including model state evolution and eval metrics).
+    """
+    kind = "emulated"
+
+    def __init__(self, orchestrator):
+        self.orchestrator = orchestrator
+        self.hierarchy = orchestrator.hierarchy
+        self.clients = orchestrator.clients
+        self._cost_model: Optional[CostModel] = None
+
+    @property
+    def cost_model(self) -> CostModel:
+        """Analytic eqs. 6-7 view of the same pool (lazily built) — only
+        used as strategy-construction context (e.g. the exhaustive
+        oracle); the observed TPD always comes from the orchestrator."""
+        if self._cost_model is None:
+            self._cost_model = CostModel(self.hierarchy, self.clients)
+        return self._cost_model
+
+    def begin(self) -> None:
+        self.orchestrator.warmup()
+
+    def step(self, round_idx: int, placement) -> RoundObservation:
+        rec = self.orchestrator.run_round(round_idx, placement)
+        return RoundObservation(
+            round_idx=round_idx,
+            placement=np.asarray(rec.placement, np.int64),
+            tpd=float(rec.tpd),
+            metrics={"loss": rec.loss, "accuracy": rec.accuracy,
+                     "train_time": rec.train_time,
+                     "agg_time": rec.agg_time})
+
+
+def build_environment(spec, seed: int = 0) -> Environment:
+    """Materialize a ScenarioSpec into a fresh environment for one run."""
+    hierarchy = spec.make_hierarchy()
+    pool = spec.make_pool(seed)
+    if spec.kind == "simulated":
+        if spec.pods:
+            n = hierarchy.total_clients
+            pod_of = np.arange(n) * spec.pods // n
+            cm = TwoTierCostModel(hierarchy, pool,
+                                  memory_penalty=spec.memory_penalty,
+                                  pod_of=pod_of, ici_cost=spec.ici_cost,
+                                  dcn_cost=spec.dcn_cost)
+        else:
+            cm = CostModel(hierarchy, pool,
+                           memory_penalty=spec.memory_penalty)
+        return SimulatedEnvironment(hierarchy, pool, cm)
+
+    # emulated: build model + data + orchestrator
+    from repro.configs import get_config
+    from repro.data.synthetic import make_federated_dataset
+    from repro.fl.orchestrator import FederatedOrchestrator
+    from repro.models import get_model
+
+    cfg = get_config(spec.model)
+    model = get_model(cfg)
+    data = make_federated_dataset(cfg, hierarchy.total_clients, seed=seed)
+    orch = FederatedOrchestrator(
+        model, hierarchy, pool, data,
+        local_steps=spec.local_steps, batch_size=spec.batch_size,
+        seed=seed, comm_latency=spec.comm_latency, timing=spec.timing,
+        engine=spec.engine)
+    return EmulatedEnvironment(orch)

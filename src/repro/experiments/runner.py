@@ -1,0 +1,159 @@
+"""The multi-seed sweep runner: every strategy x scenario x seed
+combination through ONE propose/observe loop.
+
+    from repro.experiments import run_experiment
+    result = run_experiment("paper-fig4", ["pso", "random"],
+                            rounds=25, seeds=(0, 17))
+    result.save("artifacts/experiments/fig4.json")
+
+Strategies may be plain names (``"pso"``), ``(name, {overrides})``
+pairs, or ``(name, ConfigInstance)`` — all resolved through the typed
+strategy registry, so a misspelled option fails before any round runs.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.registry import build_config, create_strategy, \
+    resolve_strategy
+from repro.experiments.results import ExperimentResult, StrategyRun
+from repro.experiments.scenarios import ScenarioSpec, ScheduledEvent, \
+    get_scenario
+
+StrategyLike = Union[str, Tuple[str, dict], Tuple[str, object]]
+
+# event rng stream tag: keeps event randomness decoupled from every
+# strategy/pool stream (a run without events is bit-identical to the
+# pre-events code path)
+_EVENT_STREAM = 0xE7E47
+
+
+def _normalize_strategies(strategies: Iterable[StrategyLike]):
+    """-> [(canonical_name, config_overrides_or_instance)]"""
+    if isinstance(strategies, str):
+        strategies = [s for s in strategies.split(",") if s]
+    out = []
+    for s in strategies:
+        if isinstance(s, str):
+            name, cfg = s, None
+        else:
+            name, cfg = s
+        info = resolve_strategy(name)
+        if isinstance(cfg, dict):
+            cfg = build_config(info.name, cfg)  # validate early
+        out.append((info.name, cfg))
+    names = [n for n, _ in out]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate strategies in sweep: {names}")
+    return out
+
+
+def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
+               rounds: Optional[int] = None, config=None,
+               verbose: bool = False) -> StrategyRun:
+    """One (strategy, seed) trajectory through a fresh environment.
+
+    This is THE loop — both paper tracks and every event scenario go
+    through it; there is no other strategy-driving code path in the
+    experiment layer.
+    """
+    rounds = rounds if rounds is not None else spec.rounds
+    env = spec.make_environment(seed)
+    kw = {"config": config} if config is not None else {}
+    strategy = create_strategy(strategy_name, env.hierarchy, seed=seed,
+                               clients=env.clients,
+                               cost_model=env.cost_model, **kw)
+    events = spec.make_events()
+    erng = np.random.default_rng((seed, _EVENT_STREAM))
+    # does any event distort the observed signal? (then the artifact
+    # carries BOTH series: tpds = true realized cost, metrics
+    # observed_tpd = what the strategy was shown)
+    has_observer_noise = any(
+        type(ev).transform_tpd is not ScheduledEvent.transform_tpd
+        for ev in events)
+    run = StrategyRun(strategy=strategy.name, seed=seed)
+
+    env.begin()
+    for r in range(rounds):
+        for ev in events:
+            msg = ev.on_round(r, env.clients, erng)
+            if msg:
+                run.event_log.append(f"r{r}: {msg}")
+                if verbose:
+                    print(f"    [event] r{r}: {msg}")
+        placement = np.asarray(strategy.propose(r), np.int64)
+        obs = env.step(r, placement)
+        observed = obs.tpd
+        for ev in events:
+            observed = ev.transform_tpd(r, observed, erng)
+        # the strategy sees the (possibly noisy) observation; the
+        # artifact's headline tpds are the TRUE realized cost
+        strategy.observe(placement, observed)
+        run.tpds.append(float(obs.tpd))
+        if has_observer_noise:
+            run.metrics.setdefault("observed_tpd", []).append(
+                float(observed))
+        for k, v in obs.metrics.items():
+            run.metrics.setdefault(k, []).append(float(v))
+        if verbose:
+            extra = "".join(f" {k}={v:.3f}" for k, v in obs.metrics.items()
+                            if k in ("loss", "accuracy"))
+            print(f"    [{strategy.name}] r{r:3d} "
+                  f"tpd={obs.tpd:8.4f}{extra}")
+
+    if hasattr(strategy, "reignitions"):
+        run.diagnostics["reignitions"] = int(strategy.reignitions)
+    pso = getattr(strategy, "pso", None)
+    if pso is not None:
+        run.diagnostics["evaluations"] = int(pso.evaluations)
+        run.diagnostics["converged"] = bool(pso.converged)
+    return run
+
+
+def run_experiment(scenario: Union[str, ScenarioSpec],
+                   strategies: Iterable[StrategyLike],
+                   rounds: Optional[int] = None,
+                   seeds: Sequence[int] = (0,), *,
+                   verbose: bool = False,
+                   progress: bool = True) -> ExperimentResult:
+    """Sweep ``strategies`` x ``seeds`` over one scenario.
+
+    ``scenario`` is a registered preset name or a ScenarioSpec (e.g. a
+    preset with overrides). Returns the versioned
+    :class:`ExperimentResult`; call ``.save(path)`` for the artifact.
+    """
+    spec = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    rounds = rounds if rounds is not None else spec.rounds
+    seeds = [int(s) for s in seeds]
+    if not seeds:
+        raise ValueError("need at least one seed")
+    norm = _normalize_strategies(strategies)
+
+    result = ExperimentResult(
+        scenario=spec.to_dict(), rounds=rounds, seeds=seeds,
+        strategies=[n for n, _ in norm])
+    for name, cfg in norm:
+        t0 = time.perf_counter()
+        for seed in seeds:
+            run = run_single(spec, name, seed=seed, rounds=rounds,
+                             config=cfg, verbose=verbose)
+            result.runs.append(run)
+        if progress:
+            agg = aggregate_line(result, name)
+            print(f"  {name:12s} {agg} "
+                  f"[{time.perf_counter() - t0:6.2f}s wall]")
+    return result
+
+
+def aggregate_line(result: ExperimentResult, strategy: str) -> str:
+    """One human-readable summary line for a strategy's aggregate."""
+    from repro.experiments.results import aggregate_runs
+    a = aggregate_runs(result.runs_for(strategy))
+    line = (f"total TPD {a['total_tpd']:9.2f} (±{a['total_tpd_std']:.2f}) "
+            f"mean {a['mean_tpd']:7.3f} last10 {a['last10_mean_tpd']:7.3f}")
+    if "final_accuracy" in a:
+        line += f" acc {a['final_accuracy']:.3f}"
+    return line

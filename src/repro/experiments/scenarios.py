@@ -1,0 +1,405 @@
+"""Declarative experiment scenarios.
+
+A :class:`ScenarioSpec` is everything needed to reconstruct one
+evaluation world: the aggregation hierarchy, the client-pool profile,
+the environment kind (``simulated`` = the paper's Fig. 3 analytical
+`CostModel`; ``emulated`` = the Fig. 4 docker-cluster emulation via
+`FederatedOrchestrator`), and a per-round *event schedule* (pspeed
+drift, client churn, straggler spikes, latency noise) that turns the
+stationary paper setups into the adaptive scenarios the roadmap asks
+for.
+
+Presets registered here (``get_scenario`` / ``list_scenarios``):
+
+==============  ==========  ====================================================
+name            kind        what it reproduces / probes
+==============  ==========  ====================================================
+``paper-fig3``  simulated   one Fig. 3 grid cell (PSO vs. eqs. 6-7 TPD model)
+``paper-fig4``  emulated    the 10-client heterogeneous docker cluster (Fig. 4)
+``drift``       simulated   mid-run pspeed reversal (Sec. VI future work)
+``churn``       simulated   periodic client replacement (device churn)
+``straggler``   simulated   transient slowdown spikes on a client subset
+``latency``     simulated   multiplicative noise on the observed TPD signal
+``two-tier``    simulated   ICI/DCN pod topology (TwoTierCostModel)
+``large-256``   simulated   256-client pool, depth-4 tree (scale smoke)
+==============  ==========  ====================================================
+
+Specs are frozen; derive variants with ``with_overrides(depth=4, ...)``
+(the CLI's ``--set key=value`` goes through the same path).
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.hierarchy import ClientPool, Hierarchy
+
+
+# ---------------------------------------------------------------------------
+# client-pool profiles
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PoolProfile:
+    """How to build the ClientPool for a scenario.
+
+    ``kind='random'`` samples the paper's Sec. IV-A distributions
+    (memcap ~ U[10,50), pspeed ~ U[5,15)) per seed; ``kind='explicit'``
+    pins every attribute (the Fig. 4 docker resource limits).
+    """
+    kind: str = "random"                 # 'random' | 'explicit'
+    mdatasize: float = 5.0
+    memcap: Optional[Tuple[float, ...]] = None
+    pspeed: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if self.kind not in ("random", "explicit"):
+            raise ValueError(f"unknown pool profile kind {self.kind!r}")
+        if self.kind == "explicit" and (self.memcap is None
+                                        or self.pspeed is None):
+            raise ValueError("explicit pool profile needs memcap + pspeed")
+
+    def make(self, n_clients: int, seed: int) -> ClientPool:
+        if self.kind == "random":
+            return ClientPool.random(n_clients, seed=seed,
+                                     mdatasize=self.mdatasize)
+        if len(self.pspeed) != n_clients or len(self.memcap) != n_clients:
+            raise ValueError(
+                f"explicit pool has {len(self.pspeed)} pspeed / "
+                f"{len(self.memcap)} memcap entries, "
+                f"scenario needs {n_clients} clients")
+        return ClientPool(
+            memcap=np.asarray(self.memcap, np.float64).copy(),
+            pspeed=np.asarray(self.pspeed, np.float64).copy(),
+            mdatasize=np.full(n_clients, self.mdatasize, np.float64))
+
+
+# ---------------------------------------------------------------------------
+# per-round event schedules
+# ---------------------------------------------------------------------------
+@dataclass
+class ScheduledEvent:
+    """Base event. Subclasses mutate the client pool before a round
+    (``on_round``) and/or distort the observed delay (``transform_tpd``).
+
+    Event instances in a spec are templates: the runner works on a
+    ``fresh()`` copy per (strategy, seed) run so mutable state (e.g. a
+    straggler's saved speeds) never leaks across runs.
+    """
+
+    def fresh(self) -> "ScheduledEvent":
+        return copy.deepcopy(self)
+
+    def on_round(self, round_idx: int, pool: ClientPool,
+                 rng: np.random.Generator) -> Optional[str]:
+        """Mutate ``pool`` in place; return a log line or None."""
+        return None
+
+    def transform_tpd(self, round_idx: int, tpd: float,
+                      rng: np.random.Generator) -> float:
+        return tpd
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = {"event": type(self).__name__}
+        d.update(dataclasses.asdict(self))
+        return d
+
+
+@dataclass
+class PSpeedDrift(ScheduledEvent):
+    """One-shot system drift at ``at_round``: client speeds are reversed
+    (fast hosts become slow — the bench_drift scenario) or reshuffled."""
+    at_round: int = 60
+    mode: str = "reverse"                # 'reverse' | 'shuffle'
+
+    def on_round(self, round_idx, pool, rng):
+        if round_idx != self.at_round:
+            return None
+        if self.mode == "reverse":
+            pool.pspeed = pool.pspeed[::-1].copy()
+        elif self.mode == "shuffle":
+            pool.pspeed = rng.permutation(pool.pspeed).copy()
+        else:
+            raise ValueError(f"unknown drift mode {self.mode!r}")
+        return f"pspeed drift ({self.mode})"
+
+
+@dataclass
+class ClientChurn(ScheduledEvent):
+    """Every ``every`` rounds a random ``fraction`` of clients leave and
+    are replaced by fresh devices (attributes resampled from the paper's
+    Sec. IV-A distributions)."""
+    every: int = 10
+    fraction: float = 0.25
+    first_round: int = 1
+
+    def on_round(self, round_idx, pool, rng):
+        if round_idx < self.first_round or \
+                (round_idx - self.first_round) % self.every != 0:
+            return None
+        n = len(pool)
+        k = max(1, int(round(n * self.fraction)))
+        who = rng.choice(n, size=k, replace=False)
+        pool.memcap[who] = rng.uniform(10, 50, k)
+        pool.pspeed[who] = rng.uniform(5, 15, k)
+        return f"churn: replaced {k} clients"
+
+
+@dataclass
+class StragglerSpike(ScheduledEvent):
+    """Every ``every`` rounds a random ``fraction`` of clients slows
+    down by ``slowdown``x for ``duration`` rounds, then recovers —
+    container throttling / co-tenant interference."""
+    every: int = 15
+    duration: int = 5
+    fraction: float = 0.2
+    slowdown: float = 6.0
+    first_round: int = 5
+    # client -> (slowed value, original value); restoring checks the
+    # slowed value is still in place so a concurrent event (churn
+    # replacing the device, a drift reshuffle) that already rewrote the
+    # client's speed is not clobbered by a stale recovery
+    _saved: Dict[int, tuple] = field(default_factory=dict, repr=False)
+    _until: int = field(default=-1, repr=False)
+
+    def on_round(self, round_idx, pool, rng):
+        if self._saved and round_idx >= self._until:
+            restored = 0
+            for c, (slowed, original) in self._saved.items():
+                if pool.pspeed[c] == slowed:
+                    pool.pspeed[c] = original
+                    restored += 1
+            self._saved = {}
+            return f"stragglers recovered ({restored} clients)"
+        if self._saved or round_idx < self.first_round or \
+                (round_idx - self.first_round) % self.every != 0:
+            return None
+        n = len(pool)
+        k = max(1, int(round(n * self.fraction)))
+        who = rng.choice(n, size=k, replace=False)
+        originals = {int(c): float(pool.pspeed[c]) for c in who}
+        pool.pspeed[who] = pool.pspeed[who] / self.slowdown
+        self._saved = {c: (float(pool.pspeed[c]), v)
+                       for c, v in originals.items()}
+        self._until = round_idx + self.duration
+        return f"straggler spike: {k} clients {self.slowdown:g}x slower"
+
+    def to_dict(self):
+        d = super().to_dict()
+        d.pop("_saved", None)
+        d.pop("_until", None)
+        return d
+
+
+@dataclass
+class LatencyNoise(ScheduledEvent):
+    """Multiplicative lognormal-ish noise on the observed TPD — the
+    black-box signal the strategy sees gets dirtier, the true system
+    stays put (tests optimizer robustness to measurement noise)."""
+    sigma: float = 0.1
+
+    def transform_tpd(self, round_idx, tpd, rng):
+        return float(tpd * max(1.0 + rng.normal(0.0, self.sigma), 1e-3))
+
+
+_EVENT_TYPES = {cls.__name__: cls for cls in
+                (PSpeedDrift, ClientChurn, StragglerSpike, LatencyNoise)}
+
+
+def event_from_dict(d: Dict[str, Any]) -> ScheduledEvent:
+    d = dict(d)
+    cls = _EVENT_TYPES[d.pop("event")]
+    return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# the scenario spec
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """One declarative experiment world (see module docstring)."""
+    name: str
+    kind: str                            # 'simulated' | 'emulated'
+    depth: int = 3
+    width: int = 2
+    trainers_per_leaf: int = 2
+    n_clients: Optional[int] = None
+    pool: PoolProfile = field(default_factory=PoolProfile)
+    events: Tuple[ScheduledEvent, ...] = ()
+    rounds: int = 100                    # default round budget
+    description: str = ""
+
+    # simulated-only knobs
+    memory_penalty: float = 0.0
+    pods: Optional[int] = None           # two-tier topology: pod count
+    ici_cost: float = 0.005
+    dcn_cost: float = 0.05
+
+    # emulated-only knobs
+    model: str = "paper-mlp-1m8"
+    local_steps: int = 2
+    batch_size: int = 32
+    comm_latency: float = 0.0
+    timing: str = "deterministic"
+    engine: str = "auto"
+
+    def __post_init__(self):
+        if self.kind not in ("simulated", "emulated"):
+            raise ValueError(f"unknown scenario kind {self.kind!r}")
+
+    # -- construction ------------------------------------------------------
+    def make_hierarchy(self) -> Hierarchy:
+        return Hierarchy(depth=self.depth, width=self.width,
+                         trainers_per_leaf=self.trainers_per_leaf,
+                         n_clients=self.n_clients)
+
+    def make_pool(self, seed: int) -> ClientPool:
+        return self.pool.make(self.make_hierarchy().total_clients, seed)
+
+    def make_environment(self, seed: int = 0):
+        """Build a fresh Environment for one (strategy, seed) run."""
+        from repro.experiments.environments import build_environment
+        return build_environment(self, seed)
+
+    def make_events(self) -> Tuple[ScheduledEvent, ...]:
+        return tuple(e.fresh() for e in self.events)
+
+    # -- variants ----------------------------------------------------------
+    def with_overrides(self, **overrides) -> "ScenarioSpec":
+        """``dataclasses.replace`` with CLI-friendly string coercion."""
+        coerced = {}
+        by_name = {f.name: f for f in dataclasses.fields(self)}
+        for k, v in overrides.items():
+            if k not in by_name:
+                accepted = ", ".join(sorted(by_name))
+                raise TypeError(f"scenario {self.name!r} has no field "
+                                f"{k!r}; fields: {accepted}")
+            try:
+                coerced[k] = _coerce(v, getattr(self, k))
+            except ValueError:
+                raise TypeError(
+                    f"cannot parse {k}={v!r} for scenario "
+                    f"{self.name!r} (current value "
+                    f"{getattr(self, k)!r})") from None
+        return dataclasses.replace(self, **coerced)
+
+    # -- serialization (for the versioned result artifact) -----------------
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["pool"] = dataclasses.asdict(self.pool)
+        d["events"] = [e.to_dict() for e in self.events]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ScenarioSpec":
+        d = dict(d)
+        d["pool"] = PoolProfile(**d.get("pool", {}))
+        d["events"] = tuple(event_from_dict(e) for e in d.get("events", ()))
+        return cls(**d)
+
+
+def _coerce(value, current):
+    """Coerce a CLI string to the field's current type."""
+    if not isinstance(value, str) or isinstance(current, str):
+        return value
+    if isinstance(current, bool):
+        return value.lower() in ("1", "true", "yes", "on")
+    if isinstance(current, int) or (current is None and value.isdigit()):
+        return int(value)
+    if isinstance(current, float):
+        return float(value)
+    if current is None:
+        try:
+            return int(value)
+        except ValueError:
+            return value
+    return value
+
+
+# ---------------------------------------------------------------------------
+# preset registry
+# ---------------------------------------------------------------------------
+_SCENARIOS: Dict[str, ScenarioSpec] = {}
+
+
+def register_scenario(spec: ScenarioSpec) -> ScenarioSpec:
+    key = spec.name.lower()
+    if key in _SCENARIOS:
+        raise ValueError(f"scenario {spec.name!r} registered twice")
+    _SCENARIOS[key] = spec
+    return spec
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    spec = _SCENARIOS.get(name.lower())
+    if spec is None:
+        known = ", ".join(sorted(_SCENARIOS))
+        raise KeyError(f"unknown scenario {name!r}; registered: {known}")
+    return spec
+
+
+def list_scenarios() -> Tuple[ScenarioSpec, ...]:
+    return tuple(_SCENARIOS.values())
+
+
+# the Fig. 4 docker resource limits -> relative speed units (one beefy,
+# two medium, seven tiny containers; see bench_fig4_cluster)
+_FIG4_PSPEED = (4.0, 2.0, 2.0) + (1.0,) * 7
+_FIG4_MEMCAP = (2048.0, 1024.0, 1024.0) + (64.0,) * 7
+
+register_scenario(ScenarioSpec(
+    name="paper-fig3", kind="simulated", depth=3, width=4,
+    trainers_per_leaf=2, rounds=100,
+    description="One Fig. 3 grid cell: PSO against the eqs. 6-7 TPD "
+                "cost model, paper Sec. IV-A client distributions."))
+
+register_scenario(ScenarioSpec(
+    name="paper-fig4", kind="emulated", depth=2, width=2,
+    trainers_per_leaf=1, n_clients=10,
+    pool=PoolProfile(kind="explicit", mdatasize=30.0,
+                     memcap=_FIG4_MEMCAP, pspeed=_FIG4_PSPEED),
+    rounds=50, model="paper-mlp-1m8", local_steps=2, batch_size=32,
+    comm_latency=0.002, timing="deterministic",
+    description="The 10-client heterogeneous docker/MQTT cluster "
+                "(Fig. 4), emulated single-host."))
+
+register_scenario(ScenarioSpec(
+    name="drift", kind="simulated", depth=3, width=2, trainers_per_leaf=2,
+    events=(PSpeedDrift(at_round=60, mode="reverse"),), rounds=180,
+    description="Client speeds reversed at round 60: the 'container got "
+                "throttled' drift scenario (paper Sec. VI)."))
+
+register_scenario(ScenarioSpec(
+    name="churn", kind="simulated", depth=3, width=2, trainers_per_leaf=2,
+    n_clients=24, events=(ClientChurn(every=10, fraction=0.25),),
+    rounds=120,
+    description="A quarter of the pool replaced by fresh devices every "
+                "10 rounds."))
+
+register_scenario(ScenarioSpec(
+    name="straggler", kind="simulated", depth=3, width=2,
+    trainers_per_leaf=2, n_clients=24,
+    events=(StragglerSpike(every=15, duration=5, fraction=0.2,
+                           slowdown=6.0),),
+    rounds=120,
+    description="Transient 6x slowdown spikes on 20% of clients."))
+
+register_scenario(ScenarioSpec(
+    name="latency", kind="simulated", depth=3, width=2,
+    trainers_per_leaf=2, events=(LatencyNoise(sigma=0.15),), rounds=120,
+    description="15% multiplicative noise on the observed TPD signal."))
+
+register_scenario(ScenarioSpec(
+    name="two-tier", kind="simulated", depth=3, width=2,
+    trainers_per_leaf=2, n_clients=24, pods=2, rounds=150,
+    description="Two TPU pods: cross-pod aggregation edges pay DCN "
+                "rates (~10x ICI); probes black-box locality discovery."))
+
+register_scenario(ScenarioSpec(
+    name="large-256", kind="simulated", depth=4, width=3,
+    trainers_per_leaf=2, n_clients=256, rounds=150,
+    description="256-client pool on a depth-4/width-3 tree (40 slots): "
+                "the scale smoke for placement search."))

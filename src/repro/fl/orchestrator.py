@@ -381,7 +381,7 @@ class FederatedOrchestrator:
         return float(loss), float(metrics.get("acc", 0.0))
 
     # ------------------------------------------------------------------
-    def _warmup(self) -> None:
+    def warmup(self) -> None:
         """Trace/compile everything once so round-0 timing is not skewed
         by compilation (the docker system has no such artifact)."""
         if self.engine == "batched":
@@ -408,31 +408,46 @@ class FederatedOrchestrator:
             jax.block_until_ready(jax.tree.leaves(acc)[0])
         self._evaluate()
 
+    # kept as an alias for callers of the historical private name
+    _warmup = warmup
+
+    def run_round(self, r: int, placement) -> RoundRecord:
+        """Execute ONE federated round at ``placement`` and return its
+        record (the black-box TPD plus train/agg split and eval metrics).
+
+        This is the single step both ``run`` and the experiment API's
+        ``EmulatedEnvironment`` drive, so a strategy observed through
+        either path sees bit-identical TPDs. Call ``warmup()`` once
+        before the first round.
+        """
+        placement = np.asarray(placement, np.int64)
+        self.hierarchy.validate_placement(placement)
+
+        if self.engine == "loop":
+            new_params, train_time, agg_time = self._round_loop(r, placement)
+        else:
+            new_params, train_time, agg_time = \
+                self._round_batched(r, placement)
+        self.params = new_params
+
+        tpd = (train_time + agg_time) * self.time_scale
+        loss, acc = self._evaluate()
+        return RoundRecord(
+            round_idx=r, placement=placement.tolist(), tpd=tpd,
+            train_time=train_time, agg_time=agg_time,
+            loss=loss, accuracy=acc)
+
     def run(self, strategy: PlacementStrategy, rounds: int,
             verbose: bool = False) -> FederatedRunResult:
         result = FederatedRunResult(strategy=strategy.name)
-        self._warmup()
+        self.warmup()
         for r in range(rounds):
             placement = np.asarray(strategy.propose(r), np.int64)
-            self.hierarchy.validate_placement(placement)
-
-            if self.engine == "loop":
-                new_params, train_time, agg_time = \
-                    self._round_loop(r, placement)
-            else:
-                new_params, train_time, agg_time = \
-                    self._round_batched(r, placement)
-            self.params = new_params
-
-            tpd = (train_time + agg_time) * self.time_scale
-            strategy.observe(placement, tpd)
-
-            loss, acc = self._evaluate()
-            result.rounds.append(RoundRecord(
-                round_idx=r, placement=placement.tolist(), tpd=tpd,
-                train_time=train_time, agg_time=agg_time,
-                loss=loss, accuracy=acc))
+            record = self.run_round(r, placement)
+            strategy.observe(placement, record.tpd)
+            result.rounds.append(record)
             if verbose:
-                print(f"[{strategy.name}] round {r:3d} tpd={tpd:8.4f} "
-                      f"loss={loss:.4f} acc={acc:.3f}")
+                print(f"[{strategy.name}] round {r:3d} "
+                      f"tpd={record.tpd:8.4f} "
+                      f"loss={record.loss:.4f} acc={record.accuracy:.3f}")
         return result

@@ -22,7 +22,9 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.hierarchy import ClientPool
 from repro.core.cost_model import CostModel
-from repro.core.placement import make_strategy
+import dataclasses
+
+from repro.core.registry import create_strategy, list_strategies
 from repro.data.synthetic import make_federated_dataset
 from repro.fl.distributed import choose_fl_hierarchy
 from repro.fl.orchestrator import FederatedOrchestrator
@@ -32,9 +34,14 @@ from repro.models import get_model
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="paper-mlp-1m8")
-    ap.add_argument("--strategy", default="pso",
-                    choices=["pso", "random", "uniform", "ga", "greedy",
-                             "exhaustive"])
+    # only strategies constructible from (hierarchy, clients, cost_model)
+    # alone — ones with required config fields (static's placement) have
+    # no CLI surface here
+    cli_ok = [i.name for i in list_strategies()
+              if all(f.default is not dataclasses.MISSING
+                     or f.default_factory is not dataclasses.MISSING
+                     for f in dataclasses.fields(i.config_cls))]
+    ap.add_argument("--strategy", default="pso", choices=sorted(cli_ok))
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--clients", type=int, default=15)
     ap.add_argument("--local-steps", type=int, default=2)
@@ -57,7 +64,7 @@ def main() -> int:
     data = make_federated_dataset(
         cfg, n_clients=hierarchy.total_clients, seed=args.seed)
 
-    strategy = make_strategy(
+    strategy = create_strategy(
         args.strategy, hierarchy, seed=args.seed, clients=clients,
         cost_model=CostModel(hierarchy, clients))
     orch = FederatedOrchestrator(

@@ -1,0 +1,131 @@
+"""The typed strategy registry: aliases, config validation, the
+make_strategy deprecation shim, and the repro.core export surface."""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import (AdaptivePSOPlacement, CEMPlacement, ClientPool,
+                        CostModel, GreedySpeedPlacement, Hierarchy,
+                        PSOPlacement, SimulatedAnnealingPlacement,
+                        build_config, create_strategy, list_strategies,
+                        make_strategy, resolve_strategy, strategy_names)
+from repro.core.placement import PSOConfig
+
+
+@pytest.fixture()
+def small():
+    h = Hierarchy(depth=2, width=2, trainers_per_leaf=1, n_clients=10)
+    return h, ClientPool.random(h.total_clients, seed=0)
+
+
+def test_all_placement_strategies_exported_from_core():
+    # the docstring promise: every placement strategy is importable from
+    # repro.core (AdaptivePSO / SA / CEM were historically missing)
+    for name in ("PlacementStrategy", "RandomPlacement",
+                 "UniformRoundRobinPlacement", "PSOPlacement",
+                 "AdaptivePSOPlacement", "GAPlacement",
+                 "SimulatedAnnealingPlacement", "CEMPlacement",
+                 "GreedySpeedPlacement", "ExhaustivePlacement",
+                 "StaticPlacement"):
+        assert hasattr(core, name), f"repro.core missing {name}"
+        assert name in core.__all__
+
+
+def test_every_registered_strategy_constructs(small):
+    h, pool = small
+    cm = CostModel(h, pool)
+    for info in list_strategies():
+        kw = {"placement": (0, 1, 2)} if info.name == "static" else {}
+        s = create_strategy(info.name, h, seed=0, clients=pool,
+                            cost_model=cm, **kw)
+        p = s.propose(0)
+        h.validate_placement(np.asarray(p))
+        s.observe(np.asarray(p), 1.0)
+
+
+def test_aliases_resolve_to_canonical(small):
+    h, pool = small
+    for alias, canonical in (("adaptive", "pso-adaptive"),
+                             ("flag-swap", "pso"),
+                             ("round-robin", "uniform"),
+                             ("oracle", "exhaustive"),
+                             ("speed-sorted", "greedy"),
+                             ("fixed", "static")):
+        assert resolve_strategy(alias).name == canonical
+    s = create_strategy("adaptive", h, seed=0)
+    assert isinstance(s, AdaptivePSOPlacement)
+    assert isinstance(create_strategy("annealing", h),
+                      SimulatedAnnealingPlacement)
+    assert isinstance(create_strategy("cross-entropy", h), CEMPlacement)
+
+
+def test_unknown_strategy_names_registered(small):
+    with pytest.raises(KeyError, match="registered:"):
+        resolve_strategy("nope")
+
+
+def test_unknown_kwargs_rejected_with_field_names(small):
+    h, pool = small
+    # the historical bug: greedy silently dropped n_particles
+    with pytest.raises(TypeError, match=r"n_particles.*accepted fields"):
+        create_strategy("greedy", h, clients=pool, n_particles=20)
+    with pytest.raises(TypeError, match="inertia"):
+        create_strategy("pso", h, inertai=0.5)  # typo'd kwarg
+    # error names the accepted config fields for the strategy
+    with pytest.raises(TypeError, match="drift_factor"):
+        create_strategy("pso-adaptive", h, bogus=1)
+
+
+def test_typed_config_instances(small):
+    h, _ = small
+    s = create_strategy("pso", h, config=PSOConfig(n_particles=7))
+    assert s.pso.n_particles == 7
+    with pytest.raises(TypeError, match="not both"):
+        create_strategy("pso", h, config=PSOConfig(), n_particles=3)
+    with pytest.raises(TypeError, match="PSOConfig"):
+        create_strategy("pso", h, config=build_config("ga"))
+
+
+def test_context_requirements(small):
+    h, pool = small
+    with pytest.raises(ValueError, match="client pool"):
+        create_strategy("greedy", h)
+    with pytest.raises(ValueError, match="cost model"):
+        create_strategy("exhaustive", h)
+    g = create_strategy("greedy", h, clients=pool)
+    assert isinstance(g, GreedySpeedPlacement)
+    # context args are accepted-and-ignored by strategies not needing them
+    assert isinstance(create_strategy("pso", h, clients=pool,
+                                      cost_model=CostModel(h, pool)),
+                      PSOPlacement)
+
+
+def test_make_strategy_shim_deprecated_but_equivalent(small):
+    h, pool = small
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = make_strategy("pso", h, seed=3, n_particles=4)
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+    new = create_strategy("pso", h, seed=3, n_particles=4)
+    # same construction: identical proposal stream
+    for r in range(6):
+        a, b = old.propose(r), new.propose(r)
+        assert np.array_equal(a, b)
+        old.observe(a, 1.0)
+        new.observe(b, 1.0)
+
+
+def test_make_strategy_shim_validates_kwargs(small):
+    h, pool = small
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(TypeError, match="accepted fields"):
+            make_strategy("greedy", h, clients=pool, n_particles=20)
+
+
+def test_strategy_names_cover_paper_set():
+    names = set(strategy_names())
+    assert {"pso", "pso-adaptive", "random", "uniform", "ga", "sa",
+            "cem", "greedy", "exhaustive", "static"} <= names
