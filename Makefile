@@ -1,7 +1,8 @@
 # Tier-1 verification: the full test suite exactly as CI runs it.
 PY ?= python
 
-.PHONY: verify test bench-round bench-fig4 experiments-smoke
+.PHONY: verify test bench-round bench-fig4 bench-scale \
+	bench-scale-smoke experiments-smoke
 
 verify test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -11,6 +12,18 @@ bench-round:
 
 bench-fig4:
 	PYTHONPATH=src $(PY) benchmarks/bench_fig4_cluster.py --rounds 50
+
+# swarm-scale sweep: scalar vs exact-fast vs batched, 1k -> 10k clients;
+# writes + schema-checks artifacts/benchmarks/BENCH_scale.json
+bench-scale:
+	PYTHONPATH=src $(PY) benchmarks/bench_scale.py
+	PYTHONPATH=src $(PY) benchmarks/bench_scale.py --validate \
+		artifacts/benchmarks/BENCH_scale.json
+
+bench-scale-smoke:
+	PYTHONPATH=src $(PY) benchmarks/bench_scale.py --smoke
+	PYTHONPATH=src $(PY) benchmarks/bench_scale.py --validate \
+		artifacts/benchmarks/BENCH_scale.json
 
 # the CI smoke job, runnable locally: both paper tracks + one event
 # scenario through the experiments CLI, then schema validation

@@ -1,0 +1,256 @@
+"""Swarm-scale sweep benchmark: the scalar seed-era path vs the exact
+fast path vs the batched lockstep runner, 1k -> 10k clients.
+
+Three rungs per scenario, all driving the SAME strategies over the same
+seeds (their trajectories are bit-identical — the bench asserts it):
+
+* ``scalar``     — the seed-era evaluation path: ``CostModel.tpd``
+  (Python trainer-assignment + per-cluster loops) per step, and the
+  seed-era PSO internals (no dedup fast paths, no placement caches)
+  reconstructed by ``_SeedEraPSO``. This is what ran before the
+  swarm-scale engine landed.
+* ``sequential`` — today's sequential runner: ``env.step`` on the exact
+  float64 batch-of-1 evaluator (``CostModel.tpd_fast``).
+* ``batched``    — the lockstep runner: one exact
+  ``PooledTPDEvaluator`` call per round for every (strategy, seed) run.
+
+Writes the ``BENCH_scale.json`` artifact (schema-versioned; CI runs
+``--smoke`` and ``--validate`` to fail on drift).
+
+Run:  PYTHONPATH=src python benchmarks/bench_scale.py [--smoke]
+      PYTHONPATH=src python benchmarks/bench_scale.py --validate PATH
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.pso import FlagSwapPSO
+from repro.core.registry import create_strategy
+from repro.experiments import get_scenario, run_experiment
+
+OUT = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
+BENCH_SCHEMA = "repro.benchmarks/scale"
+BENCH_SCHEMA_VERSION = 1
+
+_ROW_KEYS = ("scenario", "clients", "slots", "rounds", "seeds",
+             "strategies", "batched_s", "sequential_s", "scalar_s",
+             "scalar_rounds_measured", "scalar_s_full",
+             "speedup_batched_vs_scalar", "speedup_sequential_vs_scalar",
+             "rounds_per_sec_batched", "identical_artifacts")
+
+
+class _SeedEraPSO(FlagSwapPSO):
+    """Seed-era FlagSwapPSO hot-path cost profile (pre-scale-engine):
+    per-call set-loop dedup with no sort fast path / memo, uncached
+    ``converged`` re-deduplicating every particle, uncached
+    ``best_placement``. Trajectories are value-identical to the current
+    implementation — only the cost differs — so the baseline measures
+    the old speed of the SAME computation."""
+
+    def _dedup(self, pos):
+        pos = np.floor(pos).astype(np.int64) % self.n_clients
+        seen = set()
+        for i in range(len(pos)):
+            c = int(pos[i])
+            while c in seen:
+                c = (c + 1) % self.n_clients
+            pos[i] = c
+            seen.add(c)
+        return pos
+
+    def ask(self):
+        return self.placement(self._cursor)
+
+    @property
+    def converged(self):
+        ps = {tuple(self.placement(i)) for i in range(self.n_particles)}
+        return len(ps) == 1
+
+    @property
+    def best_placement(self):
+        return self._dedup(self.gbest_x)
+
+
+def scalar_sweep(spec, strategies, seeds, rounds):
+    """The seed-era sequential loop: strategies against the scalar
+    ``CostModel.tpd``, seed-era PSO internals. Returns the per-run tpd
+    trajectories (for the identity check against the fast paths)."""
+    trajectories = []
+    for name in strategies:
+        for seed in seeds:
+            env = spec.make_environment(seed)
+            strat = create_strategy(name, env.hierarchy, seed=seed,
+                                    clients=env.clients,
+                                    cost_model=env.cost_model)
+            old = getattr(strat, "pso", None)
+            if old is not None:  # same hyperparameters, seed-era costs
+                strat.pso = _SeedEraPSO(
+                    n_slots=old.n_slots, n_clients=old.n_clients,
+                    n_particles=old.n_particles, inertia=old.inertia,
+                    c1=old.c1, c2=old.c2, seed=seed)
+                strat.pso.v_max = old.v_max
+            env.begin()
+            tpds = []
+            for r in range(rounds):
+                p = np.asarray(strat.propose(r), np.int64)
+                env.hierarchy.validate_placement(p)
+                t = float(env.cost_model.tpd(p))
+                strat.observe(p, t)
+                tpds.append(t)
+            trajectories.append(tpds)
+    return trajectories
+
+
+def _best_of(fn, reps):
+    best, result = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, result
+
+
+def bench_scenario(name, strategies, seeds, *, rounds=None,
+                   scalar_rounds=None, reps=4, scalar_reps=2):
+    spec = get_scenario(name)
+    rounds = rounds if rounds is not None else spec.rounds
+    scalar_rounds = min(scalar_rounds or rounds, rounds)
+    h = spec.make_hierarchy()
+    print(f"== {name}: {h.total_clients} clients, {h.dimensions} slots, "
+          f"{rounds} rounds x {list(seeds)} seeds x {strategies} ==")
+
+    tb, res_b = _best_of(
+        lambda: run_experiment(spec, strategies, rounds=rounds,
+                               seeds=seeds, progress=False,
+                               mode="batched"), reps)
+    ts, res_s = _best_of(
+        lambda: run_experiment(spec, strategies, rounds=rounds,
+                               seeds=seeds, progress=False,
+                               mode="sequential"), max(1, reps - 1))
+    t_scalar, scalar_traj = _best_of(
+        lambda: scalar_sweep(spec, strategies, seeds, scalar_rounds),
+        scalar_reps)
+    t_scalar_full = t_scalar * rounds / scalar_rounds
+
+    identical = [r.to_dict() for r in res_b.runs] == \
+        [r.to_dict() for r in res_s.runs]
+    # all three rungs computed the same trajectories, bit for bit
+    identical = identical and all(
+        run.tpds[:scalar_rounds] == traj
+        for run, traj in zip(res_b.runs, scalar_traj))
+
+    row = {
+        "scenario": name, "clients": h.total_clients,
+        "slots": h.dimensions, "rounds": rounds, "seeds": list(seeds),
+        "strategies": list(strategies),
+        "batched_s": tb, "sequential_s": ts,
+        "scalar_s": t_scalar, "scalar_rounds_measured": scalar_rounds,
+        "scalar_s_full": t_scalar_full,
+        "speedup_batched_vs_scalar": t_scalar_full / tb,
+        "speedup_sequential_vs_scalar": t_scalar_full / ts,
+        "rounds_per_sec_batched": rounds / tb,
+        "identical_artifacts": bool(identical),
+    }
+    print(f"   scalar {t_scalar_full:7.2f}s"
+          f"{'' if scalar_rounds == rounds else ' (extrapolated)'}"
+          f" | sequential {ts:6.2f}s ({row['speedup_sequential_vs_scalar']:5.1f}x)"
+          f" | batched {tb:6.2f}s ({row['speedup_batched_vs_scalar']:5.1f}x)"
+          f" | {row['rounds_per_sec_batched']:7.0f} rounds/s"
+          f" | identical={identical}")
+    return row
+
+
+def validate_bench_dict(d) -> list:
+    """Schema gate for BENCH_scale.json; returns problems (empty = ok)."""
+    errors = []
+    if not isinstance(d, dict):
+        return ["artifact is not a JSON object"]
+    if d.get("schema") != BENCH_SCHEMA:
+        errors.append(f"schema != {BENCH_SCHEMA!r}")
+    if d.get("schema_version") != BENCH_SCHEMA_VERSION:
+        errors.append(f"schema_version != {BENCH_SCHEMA_VERSION}")
+    rows = d.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errors.append("rows missing/empty")
+        return errors
+    for i, row in enumerate(rows):
+        for k in _ROW_KEYS:
+            if k not in row:
+                errors.append(f"rows[{i}] missing {k!r}")
+        if not row.get("identical_artifacts", False):
+            errors.append(f"rows[{i}] parity check failed "
+                          f"(identical_artifacts is not true)")
+    if "pso_10k_50_rounds_s" in d and \
+            not isinstance(d["pso_10k_50_rounds_s"], (int, float)):
+        errors.append("pso_10k_50_rounds_s mistyped")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: large-1k only, few rounds")
+    ap.add_argument("--out", default=str(OUT / "BENCH_scale.json"))
+    ap.add_argument("--validate", metavar="PATH",
+                    help="schema-check an existing artifact and exit")
+    args = ap.parse_args(argv)
+
+    if args.validate:
+        d = json.loads(Path(args.validate).read_text())
+        errors = validate_bench_dict(d)
+        if errors:
+            print(f"{args.validate}: INVALID")
+            for e in errors:
+                print(f"  - {e}")
+            return 1
+        print(f"{args.validate}: OK ({len(d['rows'])} rows)")
+        for row in d["rows"]:
+            print(f"  {row['scenario']:10s} "
+                  f"batched {row['speedup_batched_vs_scalar']:6.1f}x "
+                  f"vs scalar, {row['rounds_per_sec_batched']:8.0f} "
+                  f"rounds/s")
+        return 0
+
+    results = {"schema": BENCH_SCHEMA,
+               "schema_version": BENCH_SCHEMA_VERSION,
+               "smoke": bool(args.smoke), "rows": []}
+    if args.smoke:
+        results["rows"].append(bench_scenario(
+            "large-1k", ["pso", "random"], (0, 1), rounds=10, reps=2,
+            scalar_reps=1))
+    else:
+        results["rows"].append(bench_scenario(
+            "large-1k", ["pso", "random"], (0, 1, 2)))
+        results["rows"].append(bench_scenario(
+            "large-4k", ["pso", "random"], (0, 1, 2), scalar_rounds=20,
+            scalar_reps=1))
+        results["rows"].append(bench_scenario(
+            "large-10k", ["pso", "random"], (0, 1, 2), scalar_rounds=10,
+            scalar_reps=1))
+        # the headline acceptance probe: 50-round PSO run at 10k clients
+        t0 = time.perf_counter()
+        run_experiment("large-10k", ["pso"], rounds=50, seeds=(0,),
+                       progress=False, mode="batched")
+        results["pso_10k_50_rounds_s"] = time.perf_counter() - t0
+        print(f"   large-10k 50-round PSO run: "
+              f"{results['pso_10k_50_rounds_s']:.2f}s")
+
+    errors = validate_bench_dict(results)
+    if errors:
+        print(f"refusing to write schema-invalid artifact: {errors}")
+        return 1
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=1))
+    print(f"-> wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,17 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 
+def rows_with_duplicates(rows: np.ndarray) -> np.ndarray:
+    """(R, D) int rows -> (R,) bool: which rows repeat a value.
+
+    The shared duplicate-id detection the scale engine's fast paths key
+    off (PSO dedup, batched-runner validation, the uniform-TPD
+    fallback) — one sort + adjacent compare per row, no sets.
+    """
+    srt = np.sort(rows, axis=1)
+    return (srt[:, 1:] == srt[:, :-1]).any(axis=1)
+
+
 @dataclass(frozen=True)
 class LevelPlan:
     """Flattened gather/segment tables for ONE aggregation level.
@@ -71,21 +82,21 @@ class Hierarchy:
                 f"width={self.width} t/leaf={self.trainers_per_leaf}, "
                 f"got {self.n_clients}")
 
-    # ---- sizes -----------------------------------------------------------
-    @property
+    # ---- sizes (cached: these sit on per-round hot paths) -----------------
+    @cached_property
     def dimensions(self) -> int:
         """Paper eq. 5: number of aggregator slots."""
         return sum(self.width ** i for i in range(self.depth))
 
-    @property
+    @cached_property
     def n_leaves(self) -> int:
         return self.width ** (self.depth - 1)
 
-    @property
+    @cached_property
     def min_clients(self) -> int:
         return self.dimensions + self.n_leaves * self.trainers_per_leaf
 
-    @property
+    @cached_property
     def total_clients(self) -> int:
         return self.n_clients if self.n_clients is not None else self.min_clients
 
@@ -111,6 +122,17 @@ class Hierarchy:
             starts.append(starts[-1] + count)
             count *= self.width
         return starts  # length depth+1; starts[l]..starts[l+1] are level l
+
+    @cached_property
+    def kids_table(self) -> np.ndarray:
+        """(dimensions, width) child-slot table, -1 padded — the static
+        gather operand every vectorized TPD evaluator keys off (cached:
+        rebuilding it per evaluator is O(D*W) Python)."""
+        kids = np.full((self.dimensions, self.width), -1, np.int32)
+        for s in range(self.dimensions):
+            ks = self.children_slots(s)
+            kids[s, : len(ks)] = ks
+        return kids
 
     def children_slots(self, slot: int) -> List[int]:
         """Child aggregator slots (empty for leaf aggregators)."""
@@ -233,10 +255,30 @@ class ClientPool:
     """Simulated client attributes (paper Sec. IV-A).
 
     memcap ~ U[10, 50); pspeed ~ U[5, 15); mdatasize fixed at 5 units.
+
+    ``version`` is a mutation counter consumed by the cached vectorized
+    TPD evaluators (an O(1) staleness check instead of hashing every
+    attribute array). Rebinding an attribute (``pool.pspeed = ...``)
+    bumps it automatically; after IN-PLACE edits (``pool.pspeed[i] = v``)
+    callers must call :meth:`touch` — the event schedules in
+    ``repro.experiments.scenarios`` do.
     """
     memcap: np.ndarray
     pspeed: np.ndarray
     mdatasize: np.ndarray
+    version: int = 0
+
+    _ATTRS = ("memcap", "pspeed", "mdatasize")
+
+    def __setattr__(self, name, value):
+        object.__setattr__(self, name, value)
+        if name in self._ATTRS:
+            object.__setattr__(self, "version",
+                               getattr(self, "version", 0) + 1)
+
+    def touch(self) -> None:
+        """Declare an in-place attribute mutation (invalidates caches)."""
+        object.__setattr__(self, "version", self.version + 1)
 
     @classmethod
     def random(cls, n_clients: int, seed: int = 0,

@@ -60,6 +60,8 @@ class PSOConfig:
     velocity_factor: float = 0.1
     exploit_after_convergence: bool = True
     exploit_when_stagnant: bool = True
+    # off for scale scenarios: don't accumulate (P,) arrays per iteration
+    record_per_particle: bool = True
 
 
 @dataclass(frozen=True)
@@ -165,13 +167,15 @@ class PSOPlacement(PlacementStrategy):
                  inertia: float = 0.01, c1: float = 0.01, c2: float = 1.0,
                  velocity_factor: float = 0.1, seed: int = 0,
                  exploit_after_convergence: bool = True,
-                 exploit_when_stagnant: bool = True):
+                 exploit_when_stagnant: bool = True,
+                 record_per_particle: bool = True):
         super().__init__(hierarchy, seed)
         self.pso = FlagSwapPSO(
             n_slots=hierarchy.dimensions,
             n_clients=hierarchy.total_clients,
             n_particles=n_particles, inertia=inertia, c1=c1, c2=c2,
-            velocity_factor=velocity_factor, seed=seed)
+            velocity_factor=velocity_factor, seed=seed,
+            record_per_particle=record_per_particle)
         self.exploit_after_convergence = exploit_after_convergence
         # once a FULL sweep passes without improving gbest, alternate
         # exploit/test rounds: the system banks the found placement's

@@ -19,30 +19,47 @@ fitness) pairs. Two driving modes:
 
 * ``run(fitness_fn, iterations)`` — the simulation loop (Fig. 3): every
   particle is evaluated each iteration; per-iteration swarm statistics
-  are recorded for the convergence plots.
+  are recorded for the convergence plots. The loop is whole-swarm
+  vectorized — one (P, 2, D) random draw, one (P, D) velocity/position
+  update, one first-argmax gbest resolution per iteration — and
+  bit-identical to the per-particle reference loop, which is kept as
+  ``_run_reference`` (the parity oracle the tests pin against).
 * ``ask()`` / ``tell()`` — the deployment loop (Fig. 4): each FL round
   tests ONE particle's placement against the *measured* round delay,
   cycling through the swarm (this is how SDFLMQ integrates it — one
   arrangement per round, no client telemetry).
+
+Deduped placements are cached per particle and invalidated only for
+particles whose position actually moved, so the per-round ``converged``
+check in deployment mode stops re-deduplicating the whole swarm.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
+
+from repro.core.hierarchy import rows_with_duplicates
 
 
 @dataclass
 class SwarmHistory:
-    """Per-iteration fitness statistics (for Fig. 3-style plots)."""
+    """Per-iteration fitness statistics (for Fig. 3-style plots).
+
+    ``record_per_particle=False`` drops the (P,)-per-iteration arrays
+    (the scalar best/worst/mean series stay) so 10k-iteration scale
+    sweeps don't accumulate unbounded per-iteration state.
+    """
     per_particle: List[np.ndarray] = field(default_factory=list)  # (P,) TPD
     best: List[float] = field(default_factory=list)
     worst: List[float] = field(default_factory=list)
     mean: List[float] = field(default_factory=list)
+    record_per_particle: bool = True
 
     def record(self, tpds: np.ndarray) -> None:
-        self.per_particle.append(tpds.copy())
+        if self.record_per_particle:
+            self.per_particle.append(tpds.copy())
         self.best.append(float(tpds.min()))
         self.worst.append(float(tpds.max()))
         self.mean.append(float(tpds.mean()))
@@ -61,7 +78,8 @@ class FlagSwapPSO:
 
     def __init__(self, n_slots: int, n_clients: int, n_particles: int = 10,
                  inertia: float = 0.01, c1: float = 0.01, c2: float = 1.0,
-                 velocity_factor: float = 0.1, seed: int = 0):
+                 velocity_factor: float = 0.1, seed: int = 0,
+                 record_per_particle: bool = True):
         if n_clients < n_slots:
             raise ValueError("need at least as many clients as slots")
         self.n_slots = n_slots
@@ -84,31 +102,128 @@ class FlagSwapPSO:
         self.pbest_f = np.full(n_particles, -np.inf)
         self.gbest_x = self.x[0].copy()
         self.gbest_f = -np.inf
-        self.history = SwarmHistory()
+        self.history = SwarmHistory(record_per_particle=record_per_particle)
         self._cursor = 0  # ask/tell round-robin particle index
         self.evaluations = 0
+        # deduped-placement cache: "all" = every row stale, else the set
+        # of particle rows whose position moved since the last read
+        self._pl_cache: Optional[np.ndarray] = None
+        self._pl_dirty: Union[str, set] = "all"
+        self._dedup_memo: dict = {}
+        # best_placement cache: gbest only changes on strict improvement
+        self._gbest_version = 0
+        self._gbest_pl: Optional[tuple] = None
 
     # ------------------------------------------------------------------
     def _dedup(self, pos: np.ndarray) -> np.ndarray:
         """Paper: 'Duplicates are resolved by incrementing until a unique
-        client ID is found.'"""
+        client ID is found.' (reference single-particle rule)
+
+        Two exact fast paths around the sequential loop: a sort detects
+        the no-collision case (the increment rule is the identity), and
+        collision-heavy rows are memoized on their floored ids — a
+        converged swarm re-deduplicates the SAME near-stationary row
+        every round, which otherwise dominates deployment-mode proposes.
+        """
         pos = np.floor(pos).astype(np.int64) % self.n_clients
+        if not rows_with_duplicates(pos[None])[0]:
+            return pos
+        key = pos.tobytes()
+        hit = self._dedup_memo.get(key)
+        if hit is not None:
+            return hit.copy()
+        out = self._dedup_ints(pos)
+        if len(self._dedup_memo) >= 256:
+            self._dedup_memo.clear()
+        self._dedup_memo[key] = out.copy()
+        return out
+
+    def _dedup_ints(self, pos: np.ndarray) -> np.ndarray:
+        """The increment rule, literally: the sequential reference the
+        array fixer below is parity-pinned against."""
+        vals = pos.tolist()
         seen = set()
-        for i in range(len(pos)):
-            c = int(pos[i])
+        n = self.n_clients
+        for i, c in enumerate(vals):
             while c in seen:
-                c = (c + 1) % self.n_clients
-            pos[i] = c
+                c = (c + 1) % n
+            vals[i] = c
             seen.add(c)
+        pos[:] = vals
         return pos
+
+    def _dedup_fix(self, pos: np.ndarray) -> np.ndarray:
+        """Array-based increment rule over (R, D) rows, in place.
+
+        Each pass bumps every non-first duplicate by one (mod C), with
+        first-ness decided by a STABLE sort — i.e. at every probe step
+        the lowest slot claims the contested id, which is exactly the
+        order the sequential loop resolves collisions in, so the
+        fixpoint is bit-identical to ``_dedup_ints`` per row (pinned
+        exhaustively by tests).
+
+        Measured note: pass count equals the longest probe chain, so on
+        near-converged swarms (many copies of one id) this degrades to
+        one argsort per duplicate and loses to the plain loop by 3-16x —
+        the hot paths therefore use sort-detection + memoization around
+        ``_dedup_ints`` and keep this as the whole-row batch formulation
+        (and the parity oracle for it).
+        """
+        C = self.n_clients
+        while True:
+            order = np.argsort(pos, axis=1, kind="stable")
+            sv = np.take_along_axis(pos, order, axis=1)
+            dup = sv[:, 1:] == sv[:, :-1]
+            if not dup.any():
+                return pos
+            rows, k = np.nonzero(dup)
+            bump = order[rows, k + 1]
+            pos[rows, bump] = (pos[rows, bump] + 1) % C
+
+    def _dedup_batch(self, pos: np.ndarray) -> np.ndarray:
+        """(P, D) positions -> (P, D) deduped placements, bit-identical
+        to applying ``_dedup`` row by row (parity-pinned). Array fast
+        path: a sort detects the rows that are already duplicate-free
+        (the common case) and passes them through untouched; only
+        colliding rows run the sequential increment rule."""
+        pos = np.floor(pos).astype(np.int64) % self.n_clients
+        for i in np.nonzero(rows_with_duplicates(pos))[0]:
+            self._dedup_ints(pos[i])
+        return pos
+
+    def placements(self) -> np.ndarray:
+        """All particles' current placements, (P, D) — a fresh copy of
+        the internal cache (safe to hold or mutate)."""
+        return self._placements_buf().copy()
+
+    def _placements_buf(self) -> np.ndarray:
+        """The LIVE dedup cache; only rows whose position moved since
+        the last call are re-deduplicated. Internal read-only use — the
+        buffer is rewritten in place by later calls."""
+        if self._pl_cache is None or self._pl_dirty == "all":
+            self._pl_cache = self._dedup_batch(self.x)
+        elif self._pl_dirty:
+            for i in self._pl_dirty:
+                self._pl_cache[i] = self._dedup(self.x[i])
+        self._pl_dirty = set()
+        return self._pl_cache
 
     def placement(self, i: int) -> np.ndarray:
         return self._dedup(self.x[i])
 
+    def _mark_moved(self, i: Optional[int] = None) -> None:
+        if i is None or self._pl_dirty == "all":
+            self._pl_dirty = "all"
+        else:
+            self._pl_dirty.add(i)
+
+    # ------------------------------------------------------------------
+    # reference per-particle updates (deployment mode + parity oracle)
+    # ------------------------------------------------------------------
     def _step_particle(self, i: int) -> None:
         """Velocity (eq. 2, clamped eq. 3) + position (eq. 4) update."""
-        r1 = self.rng.random(self.n_slots)
-        r2 = self.rng.random(self.n_slots)
+        # one (2, D) draw == the historical r1-then-r2 pair (same stream)
+        r1, r2 = self.rng.random((2, self.n_slots))
         self.v[i] = (self.inertia * self.v[i]
                      + self.c1 * r1 * (self.pbest_x[i] - self.x[i])
                      + self.c2 * r2 * (self.gbest_x - self.x[i]))
@@ -117,6 +232,7 @@ class FlagSwapPSO:
         # client ids only at evaluation time (_dedup) so sub-integer
         # velocity accumulates instead of being truncated away.
         self.x[i] = (self.x[i] + self.v[i]) % self.n_clients
+        self._mark_moved(i)
 
     def _update_bests(self, i: int, f: float) -> None:
         if f > self.pbest_f[i]:
@@ -125,13 +241,48 @@ class FlagSwapPSO:
         if f > self.gbest_f:
             self.gbest_f = f
             self.gbest_x = self.x[i].copy()
+            self._gbest_version += 1
+
+    # ------------------------------------------------------------------
+    # whole-swarm vectorized updates (simulation mode)
+    # ------------------------------------------------------------------
+    def _step_swarm(self) -> None:
+        """All particles' eq. 2-4 updates in three (P, D) array ops.
+
+        One (P, 2, D) draw consumes the generator stream in exactly the
+        order P sequential ``_step_particle`` calls would (numpy fills
+        C-order: particle 0's r1 then r2, then particle 1's, ...), and
+        every arithmetic op is elementwise — so this is bit-identical to
+        the reference loop, not merely close.
+        """
+        r = self.rng.random((self.n_particles, 2, self.n_slots))
+        self.v = (self.inertia * self.v
+                  + self.c1 * r[:, 0] * (self.pbest_x - self.x)
+                  + self.c2 * r[:, 1] * (self.gbest_x[None] - self.x))
+        np.clip(self.v, -self.v_max, self.v_max, out=self.v)
+        self.x = (self.x + self.v) % self.n_clients
+        self._mark_moved()
+
+    def _update_bests_swarm(self, fs: np.ndarray) -> None:
+        """Vectorized pbest/gbest update, sequential-equivalent: the
+        reference ascending-i loop leaves gbest at the FIRST particle
+        attaining the iteration maximum (strict improvement only), which
+        is exactly ``argmax``."""
+        improved = fs > self.pbest_f
+        self.pbest_f = np.where(improved, fs, self.pbest_f)
+        self.pbest_x = np.where(improved[:, None], self.x, self.pbest_x)
+        i = int(np.argmax(fs))
+        if fs[i] > self.gbest_f:
+            self.gbest_f = float(fs[i])
+            self.gbest_x = self.x[i].copy()
+            self._gbest_version += 1
 
     # ------------------------------------------------------------------
     # deployment mode: one particle per FL round
     # ------------------------------------------------------------------
     def ask(self) -> np.ndarray:
         """Placement to test this FL round (current particle, deduped)."""
-        return self.placement(self._cursor)
+        return self._placements_buf()[self._cursor].copy()
 
     def tell(self, fitness: float) -> None:
         """Report the measured fitness (= -TPD) for the last ask()."""
@@ -146,16 +297,39 @@ class FlagSwapPSO:
     # ------------------------------------------------------------------
     def run(self, fitness_fn: Callable, iterations: int = 100,
             batch_fitness_fn: Optional[Callable] = None) -> np.ndarray:
-        """Algorithm 1 main loop. ``fitness_fn(placement) -> f`` or, when
-        ``batch_fitness_fn`` is given, evaluate the whole swarm at once
-        (``(P, slots) -> (P,)``). Returns the gbest placement."""
+        """Algorithm 1 main loop, whole-swarm vectorized. ``fitness_fn
+        (placement) -> f`` or, when ``batch_fitness_fn`` is given,
+        evaluate the whole swarm at once (``(P, slots) -> (P,)``).
+        Returns the gbest placement. Bit-identical trajectories to
+        ``_run_reference`` (parity-pinned)."""
+        for _ in range(iterations):
+            # a copy: fitness callables must not corrupt the dedup cache
+            placements = self.placements()
+            if batch_fitness_fn is not None:
+                fs = np.asarray(batch_fitness_fn(placements), np.float64)
+            else:
+                fs = np.array([fitness_fn(p) for p in placements],
+                              np.float64)
+            self.evaluations += self.n_particles
+            self.history.record(-fs)  # record TPD (positive)
+            self._update_bests_swarm(fs)
+            self._step_swarm()
+        return self._dedup(self.gbest_x)
+
+    def _run_reference(self, fitness_fn: Callable, iterations: int = 100,
+                       batch_fitness_fn: Optional[Callable] = None
+                       ) -> np.ndarray:
+        """The seed-era per-particle loop, kept verbatim as the parity
+        oracle ``run`` is pinned against (tests assert bit-identical
+        positions, velocities, bests and history)."""
         for _ in range(iterations):
             placements = np.stack([self.placement(i)
                                    for i in range(self.n_particles)])
             if batch_fitness_fn is not None:
                 fs = np.asarray(batch_fitness_fn(placements), np.float64)
             else:
-                fs = np.array([fitness_fn(p) for p in placements], np.float64)
+                fs = np.array([fitness_fn(p) for p in placements],
+                              np.float64)
             self.evaluations += self.n_particles
             self.history.record(-fs)  # record TPD (positive)
             for i in range(self.n_particles):
@@ -166,13 +340,17 @@ class FlagSwapPSO:
 
     @property
     def best_placement(self) -> np.ndarray:
-        return self._dedup(self.gbest_x)
+        if self._gbest_pl is None or \
+                self._gbest_pl[0] != self._gbest_version:
+            self._gbest_pl = (self._gbest_version,
+                              self._dedup(self.gbest_x))
+        return self._gbest_pl[1].copy()
 
     @property
     def converged(self) -> bool:
         """All particles currently propose the same placement."""
-        ps = {tuple(self.placement(i)) for i in range(self.n_particles)}
-        return len(ps) == 1
+        ps = self._placements_buf()
+        return bool(np.all(ps == ps[0]))
 
     # ------------------------------------------------------------------
     # adaptation to system drift (paper Sec. VI future work)
@@ -199,3 +377,5 @@ class FlagSwapPSO:
         self.gbest_x = self.x[0].copy()
         self.gbest_f = -np.inf
         self._cursor = 0
+        self._gbest_version += 1
+        self._mark_moved()

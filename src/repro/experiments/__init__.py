@@ -31,7 +31,8 @@ from repro.experiments.results import (
     aggregate_runs,
     validate_result_dict,
 )
-from repro.experiments.runner import run_experiment, run_single
+from repro.experiments.runner import run_batched, run_experiment, \
+    run_single
 from repro.experiments.scenarios import (
     ClientChurn,
     LatencyNoise,
@@ -50,7 +51,7 @@ __all__ = [
     "RoundObservation", "build_environment",
     "ExperimentResult", "StrategyRun", "aggregate_runs",
     "validate_result_dict", "RESULT_SCHEMA", "RESULT_SCHEMA_VERSION",
-    "run_experiment", "run_single",
+    "run_experiment", "run_single", "run_batched",
     "ScenarioSpec", "PoolProfile", "ScheduledEvent", "PSpeedDrift",
     "ClientChurn", "StragglerSpike", "LatencyNoise",
     "get_scenario", "list_scenarios", "register_scenario",

@@ -67,9 +67,9 @@ def cmd_run(args) -> int:
     rounds = args.rounds if args.rounds is not None else spec.rounds
 
     print(f"== experiment {spec.name} [{spec.kind}] rounds={rounds} "
-          f"seeds={seeds} strategies={strategies} ==")
+          f"seeds={seeds} strategies={strategies} mode={args.mode} ==")
     result = run_experiment(spec, strategies, rounds=rounds, seeds=seeds,
-                            verbose=args.verbose)
+                            verbose=args.verbose, mode=args.mode)
 
     out = Path(args.out) if args.out else \
         DEFAULT_OUT_DIR / f"{spec.name}.json"
@@ -125,6 +125,11 @@ def build_parser() -> argparse.ArgumentParser:
     run_p.add_argument("--out", default=None,
                        help=f"artifact path (default "
                             f"{DEFAULT_OUT_DIR}/<scenario>.json)")
+    run_p.add_argument("--mode", default="auto",
+                       choices=("auto", "sequential", "batched"),
+                       help="sweep execution mode (batched = lockstep "
+                            "pooled evaluation, simulated only; both "
+                            "modes are bit-identical)")
     run_p.add_argument("--verbose", action="store_true")
 
     val_p = sub.add_parser("validate",

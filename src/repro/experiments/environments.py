@@ -77,9 +77,14 @@ class SimulatedEnvironment:
         pass
 
     def step(self, round_idx: int, placement) -> RoundObservation:
+        # single-placement fast path: the cached exact (float64 numpy)
+        # vectorized evaluator — bit-identical to CostModel.tpd (pinned
+        # by the parity suite), but the O(C) Python trainer/cluster
+        # loops never run, which is what makes 1k-10k client scenarios
+        # steppable at all
         placement = np.asarray(placement, np.int64)
         self.hierarchy.validate_placement(placement)
-        tpd = float(self.cost_model.tpd(placement))
+        tpd = self.cost_model.tpd_fast(placement)
         return RoundObservation(round_idx=round_idx, placement=placement,
                                 tpd=tpd)
 

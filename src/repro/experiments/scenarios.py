@@ -22,7 +22,16 @@ name            kind        what it reproduces / probes
 ``latency``     simulated   multiplicative noise on the observed TPD signal
 ``two-tier``    simulated   ICI/DCN pod topology (TwoTierCostModel)
 ``large-256``   simulated   256-client pool, depth-4 tree (scale smoke)
+``large-1k``    simulated   1k clients, depth-6/width-3 (364 slots)
+``large-4k``    simulated   4k clients, depth-5/width-4 (341 slots)
+``large-10k``   simulated   10k clients, depth-6/width-4 (1365 slots)
 ==============  ==========  ====================================================
+
+The ``large-*`` rungs are the swarm-scale regime: they are only
+practical through the exact vectorized evaluators
+(``CostModel.tpd_fast`` per step, ``PooledTPDEvaluator`` in the batched
+sweep runner) — the scalar eq. 6/7 loop costs milliseconds per call at
+these sizes (``benchmarks/bench_scale.py`` tracks the gap).
 
 Specs are frozen; derive variants with ``with_overrides(depth=4, ...)``
 (the CLI's ``--set key=value`` goes through the same path).
@@ -145,6 +154,7 @@ class ClientChurn(ScheduledEvent):
         who = rng.choice(n, size=k, replace=False)
         pool.memcap[who] = rng.uniform(10, 50, k)
         pool.pspeed[who] = rng.uniform(5, 15, k)
+        pool.touch()  # in-place edit: bump the evaluator-cache version
         return f"churn: replaced {k} clients"
 
 
@@ -173,6 +183,7 @@ class StragglerSpike(ScheduledEvent):
                     pool.pspeed[c] = original
                     restored += 1
             self._saved = {}
+            pool.touch()  # in-place edit: bump the cache version
             return f"stragglers recovered ({restored} clients)"
         if self._saved or round_idx < self.first_round or \
                 (round_idx - self.first_round) % self.every != 0:
@@ -182,6 +193,7 @@ class StragglerSpike(ScheduledEvent):
         who = rng.choice(n, size=k, replace=False)
         originals = {int(c): float(pool.pspeed[c]) for c in who}
         pool.pspeed[who] = pool.pspeed[who] / self.slowdown
+        pool.touch()  # in-place edit: bump the cache version
         self._saved = {c: (float(pool.pspeed[c]), v)
                        for c, v in originals.items()}
         self._until = round_idx + self.duration
@@ -403,3 +415,26 @@ register_scenario(ScenarioSpec(
     trainers_per_leaf=2, n_clients=256, rounds=150,
     description="256-client pool on a depth-4/width-3 tree (40 slots): "
                 "the scale smoke for placement search."))
+
+register_scenario(ScenarioSpec(
+    name="large-1k", kind="simulated", depth=6, width=3,
+    trainers_per_leaf=2, n_clients=1024, rounds=100,
+    description="1k-client pool on a depth-6/width-3 tree (364 slots, "
+                "~2.7 trainers/leaf — the paper's small-cluster regime "
+                "at scale); the bench_scale 20x-vs-scalar reference "
+                "point."))
+
+register_scenario(ScenarioSpec(
+    name="large-4k", kind="simulated", depth=5, width=4,
+    trainers_per_leaf=2, n_clients=4096, rounds=60,
+    description="4k-client pool on a depth-5/width-4 tree (341 slots, "
+                "~14.7 trainers/leaf — the stuffed-leaves regime): mid "
+                "swarm-scale rung."))
+
+register_scenario(ScenarioSpec(
+    name="large-10k", kind="simulated", depth=6, width=4,
+    trainers_per_leaf=2, n_clients=10000, rounds=50,
+    description="10k-client pool on a depth-6/width-4 tree (1365 "
+                "slots): the paper's 'many clients as candidates' "
+                "regime — a 50-round PSO run completes in seconds on "
+                "CPU."))

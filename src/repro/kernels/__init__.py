@@ -6,6 +6,7 @@ and an oracle in ``ref.py`` (pure jnp; the CPU/dry-run default path).
 """
 from repro.kernels.ops import (fedavg, fedavg_tree, flash_attention,
                                fused_adamw, rglru_scan)
+from repro.kernels.tpd import batch_tpd_pallas, tpd_kernel_inputs
 
 __all__ = ["fedavg", "fedavg_tree", "flash_attention", "fused_adamw",
-           "rglru_scan"]
+           "rglru_scan", "batch_tpd_pallas", "tpd_kernel_inputs"]

@@ -122,14 +122,27 @@ def test_batch_tpd_jax_and_numpy_paths_agree():
 
 def test_batch_tpd_tracks_in_place_client_mutation():
     """Mutating the ClientPool after a batch_tpd call must not serve a
-    stale cached evaluator."""
+    stale cached evaluator. The contract is the O(1) version counter:
+    in-place edits are declared with ``pool.touch()`` (event schedules
+    do), attribute rebinds bump the version automatically."""
     h, pool, cm = _setup(seed=4)
     rng = np.random.default_rng(4)
     placements = np.stack([
         rng.permutation(h.total_clients)[: h.dimensions]
         for _ in range(4)]).astype(np.int32)
     np.asarray(cm.batch_tpd(placements))          # build + cache
+    v0 = pool.version
     pool.mdatasize[:] = rng.uniform(1.0, 40.0, h.total_clients)
+    pool.touch()                                  # declare in-place edit
+    assert pool.version > v0
+    batch = np.asarray(cm.batch_tpd(placements))
+    scalar = np.array([cm.tpd(p) for p in placements])
+    np.testing.assert_allclose(batch, scalar, rtol=1e-5)
+    # fast path invalidates on the same token
+    assert cm.tpd_fast(placements[0]) == scalar[0]
+
+    # attribute REBINDS (what PSpeedDrift does) invalidate automatically
+    pool.pspeed = pool.pspeed[::-1].copy()
     batch = np.asarray(cm.batch_tpd(placements))
     scalar = np.array([cm.tpd(p) for p in placements])
     np.testing.assert_allclose(batch, scalar, rtol=1e-5)
