@@ -37,7 +37,22 @@ experiments-smoke:
 	PYTHONPATH=src $(PY) -m repro.experiments run churn \
 		--rounds 10 --seeds 0,1 --strategies pso,random \
 		--out artifacts/experiments/churn_smoke.json
+	PYTHONPATH=src $(PY) -m repro.experiments run flash-crowd \
+		--rounds 25 --seeds 0 --strategies pso,random \
+		--mode sequential \
+		--out artifacts/experiments/flash_crowd_seq_smoke.json
+	PYTHONPATH=src $(PY) -m repro.experiments run flash-crowd \
+		--rounds 25 --seeds 0 --strategies pso,random \
+		--mode batched \
+		--out artifacts/experiments/flash_crowd_bat_smoke.json
+	PYTHONPATH=src $(PY) -m repro.experiments run composite-storm \
+		--rounds 40 --seeds 0,1 --strategies pso,random \
+		--mode batched \
+		--out artifacts/experiments/composite_storm_smoke.json
 	PYTHONPATH=src $(PY) -m repro.experiments validate \
 		artifacts/experiments/fig4_smoke.json \
 		artifacts/experiments/fig3_smoke.json \
-		artifacts/experiments/churn_smoke.json
+		artifacts/experiments/churn_smoke.json \
+		artifacts/experiments/flash_crowd_seq_smoke.json \
+		artifacts/experiments/flash_crowd_bat_smoke.json \
+		artifacts/experiments/composite_storm_smoke.json

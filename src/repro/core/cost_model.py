@@ -307,13 +307,45 @@ class CostModel:
 
         return jax.jit(batch) if xp is jnp else batch
 
+    @property
+    def topology_version(self) -> int:
+        """How many times :meth:`retarget` swapped the hierarchy (0 for
+        a static run)."""
+        return getattr(self, "_topology_version", 0)
+
+    def retarget(self, hierarchy: Hierarchy) -> None:
+        """Swap in a new hierarchy after an elastic resize.
+
+        The elastic environments call this when the client population
+        crosses the current tree's capacity: the SAME cost model object
+        (strategies hold references to it) starts pricing rounds on the
+        new topology, and the bumped ``topology_version`` joins the
+        pool-mutation counter in :meth:`_client_token`, so every cached
+        evaluator — per-slot leaf constants included — is rebuilt on the
+        next call instead of serving stale-shape answers.
+        """
+        if hierarchy.total_clients != len(self.clients):
+            raise ValueError(
+                f"hierarchy expects {hierarchy.total_clients} clients, "
+                f"pool has {len(self.clients)}")
+        pod = getattr(self, "pod_of", None)
+        if pod is not None and len(pod) != hierarchy.total_clients:
+            raise ValueError(
+                "cannot retarget a two-tier cost model across a pool "
+                "resize: pod_of does not cover the new population")
+        object.__setattr__(self, "hierarchy", hierarchy)
+        object.__setattr__(self, "_topology_version",
+                           self.topology_version + 1)
+
     def _client_token(self) -> tuple:
-        """O(1) fingerprint of the client attrs baked into the cached
-        evaluators — the pool's mutation version counter (bumped by
-        attribute rebinds automatically; in-place editors call
-        ``ClientPool.touch()``), so in-place ClientPool edits can't
-        serve stale TPDs without hashing whole arrays per call."""
-        return (id(self.clients), self.clients.version)
+        """O(1) fingerprint of the client attrs + topology baked into
+        the cached evaluators — the pool's mutation version counter
+        (bumped by attribute rebinds automatically; in-place editors
+        call ``ClientPool.touch()``) plus the retarget counter, so
+        neither in-place ClientPool edits nor elastic re-hierarchization
+        can serve stale TPDs without hashing whole arrays per call."""
+        return (id(self.clients), self.clients.version,
+                self.topology_version)
 
     def _cached(self, attr: str, build):
         token = self._client_token()
@@ -464,6 +496,13 @@ class PooledTPDEvaluator:
         placements = np.asarray(placements, np.int32)
         versions = tuple(m._client_token() for m in self.models)
         if self._fn is None or versions != self._versions:
+            # elastic runs retarget models in place; a rebuild must not
+            # mix topology epochs (the batched runner groups runs into
+            # same-hierarchy cohorts before pooling)
+            for m in self.models[1:]:
+                if m.hierarchy != self.models[0].hierarchy:
+                    raise ValueError("pooled evaluation needs one shared "
+                                     "hierarchy shape")
             attrs = np.stack(
                 [m._attr_stack(np.float64) for m in self.models], axis=1)
             self._fn = self.models[0]._make_batch_tpd(

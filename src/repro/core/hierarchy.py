@@ -97,6 +97,15 @@ class Hierarchy:
         return self.dimensions + self.n_leaves * self.trainers_per_leaf
 
     @cached_property
+    def max_clients(self) -> int:
+        """Elastic capacity bound: the population at which the tree
+        counts as *overloaded* (every leaf carrying 2x its nominal
+        trainer share). The elastic environments re-hierarchize when the
+        (changing) population leaves ``[min_clients, max_clients]`` —
+        a static run never consults this."""
+        return self.dimensions + 2 * self.n_leaves * self.trainers_per_leaf
+
+    @cached_property
     def total_clients(self) -> int:
         return self.n_clients if self.n_clients is not None else self.min_clients
 
@@ -240,6 +249,19 @@ class Hierarchy:
                 n_clusters=stop - start))
         return RoundPlan(levels=tuple(out))
 
+    def slot_path(self, slot: int) -> Tuple[int, ...]:
+        """Root->slot path as child indices (root = empty path).
+
+        The path is the hierarchy-shape-independent identity of a slot:
+        two hierarchies' slots correspond iff their paths match, which is
+        what :func:`slot_remap` keys on.
+        """
+        path = []
+        while slot > 0:
+            path.append((slot - 1) % self.width)
+            slot = (slot - 1) // self.width
+        return tuple(reversed(path))
+
     def validate_placement(self, placement: Sequence[int]) -> None:
         p = np.asarray(placement, np.int64)
         if p.shape != (self.dimensions,):
@@ -248,6 +270,97 @@ class Hierarchy:
             raise ValueError("placement has duplicate client ids")
         if p.min() < 0 or p.max() >= self.total_clients:
             raise ValueError("placement client id out of range")
+
+
+def slot_remap(old: "Hierarchy", new: "Hierarchy") -> np.ndarray:
+    """(new.dimensions,) int32 table: new slot -> old slot, -1 for slots
+    with no counterpart.
+
+    Slots correspond by tree *path* (sequence of child indices from the
+    root), so the root always survives a re-hierarchization, a width
+    shrink drops the right-most subtrees, and a depth change drops or
+    grows the deepest levels. This is the remap the strategy ``migrate``
+    hooks consume to carry per-slot swarm state across a ``D`` change.
+    """
+    out = np.full(new.dimensions, -1, np.int32)
+    for s in range(new.dimensions):
+        idx = 0
+        for k in new.slot_path(s):
+            if k >= old.width:
+                idx = -1
+                break
+            idx = 1 + idx * old.width + k
+            if idx >= old.dimensions:
+                idx = -1
+                break
+        out[s] = idx
+    return out
+
+
+@dataclass(frozen=True)
+class TopologyUpdate:
+    """One elastic re-hierarchization, as handed to strategy ``migrate``
+    hooks: the hierarchy transition plus the index remaps needed to
+    carry per-slot / per-client state across it.
+
+    ``slot_remap`` maps new slot -> old slot (-1 = brand-new slot);
+    ``client_remap`` maps old client id -> new client id (-1 = departed;
+    ``None`` = ids unchanged, pure re-shaping). ``version`` is the
+    environment's topology epoch AFTER this update (first bump = 1).
+    """
+    version: int
+    old_hierarchy: Hierarchy
+    new_hierarchy: Hierarchy
+    slot_remap: np.ndarray
+    client_remap: Optional[np.ndarray] = None
+
+    @property
+    def old_n_clients(self) -> int:
+        return self.old_hierarchy.total_clients
+
+    @property
+    def new_n_clients(self) -> int:
+        return self.new_hierarchy.total_clients
+
+    def describe(self) -> str:
+        o, n = self.old_hierarchy, self.new_hierarchy
+        shape = (f"d{o.depth}w{o.width} D={o.dimensions}" if
+                 (o.depth, o.width) == (n.depth, n.width) else
+                 f"d{o.depth}w{o.width} D={o.dimensions} -> "
+                 f"d{n.depth}w{n.width} D={n.dimensions}")
+        return (f"topology v{self.version}: {self.old_n_clients} -> "
+                f"{self.new_n_clients} clients, {shape}")
+
+
+def fill_placement_holes(row: np.ndarray, n_clients: int,
+                         rng: np.random.Generator) -> np.ndarray:
+    """Fill the ``-1`` holes of a partially-carried placement row, in
+    place: one ``rng.permutation(n_clients)`` draw (only when holes
+    exist), holes taken in ascending slot order, skipping ids the row
+    already carries. THE re-seeding rule of every elastic migration —
+    `FlagSwapPSO.migrate` and ``repair_placement`` share it, so swarm
+    re-seeding and placement repair can never drift apart.
+    """
+    holes = np.nonzero(row < 0)[0]
+    if len(holes):
+        taken = set(int(c) for c in row[row >= 0])
+        fresh = [int(c) for c in rng.permutation(n_clients)
+                 if int(c) not in taken]
+        row[holes] = fresh[: len(holes)]
+    return row
+
+
+def compose_remaps(first: Optional[np.ndarray],
+                   second: Optional[np.ndarray]) -> Optional[np.ndarray]:
+    """Compose two old->new index remaps (``None`` = identity)."""
+    if first is None:
+        return None if second is None else second.copy()
+    if second is None:
+        return first.copy()
+    out = np.full(len(first), -1, first.dtype)
+    alive = first >= 0
+    out[alive] = second[first[alive]]
+    return out
 
 
 @dataclass
@@ -267,6 +380,9 @@ class ClientPool:
     pspeed: np.ndarray
     mdatasize: np.ndarray
     version: int = 0
+    # pending old->new id remaps from join/leave, drained (composed) by
+    # the elastic environments after each round's events have applied
+    _resizes: List[np.ndarray] = field(default_factory=list, repr=False)
 
     _ATTRS = ("memcap", "pspeed", "mdatasize")
 
@@ -279,6 +395,75 @@ class ClientPool:
     def touch(self) -> None:
         """Declare an in-place attribute mutation (invalidates caches)."""
         object.__setattr__(self, "version", self.version + 1)
+
+    # ---- elastic population (true resizes, not attribute masking) --------
+    def join(self, memcap, pspeed, mdatasize=None) -> np.ndarray:
+        """Append new clients; returns their (new) client ids.
+
+        Existing ids are unchanged — the logged remap is the identity
+        over the pre-join population.
+        """
+        memcap = np.atleast_1d(np.asarray(memcap, np.float64))
+        pspeed = np.atleast_1d(np.asarray(pspeed, np.float64))
+        if len(memcap) != len(pspeed):
+            raise ValueError("join needs matching memcap/pspeed lengths")
+        if mdatasize is None:
+            mdatasize = float(self.mdatasize[0]) if len(self) else 5.0
+        mdatasize = np.broadcast_to(
+            np.asarray(mdatasize, np.float64), memcap.shape).copy()
+        m = len(self)
+        self._resizes.append(np.arange(m, dtype=np.int64))
+        self.memcap = np.concatenate([self.memcap, memcap])
+        self.pspeed = np.concatenate([self.pspeed, pspeed])
+        self.mdatasize = np.concatenate([self.mdatasize, mdatasize])
+        return np.arange(m, m + len(memcap))
+
+    def leave(self, ids) -> np.ndarray:
+        """Remove clients ``ids``; survivors are renumbered contiguously
+        (order preserved). Returns the old->new id remap (-1 = departed)
+        — also logged for :meth:`drain_resizes`.
+        """
+        ids = np.unique(np.asarray(ids, np.int64))
+        n = len(self)
+        if ids.size and (ids.min() < 0 or ids.max() >= n):
+            raise ValueError(f"leave ids out of range [0, {n})")
+        if ids.size >= n:
+            raise ValueError("cannot remove the entire client pool")
+        keep = np.ones(n, bool)
+        keep[ids] = False
+        remap = np.full(n, -1, np.int64)
+        remap[keep] = np.arange(int(keep.sum()))
+        self._resizes.append(remap)
+        self.memcap = self.memcap[keep]
+        self.pspeed = self.pspeed[keep]
+        self.mdatasize = self.mdatasize[keep]
+        return remap.copy()
+
+    def pending_remap(self) -> Optional[np.ndarray]:
+        """Composed old->new id remap of the resizes logged since the
+        last drain, WITHOUT draining — the peek a stateful event uses to
+        re-key client-indexed state mid-round, before the environment's
+        end-of-round ``sync_topology`` consumes the log."""
+        if not self._resizes:
+            return None
+        remap = self._resizes[0]
+        for nxt in self._resizes[1:]:
+            remap = compose_remaps(remap, nxt)
+        return remap
+
+    def drain_resizes(self) -> Optional[Tuple[int, np.ndarray]]:
+        """Composed ``(old_n, old->new remap)`` covering every join/leave
+        since the last drain; ``None`` when the population is untouched.
+        """
+        remap = self.pending_remap()
+        if remap is None:
+            return None
+        self._resizes.clear()
+        old_n = len(remap)
+        # joins extend the id space past the remap's domain: the remap
+        # only describes pre-existing ids, which is all a consumer
+        # carrying old state needs
+        return old_n, remap
 
     @classmethod
     def random(cls, n_clients: int, seed: int = 0,

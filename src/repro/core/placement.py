@@ -27,9 +27,32 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.hierarchy import ClientPool, Hierarchy
+from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, \
+    fill_placement_holes
 from repro.core.pso import FlagSwapPSO
 from repro.core.registry import create_strategy, register_strategy
+
+
+def repair_placement(placement, update: TopologyUpdate,
+                     rng: np.random.Generator) -> np.ndarray:
+    """Carry one concrete placement across a :class:`TopologyUpdate`.
+
+    Surviving slots keep their (id-remapped) hosts; slots whose host
+    departed — e.g. a ``ClientLeave`` removing a current aggregator —
+    and brand-new slots are repaired with rng-drawn ids not already
+    placed, so the result always satisfies ``validate_placement`` on the
+    new hierarchy. The shared repair primitive for every placement-
+    holding strategy's ``migrate`` hook.
+    """
+    old = np.asarray(placement, np.int64)
+    sr = update.slot_remap
+    carried = np.where(sr >= 0, old[np.where(sr >= 0, sr, 0)], -1)
+    cr = update.client_remap
+    if cr is not None:
+        carried = np.where(carried >= 0,
+                           cr[np.clip(carried, 0, len(cr) - 1)], -1)
+    return fill_placement_holes(
+        carried, update.new_hierarchy.total_clients, rng)
 
 
 # ---------------------------------------------------------------------------
@@ -114,6 +137,42 @@ class PlacementStrategy:
     def observe(self, placement: np.ndarray, tpd: float) -> None:
         pass
 
+    # -- elastic topology --------------------------------------------------
+    def migrate(self, update: TopologyUpdate) -> None:
+        """Adopt a new topology mid-run (elastic scenarios).
+
+        The base hook just swaps the hierarchy — enough for strategies
+        that re-derive everything from it each round (random, uniform).
+        Strategies holding placement-shaped or client-id-indexed state
+        override this and carry it through ``update``'s remap tables.
+        """
+        self.hierarchy = update.new_hierarchy
+
+    # -- checkpointing -----------------------------------------------------
+    def save_state(self) -> dict:
+        """JSON-able snapshot for sweep resume; subclasses extend.
+
+        The (possibly migrated) hierarchy is part of the state: an
+        elastic run's checkpoint restores a strategy consistent with
+        the topology it was captured on, not the scenario's
+        construction-time tree.
+        """
+        h = self.hierarchy
+        return {"strategy": self.name,
+                "rng": self.rng.bit_generator.state,
+                "hierarchy": {"depth": h.depth, "width": h.width,
+                              "trainers_per_leaf": h.trainers_per_leaf,
+                              "n_clients": h.n_clients}}
+
+    def load_state(self, state: dict) -> None:
+        if state.get("strategy") != self.name:
+            raise ValueError(
+                f"checkpoint is for strategy {state.get('strategy')!r}, "
+                f"cannot load into {self.name!r}")
+        self.rng = np.random.default_rng()
+        self.rng.bit_generator.state = state["rng"]
+        self.hierarchy = Hierarchy(**state["hierarchy"])
+
 
 @register_strategy("random", config=RandomConfig,
                    description="fresh random arrangement every round")
@@ -155,6 +214,21 @@ class StaticPlacement(PlacementStrategy):
 
     def propose(self, round_idx: int) -> np.ndarray:
         return self._placement
+
+    def migrate(self, update: TopologyUpdate) -> None:
+        super().migrate(update)
+        self._placement = repair_placement(self._placement, update,
+                                           self.rng)
+        self.hierarchy.validate_placement(self._placement)
+
+    def save_state(self) -> dict:
+        state = super().save_state()
+        state["placement"] = self._placement.tolist()
+        return state
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        self._placement = np.asarray(state["placement"], np.int64)
 
 
 @register_strategy("pso", config=PSOConfig, aliases=("flag-swap",),
@@ -208,6 +282,31 @@ class PSOPlacement(PlacementStrategy):
             if self.pso.gbest_f > before:
                 self._gbest_eval = self.pso.evaluations
             self._pending = False
+
+    def migrate(self, update: TopologyUpdate) -> None:
+        """Carry the swarm across the resize (warm restart): surviving
+        per-slot pbest/position state is remapped, only new slots and
+        departed-client entries are re-seeded — see
+        :meth:`FlagSwapPSO.migrate`."""
+        super().migrate(update)
+        self.pso.migrate(update.new_n_clients, update.slot_remap,
+                         update.client_remap)
+        # fitness memory was dropped: restart the stagnation clock
+        self._gbest_eval = self.pso.evaluations
+        self._pending = False
+
+    def save_state(self) -> dict:
+        state = super().save_state()
+        state["pso"] = self.pso.state_dict()
+        state["gbest_eval"] = self._gbest_eval
+        state["pending"] = self._pending
+        return state
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        self.pso.load_state(state["pso"])
+        self._gbest_eval = int(state["gbest_eval"])
+        self._pending = bool(state["pending"])
 
 
 @register_strategy("pso-adaptive", config=AdaptivePSOConfig,
@@ -265,6 +364,26 @@ class AdaptivePSOPlacement(PSOPlacement):
             self._bad_probes = 0
         self._probing = False
 
+    def migrate(self, update: TopologyUpdate) -> None:
+        super().migrate(update)
+        # the drift thermometer reads exploitation rounds against the
+        # remembered gbest fitness — both just got invalidated
+        self._probing = False
+        self._bad_probes = 0
+
+    def save_state(self) -> dict:
+        state = super().save_state()
+        state["probing"] = self._probing
+        state["bad_probes"] = self._bad_probes
+        state["reignitions"] = self.reignitions
+        return state
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        self._probing = bool(state["probing"])
+        self._bad_probes = int(state["bad_probes"])
+        self.reignitions = int(state["reignitions"])
+
 
 @register_strategy("ga", config=GAConfig, aliases=("genetic",),
                    description="genetic-algorithm baseline")
@@ -297,6 +416,28 @@ class GAPlacement(PlacementStrategy):
 
     def propose(self, round_idx: int) -> np.ndarray:
         return np.asarray(self.pop[self._cursor], np.int64)
+
+    def migrate(self, update: TopologyUpdate) -> None:
+        super().migrate(update)
+        # every member is repaired in place; measured fitness belongs to
+        # the old topology, so the generation restarts from scratch
+        self.pop = [repair_placement(p, update, self.rng)
+                    for p in self.pop]
+        self.fit = [-np.inf] * len(self.pop)
+        self._cursor = 0
+
+    def save_state(self) -> dict:
+        state = super().save_state()
+        state["pop"] = [p.tolist() for p in self.pop]
+        state["fit"] = [float(f) for f in self.fit]
+        state["cursor"] = self._cursor
+        return state
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        self.pop = [np.asarray(p, np.int64) for p in state["pop"]]
+        self.fit = [float(f) for f in state["fit"]]
+        self._cursor = int(state["cursor"])
 
     def observe(self, placement: np.ndarray, tpd: float) -> None:
         i = self._cursor
@@ -337,11 +478,29 @@ class GreedySpeedPlacement(PlacementStrategy):
     def __init__(self, hierarchy: Hierarchy, clients: ClientPool,
                  seed: int = 0):
         super().__init__(hierarchy, seed)
-        order = np.argsort(-clients.pspeed)
-        self._placement = order[: hierarchy.dimensions].astype(np.int64)
+        self._clients = clients
+        self._recompute()
+
+    def _recompute(self) -> None:
+        order = np.argsort(-self._clients.pspeed)
+        self._placement = order[: self.hierarchy.dimensions].astype(np.int64)
 
     def propose(self, round_idx: int) -> np.ndarray:
         return self._placement
+
+    def migrate(self, update: TopologyUpdate) -> None:
+        # it cheats with telemetry anyway: just re-sort the (live) pool
+        super().migrate(update)
+        self._recompute()
+
+    def save_state(self) -> dict:
+        state = super().save_state()
+        state["placement"] = self._placement.tolist()
+        return state
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        self._placement = np.asarray(state["placement"], np.int64)
 
 
 @register_strategy("exhaustive", config=ExhaustiveConfig,
@@ -354,15 +513,21 @@ class ExhaustivePlacement(PlacementStrategy):
     def __init__(self, hierarchy: Hierarchy, cost_model, seed: int = 0,
                  limit: int = 2_000_000):
         super().__init__(hierarchy, seed)
-        n, d = hierarchy.total_clients, hierarchy.dimensions
+        self._cost_model = cost_model
+        self._limit = limit
+        self._solve()
+
+    def _solve(self) -> None:
+        n, d = self.hierarchy.total_clients, self.hierarchy.dimensions
         count = 1
         for i in range(d):
             count *= (n - i)
-        if count > limit:
-            raise ValueError(f"{count} permutations exceed limit {limit}")
+        if count > self._limit:
+            raise ValueError(f"{count} permutations exceed limit "
+                             f"{self._limit}")
         best, best_tpd = None, np.inf
         for perm in itertools.permutations(range(n), d):
-            t = cost_model.tpd(np.asarray(perm))
+            t = self._cost_model.tpd(np.asarray(perm))
             if t < best_tpd:
                 best, best_tpd = np.asarray(perm, np.int64), t
         self._placement = best
@@ -370,6 +535,20 @@ class ExhaustivePlacement(PlacementStrategy):
 
     def propose(self, round_idx: int) -> np.ndarray:
         return self._placement
+
+    def migrate(self, update: TopologyUpdate) -> None:
+        # the environment retargets the cost model in place before the
+        # migrate hooks fire, so re-solving prices the NEW topology
+        super().migrate(update)
+        self._solve()
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        # the oracle is deterministic given (hierarchy, cost model): if
+        # the restored hierarchy disagrees with the placement solved at
+        # construction, re-solve against the caller's cost model
+        if len(self._placement) != self.hierarchy.dimensions:
+            self._solve()
 
 
 def make_strategy(name: str, hierarchy: Hierarchy, seed: int = 0,
@@ -432,6 +611,34 @@ class SimulatedAnnealingPlacement(PlacementStrategy):
             self._candidate = self._neighbor(self.current)
         return np.asarray(self._candidate, np.int64)
 
+    def migrate(self, update: TopologyUpdate) -> None:
+        super().migrate(update)
+        self.current = repair_placement(self.current, update, self.rng)
+        self.best = repair_placement(self.best, update, self.rng)
+        # measured energies belong to the old topology: re-measure the
+        # incumbent next round before generating neighbors
+        self.current_f = None
+        self.best_f = -np.inf
+        self._candidate = None
+
+    def save_state(self) -> dict:
+        state = super().save_state()
+        state.update(
+            current=self.current.tolist(), current_f=self.current_f,
+            best=self.best.tolist(), best_f=float(self.best_f),
+            temp=float(self.temp))
+        return state
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        self.current = np.asarray(state["current"], np.int64)
+        self.current_f = None if state["current_f"] is None \
+            else float(state["current_f"])
+        self.best = np.asarray(state["best"], np.int64)
+        self.best_f = float(state["best_f"])
+        self.temp = float(state["temp"])
+        self._candidate = None
+
     def observe(self, placement: np.ndarray, tpd: float) -> None:
         f = -float(tpd)
         if f > self.best_f:
@@ -484,6 +691,54 @@ class CEMPlacement(PlacementStrategy):
 
     def propose(self, round_idx: int) -> np.ndarray:
         return self._sample()
+
+    def migrate(self, update: TopologyUpdate) -> None:
+        super().migrate(update)
+        d, n = self.hierarchy.dimensions, self.hierarchy.total_clients
+        old = self.probs
+        fresh = np.full((d, n), 1.0 / n)
+        cr = update.client_remap
+        for s in range(d):
+            o = int(update.slot_remap[s])
+            if o < 0:
+                continue  # brand-new slot: uniform
+            row = old[o]
+            if cr is None:
+                kept = row.copy()
+                newcomer = np.zeros(n, bool)
+            else:
+                alive = cr >= 0
+                kept = np.zeros(n)
+                kept[cr[alive]] = row[alive]
+                newcomer = np.ones(n, bool)
+                newcomer[cr[alive]] = False
+            # joined clients start at a REAL uniform share (not the
+            # near-zero leftover of departed mass — the multiplicative
+            # refit could never recover them from ~0), survivors keep
+            # their relative mass; renormalize to a distribution
+            kept[newcomer] = 1.0 / n
+            total = kept.sum()
+            fresh[s] = kept / total if total > 0 else fresh[s]
+        self.probs = fresh
+        self.best = repair_placement(self.best, update, self.rng)
+        self.best_f = -np.inf
+        self._wave.clear()
+
+    def save_state(self) -> dict:
+        state = super().save_state()
+        state.update(
+            probs=self.probs.tolist(),
+            wave=[[float(f), p.tolist()] for f, p in self._wave],
+            best=self.best.tolist(), best_f=float(self.best_f))
+        return state
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        self.probs = np.asarray(state["probs"], np.float64)
+        self._wave = [(float(f), np.asarray(p, np.int64))
+                      for f, p in state["wave"]]
+        self.best = np.asarray(state["best"], np.int64)
+        self.best_f = float(state["best_f"])
 
     def observe(self, placement: np.ndarray, tpd: float) -> None:
         f = -float(tpd)

@@ -40,7 +40,8 @@ from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.hierarchy import rows_with_duplicates
+from repro.core.hierarchy import fill_placement_holes, \
+    rows_with_duplicates
 
 
 @dataclass
@@ -72,6 +73,20 @@ class SwarmHistory:
             "best": self.best, "worst": self.worst, "mean": self.mean,
         }
 
+    @classmethod
+    def from_dict(cls, d: dict,
+                  record_per_particle: bool = True) -> "SwarmHistory":
+        """Inverse of :meth:`as_dict` (checkpoint restore). Iteration
+        lengths may differ per entry after a topology change, so rows
+        are restored individually, not via one stack."""
+        return cls(
+            per_particle=[np.asarray(row, np.float64)
+                          for row in d.get("per_particle", [])],
+            best=[float(x) for x in d.get("best", [])],
+            worst=[float(x) for x in d.get("worst", [])],
+            mean=[float(x) for x in d.get("mean", [])],
+            record_per_particle=record_per_particle)
+
 
 class FlagSwapPSO:
     """Integer PSO over aggregator placements."""
@@ -88,6 +103,7 @@ class FlagSwapPSO:
         self.inertia = inertia
         self.c1 = c1
         self.c2 = c2
+        self.velocity_factor = velocity_factor
         # eq. 3: Vmax = max(1, D * velocity_factor)
         self.v_max = max(1.0, n_slots * velocity_factor)
         self.rng = np.random.default_rng(seed)
@@ -105,6 +121,7 @@ class FlagSwapPSO:
         self.history = SwarmHistory(record_per_particle=record_per_particle)
         self._cursor = 0  # ask/tell round-robin particle index
         self.evaluations = 0
+        self.migrations = 0  # topology migrations survived (diagnostics)
         # deduped-placement cache: "all" = every row stale, else the set
         # of particle rows whose position moved since the last read
         self._pl_cache: Optional[np.ndarray] = None
@@ -378,4 +395,152 @@ class FlagSwapPSO:
         self.gbest_f = -np.inf
         self._cursor = 0
         self._gbest_version += 1
+        self._mark_moved()
+
+    # ------------------------------------------------------------------
+    # elastic topology: carry swarm state across a (D, C) change
+    # ------------------------------------------------------------------
+    def migrate(self, new_n_clients: int, slot_remap,
+                client_remap=None) -> None:
+        """Resize the swarm to a new placement dimension / client count,
+        carrying surviving per-slot state instead of cold-restarting.
+
+        ``slot_remap`` is the (new_D,) new-slot -> old-slot table from
+        :func:`repro.core.hierarchy.slot_remap`; ``client_remap`` the
+        (old_C,) old-id -> new-id table from a pool resize (``None`` =
+        ids unchanged). The carried state is deterministic:
+
+        * position/pbest entries of surviving slots keep their
+          id-remapped client ids plus their sub-integer fraction (the
+          accumulated eq. 4 momentum), so a same-shape migration with
+          identity remaps is a true no-op on positions; entries
+          referring to departed clients and entries of brand-new slots
+          are re-seeded — one ``rng.permutation(new_C)`` draw per
+          particle that has at least one hole, holes filled in
+          ascending slot order with ids not already carried by that
+          particle;
+        * pbest holes copy the re-seeded position (a new slot's best
+          known spot is where it starts, matching ``reignite``);
+        * velocities of surviving slots are carried (re-clamped to the
+          new ``Vmax``), new slots start at rest;
+        * fitness memory (``pbest_f``/``gbest_f``) is dropped — those
+          numbers were measured on a different topology/population;
+          ``gbest_x`` keeps its carried coordinates (holes copy particle
+          0's seeds) so the velocity field retains its pull direction
+          until a fresh gbest is measured.
+        """
+        old_n, old_D = self.n_clients, self.n_slots
+        slot_remap = np.asarray(slot_remap, np.int64)
+        new_D = len(slot_remap)
+        if new_n_clients < new_D:
+            raise ValueError(f"need at least {new_D} clients for {new_D} "
+                             f"slots, got {new_n_clients}")
+        if client_remap is not None:
+            client_remap = np.asarray(client_remap, np.int64)
+            if len(client_remap) != old_n:
+                raise ValueError(
+                    f"client_remap covers {len(client_remap)} ids, swarm "
+                    f"was over {old_n} clients")
+        valid = slot_remap >= 0
+        src = np.where(valid, slot_remap, 0)
+
+        def carry(rows: np.ndarray):
+            """(P, old_D) continuous positions -> carried new client ids
+            (-1 where re-seeding is needed) + the sub-integer momentum
+            fraction of each carried entry."""
+            ids = np.floor(rows).astype(np.int64) % old_n
+            frac = (rows - np.floor(rows))[:, src]
+            moved = ids[:, src]
+            if client_remap is not None:
+                moved = client_remap[moved]
+            return np.where(valid[None], moved, -1), frac
+
+        def fill(row: np.ndarray) -> np.ndarray:
+            return fill_placement_holes(row, new_n_clients, self.rng)
+
+        carried_x, frac_x = carry(self.x)
+        carried_p, frac_p = carry(self.pbest_x)
+        carried_g, frac_g = carry(self.gbest_x[None])
+        survived_x, survived_p = carried_x >= 0, carried_p >= 0
+        new_x = np.stack([fill(carried_x[i])
+                          for i in range(self.n_particles)])
+        new_x = new_x + np.where(survived_x, frac_x, 0.0)
+        # pbest holes copy the (already re-seeded) position
+        new_p = np.where(survived_p, carried_p + frac_p, new_x)
+        new_v = np.zeros((self.n_particles, new_D))
+        self.v_max = max(1.0, new_D * self.velocity_factor)
+        new_v[:, valid] = np.clip(self.v[:, src][:, valid],
+                                  -self.v_max, self.v_max)
+
+        self.n_slots = new_D
+        self.n_clients = new_n_clients
+        self.x = new_x.astype(np.float64)
+        self.v = new_v
+        self.pbest_x = new_p.astype(np.float64)
+        self.pbest_f = np.full(self.n_particles, -np.inf)
+        self.gbest_x = np.where(carried_g[0] >= 0,
+                                carried_g[0] + frac_g[0],
+                                new_x[0]).astype(np.float64)
+        self.gbest_f = -np.inf
+        self.migrations += 1
+        self._gbest_version += 1
+        self._gbest_pl = None
+        self._dedup_memo.clear()
+        self._pl_cache = None
+        self._mark_moved()
+
+    # ------------------------------------------------------------------
+    # checkpointing (JSON-able; exact resume incl. the rng stream)
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Full swarm state, JSON-serializable: positions, velocities,
+        pbest/gbest, the ask/tell cursor, the rng bit-generator state
+        and the recorded :class:`SwarmHistory`."""
+        return {
+            "n_slots": self.n_slots, "n_clients": self.n_clients,
+            "n_particles": self.n_particles,
+            "inertia": self.inertia, "c1": self.c1, "c2": self.c2,
+            "velocity_factor": self.velocity_factor,
+            "x": self.x.tolist(), "v": self.v.tolist(),
+            "pbest_x": self.pbest_x.tolist(),
+            "pbest_f": self.pbest_f.tolist(),
+            "gbest_x": self.gbest_x.tolist(),
+            "gbest_f": float(self.gbest_f),
+            "cursor": self._cursor,
+            "evaluations": self.evaluations,
+            "migrations": self.migrations,
+            "rng": self.rng.bit_generator.state,
+            "history": self.history.as_dict(),
+            "record_per_particle": self.history.record_per_particle,
+        }
+
+    def load_state(self, d: dict) -> None:
+        """Restore :meth:`state_dict` in place (inverse, exact: the rng
+        stream continues bit-for-bit where the checkpoint left it)."""
+        self.n_slots = int(d["n_slots"])
+        self.n_clients = int(d["n_clients"])
+        self.n_particles = int(d["n_particles"])
+        self.inertia = float(d["inertia"])
+        self.c1 = float(d["c1"])
+        self.c2 = float(d["c2"])
+        self.velocity_factor = float(d["velocity_factor"])
+        self.v_max = max(1.0, self.n_slots * self.velocity_factor)
+        self.x = np.asarray(d["x"], np.float64)
+        self.v = np.asarray(d["v"], np.float64)
+        self.pbest_x = np.asarray(d["pbest_x"], np.float64)
+        self.pbest_f = np.asarray(d["pbest_f"], np.float64)
+        self.gbest_x = np.asarray(d["gbest_x"], np.float64)
+        self.gbest_f = float(d["gbest_f"])
+        self._cursor = int(d["cursor"])
+        self.evaluations = int(d["evaluations"])
+        self.migrations = int(d.get("migrations", 0))
+        self.rng = np.random.default_rng()
+        self.rng.bit_generator.state = d["rng"]
+        self.history = SwarmHistory.from_dict(
+            d.get("history", {}),
+            record_per_particle=bool(d.get("record_per_particle", True)))
+        self._gbest_version += 1
+        self._gbest_pl = None
+        self._dedup_memo.clear()
+        self._pl_cache = None
         self._mark_moved()

@@ -35,6 +35,8 @@ from repro.experiments.runner import run_batched, run_experiment, \
     run_single
 from repro.experiments.scenarios import (
     ClientChurn,
+    ClientJoin,
+    ClientLeave,
     LatencyNoise,
     PoolProfile,
     PSpeedDrift,
@@ -45,14 +47,16 @@ from repro.experiments.scenarios import (
     list_scenarios,
     register_scenario,
 )
+from repro.core.hierarchy import TopologyUpdate
 
 __all__ = [
     "Environment", "SimulatedEnvironment", "EmulatedEnvironment",
-    "RoundObservation", "build_environment",
+    "RoundObservation", "TopologyUpdate", "build_environment",
     "ExperimentResult", "StrategyRun", "aggregate_runs",
     "validate_result_dict", "RESULT_SCHEMA", "RESULT_SCHEMA_VERSION",
     "run_experiment", "run_single", "run_batched",
     "ScenarioSpec", "PoolProfile", "ScheduledEvent", "PSpeedDrift",
-    "ClientChurn", "StragglerSpike", "LatencyNoise",
+    "ClientChurn", "ClientJoin", "ClientLeave",
+    "StragglerSpike", "LatencyNoise",
     "get_scenario", "list_scenarios", "register_scenario",
 ]

@@ -27,7 +27,9 @@ from typing import Dict, Optional, Protocol, runtime_checkable
 import numpy as np
 
 from repro.core.cost_model import CostModel, TwoTierCostModel
-from repro.core.hierarchy import ClientPool, Hierarchy
+from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, \
+    slot_remap
+from repro.fl.distributed import choose_fl_hierarchy
 
 
 @dataclass
@@ -37,6 +39,7 @@ class RoundObservation:
     placement: np.ndarray
     tpd: float                              # the black-box signal
     metrics: Dict[str, float] = field(default_factory=dict)
+    topology_version: int = 0               # elastic re-hierarchizations
 
 
 @runtime_checkable
@@ -54,6 +57,12 @@ class Environment(Protocol):
         """Execute/evaluate one round at ``placement``."""
         ...
 
+    def sync_topology(self) -> Optional[TopologyUpdate]:
+        """Reconcile the topology with the (possibly resized) client
+        pool; returns the update strategies must migrate through, or
+        ``None`` when nothing changed."""
+        ...
+
 
 class SimulatedEnvironment:
     """The Fig. 3 world: rounds cost what eqs. 6-7 say they cost.
@@ -63,6 +72,15 @@ class SimulatedEnvironment:
     ride the same object the step loop uses. The cost model reads the
     pool by reference — event schedules that mutate ``clients`` in place
     are reflected in the very next ``step``.
+
+    The topology is ELASTIC: the hierarchy is a versioned run property,
+    not a construction-time constant. After ``ClientJoin``/``ClientLeave``
+    events resize the pool, :meth:`sync_topology` re-hierarchizes (via
+    ``choose_fl_hierarchy``) whenever the population leaves the current
+    tree's capacity window ``[min_clients, max_clients]``, bumps
+    ``topology_version``, and retargets the cost model in place — the
+    returned :class:`TopologyUpdate` carries the slot/client remaps the
+    strategies' ``migrate`` hooks consume.
     """
     kind = "simulated"
 
@@ -72,9 +90,55 @@ class SimulatedEnvironment:
         self.clients = clients
         self.cost_model = cost_model if cost_model is not None \
             else CostModel(hierarchy, clients)
+        self.topology_version = 0
+        # scenarios may start deliberately overstuffed (large-10k packs
+        # ~7 trainers/leaf): the grow threshold honors the construction-
+        # time population so a stray join doesn't snap the tree
+        self._capacity = max(hierarchy.max_clients, len(clients))
 
     def begin(self) -> None:
         pass
+
+    def sync_topology(self) -> Optional[TopologyUpdate]:
+        """Reconcile hierarchy with the pool after this round's events.
+
+        Drains the pool's resize log (composing the old->new client id
+        remap). Any resize yields a new hierarchy — at minimum the
+        client count changed — and the STRUCTURE is rebuilt through
+        ``choose_fl_hierarchy`` when the population crossed the capacity
+        window; within the window only ``n_clients`` is re-pinned (same
+        tree, cheaper migration). Deterministic: no rng is consumed, so
+        sequential and batched sweeps see identical updates.
+        """
+        drained = self.clients.drain_resizes()
+        if drained is None:
+            return None
+        old_n, client_remap = drained
+        old_h = self.hierarchy
+        if old_n != old_h.total_clients:
+            raise RuntimeError(
+                f"pool resize log starts at {old_n} clients but the "
+                f"hierarchy tracked {old_h.total_clients}")
+        n = len(self.clients)
+        if n < old_h.min_clients or n > self._capacity:
+            new_h = choose_fl_hierarchy(n, scale=True)
+            self._capacity = max(new_h.max_clients, n)
+        else:
+            # in-window (n <= the established capacity): keep the tree,
+            # re-pin the client count — a scenario built overstuffed
+            # stays on its shape until the population shrinks out
+            new_h = Hierarchy(depth=old_h.depth, width=old_h.width,
+                              trainers_per_leaf=old_h.trainers_per_leaf,
+                              n_clients=n)
+        self.topology_version += 1
+        update = TopologyUpdate(
+            version=self.topology_version,
+            old_hierarchy=old_h, new_hierarchy=new_h,
+            slot_remap=slot_remap(old_h, new_h),
+            client_remap=client_remap)
+        self.hierarchy = new_h
+        self.cost_model.retarget(new_h)
+        return update
 
     def step(self, round_idx: int, placement) -> RoundObservation:
         # single-placement fast path: the cached exact (float64 numpy)
@@ -86,7 +150,8 @@ class SimulatedEnvironment:
         self.hierarchy.validate_placement(placement)
         tpd = self.cost_model.tpd_fast(placement)
         return RoundObservation(round_idx=round_idx, placement=placement,
-                                tpd=tpd)
+                                tpd=tpd,
+                                topology_version=self.topology_version)
 
 
 class EmulatedEnvironment:
@@ -116,6 +181,17 @@ class EmulatedEnvironment:
 
     def begin(self) -> None:
         self.orchestrator.warmup()
+
+    def sync_topology(self) -> Optional[TopologyUpdate]:
+        """The emulated track keeps live model/optimizer state per
+        client — elastic populations are simulated-only for now."""
+        if self.clients.drain_resizes() is not None:
+            raise NotImplementedError(
+                "ClientJoin/ClientLeave pool resizes are not supported "
+                "by the emulated environment (the orchestrator pins "
+                "per-client model state); run elastic scenarios on the "
+                "simulated track")
+        return None
 
     def step(self, round_idx: int, placement) -> RoundObservation:
         rec = self.orchestrator.run_round(round_idx, placement)

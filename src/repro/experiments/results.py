@@ -1,11 +1,11 @@
 """Versioned experiment-result artifact: one JSON schema for every
 strategy x scenario x seed sweep (simulated and emulated alike).
 
-Schema v1 layout::
+Schema v2 layout (v1 artifacts still validate/load)::
 
     {
       "schema": "repro.experiments/result",
-      "schema_version": 1,
+      "schema_version": 2,
       "scenario": {... ScenarioSpec.to_dict() ...},
       "rounds": 50,
       "seeds": [0, 17],
@@ -23,6 +23,16 @@ Schema v1 layout::
                              "best_tpd": ..., "final_accuracy": ...}, ...}
     }
 
+v2 additions (all optional per run, so static artifacts are unchanged
+apart from the version stamp):
+
+* elastic runs carry a per-round ``metrics["topology_version"]`` series
+  plus ``r<N>: topology vK: ...`` event-log lines (the environments
+  re-hierarchize as the client population crosses capacity);
+* ``strategy_state`` — a full strategy checkpoint captured by
+  ``StrategyRun.save_state`` (swarm positions/velocities/pbest, rng
+  stream, history), restorable with ``load_state`` for sweep resume.
+
 ``validate_result_dict`` is the schema gate the CLI (and CI smoke job)
 run before an artifact is written or consumed.
 """
@@ -31,12 +41,14 @@ from __future__ import annotations
 import json
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
 RESULT_SCHEMA = "repro.experiments/result"
-RESULT_SCHEMA_VERSION = 1
+RESULT_SCHEMA_VERSION = 2
+# older artifact versions that still validate and load
+RESULT_SCHEMA_COMPAT = (1, 2)
 
 
 @dataclass
@@ -50,6 +62,26 @@ class StrategyRun:
     # optional end-of-run strategy internals (reignitions, evaluations,
     # converged, ...) — diagnostic only, not aggregated
     diagnostics: Dict[str, Any] = field(default_factory=dict)
+    # optional full strategy checkpoint (schema v2): everything needed
+    # to resume the strategy mid-sweep — see save_state/load_state
+    strategy_state: Optional[Dict[str, Any]] = None
+
+    # -- checkpointing -----------------------------------------------------
+    def save_state(self, strategy) -> None:
+        """Capture ``strategy``'s checkpoint (positions/velocities/pbest
+        arrays, rng stream, swarm history — whatever the strategy's
+        ``save_state`` serializes) into this run record."""
+        self.strategy_state = strategy.save_state()
+
+    def load_state(self, strategy) -> None:
+        """Restore the captured checkpoint into ``strategy`` (exact
+        resume: the rng stream continues where the checkpoint left it).
+        """
+        if self.strategy_state is None:
+            raise ValueError(
+                f"run ({self.strategy}, seed {self.seed}) carries no "
+                f"strategy_state; re-run with capture_state=True")
+        strategy.load_state(self.strategy_state)
 
     # -- derived ----------------------------------------------------------
     @property
@@ -72,7 +104,7 @@ class StrategyRun:
         return {k: float(v[-1]) for k, v in self.metrics.items() if v}
 
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        out = {
             "strategy": self.strategy, "seed": self.seed,
             "tpds": [float(t) for t in self.tpds],
             "metrics": {k: [float(x) for x in v]
@@ -84,6 +116,9 @@ class StrategyRun:
             "best_tpd": self.best_tpd,
             "final_metrics": self.final_metrics(),
         }
+        if self.strategy_state is not None:
+            out["strategy_state"] = self.strategy_state
+        return out
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "StrategyRun":
@@ -92,7 +127,8 @@ class StrategyRun:
                    metrics={k: list(v)
                             for k, v in d.get("metrics", {}).items()},
                    event_log=list(d.get("event_log", [])),
-                   diagnostics=dict(d.get("diagnostics", {})))
+                   diagnostics=dict(d.get("diagnostics", {})),
+                   strategy_state=d.get("strategy_state"))
 
 
 def aggregate_runs(runs: List[StrategyRun]) -> Dict[str, float]:
@@ -188,8 +224,8 @@ def validate_result_dict(d: Dict[str, Any]) -> List[str]:
         return ["artifact is not a JSON object"]
     if d.get("schema") != RESULT_SCHEMA:
         errors.append(f"schema != {RESULT_SCHEMA!r}")
-    if d.get("schema_version") != RESULT_SCHEMA_VERSION:
-        errors.append(f"schema_version != {RESULT_SCHEMA_VERSION}")
+    if d.get("schema_version") not in RESULT_SCHEMA_COMPAT:
+        errors.append(f"schema_version not in {RESULT_SCHEMA_COMPAT}")
     for key, typ in (("scenario", dict), ("rounds", int), ("seeds", list),
                      ("strategies", list), ("runs", list),
                      ("aggregates", dict)):

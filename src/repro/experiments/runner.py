@@ -16,14 +16,19 @@ Two execution modes produce bit-identical artifacts (parity-pinned):
   (strategy, seed), each against its own environment. The only mode for
   emulated scenarios.
 * **batched** — every (strategy, seed) run of a simulated sweep advances
-  in lockstep: per round, ALL runs' proposed placements are scored in
+  in lockstep: per round, the runs' proposed placements are scored in
   ONE exact :class:`~repro.core.cost_model.PooledTPDEvaluator` call
   (placement row i against run i's own drifting client pool) instead of
-  one ``env.step`` each. Per-run strategies, event instances and rng
-  streams are constructed exactly as the sequential path constructs
-  them, so trajectories — tpds, event logs, observed-noise series,
-  diagnostics — match bit for bit while a 10k-client sweep runs ~20x
-  faster than the scalar step path (``benchmarks/bench_scale.py``).
+  one ``env.step`` each. ELASTIC scenarios group the lockstep rows into
+  *topology cohorts* — runs whose hierarchy (and placement dimension
+  ``D``) diverged under join/leave events score in separate pooled
+  calls, one per cohort per round, re-merging when their populations
+  re-align. Per-run strategies, event instances and rng streams are
+  constructed exactly as the sequential path constructs them, so
+  trajectories — tpds, event logs, observed-noise series, topology
+  versions, diagnostics — match bit for bit while a 10k-client sweep
+  runs ~20x faster than the scalar step path
+  (``benchmarks/bench_scale.py``).
 
 ``mode="auto"`` (the default) picks batched for simulated scenarios and
 sequential for emulated ones.
@@ -79,7 +84,27 @@ def _finalize_run(run: StrategyRun, strategy) -> StrategyRun:
     if pso is not None:
         run.diagnostics["evaluations"] = int(pso.evaluations)
         run.diagnostics["converged"] = bool(pso.converged)
+        if pso.migrations:  # elastic runs only: static artifacts stay put
+            run.diagnostics["migrations"] = int(pso.migrations)
     return run
+
+
+def _sync_topology(env, strategy, events, run: StrategyRun,
+                   round_idx: int, verbose: bool) -> None:
+    """Shared per-round elastic step (both modes, identical order):
+    reconcile the environment's topology with the pool the round's
+    events just mutated, migrate the strategy across any update, and
+    let stateful events re-key their client-indexed state."""
+    sync = getattr(env, "sync_topology", None)
+    update = sync() if sync is not None else None
+    if update is not None:
+        run.event_log.append(f"r{round_idx}: {update.describe()}")
+        if verbose:
+            print(f"    [event s{run.seed}] r{round_idx}: "
+                  f"{update.describe()}")
+        strategy.migrate(update)
+        for ev in events:
+            ev.on_topology(update)
 
 
 def _has_observer_noise(events) -> bool:
@@ -93,12 +118,18 @@ def _has_observer_noise(events) -> bool:
 
 def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
                rounds: Optional[int] = None, config=None,
-               verbose: bool = False) -> StrategyRun:
+               verbose: bool = False,
+               capture_state: bool = False) -> StrategyRun:
     """One (strategy, seed) trajectory through a fresh environment.
 
     This is THE sequential loop — both paper tracks and every event
     scenario go through it (the batched mode below is its lockstep
-    equivalent, parity-pinned against it).
+    equivalent, parity-pinned against it). Elastic scenarios interleave
+    a topology sync after each round's events: pool resizes
+    re-hierarchize the environment and the strategy migrates across the
+    update before proposing. ``capture_state=True`` snapshots the
+    strategy's full checkpoint into ``run.strategy_state`` at the end
+    (sweep resume).
     """
     rounds = rounds if rounds is not None else spec.rounds
     env = spec.make_environment(seed)
@@ -109,6 +140,7 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
     events = spec.make_events()
     erng = np.random.default_rng((seed, _EVENT_STREAM))
     has_observer_noise = _has_observer_noise(events)
+    elastic = spec.is_elastic
     run = StrategyRun(strategy=strategy.name, seed=seed)
 
     env.begin()
@@ -119,6 +151,7 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
                 run.event_log.append(f"r{r}: {msg}")
                 if verbose:
                     print(f"    [event] r{r}: {msg}")
+        _sync_topology(env, strategy, events, run, r, verbose)
         placement = np.asarray(strategy.propose(r), np.int64)
         obs = env.step(r, placement)
         observed = obs.tpd
@@ -131,6 +164,9 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
         if has_observer_noise:
             run.metrics.setdefault("observed_tpd", []).append(
                 float(observed))
+        if elastic:
+            run.metrics.setdefault("topology_version", []).append(
+                float(obs.topology_version))
         for k, v in obs.metrics.items():
             run.metrics.setdefault(k, []).append(float(v))
         if verbose:
@@ -139,7 +175,10 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
             print(f"    [{strategy.name}] r{r:3d} "
                   f"tpd={obs.tpd:8.4f}{extra}")
 
-    return _finalize_run(run, strategy)
+    _finalize_run(run, strategy)
+    if capture_state:
+        run.save_state(strategy)
+    return run
 
 
 def run_batched(spec: ScenarioSpec,
@@ -188,14 +227,17 @@ def run_batched(spec: ScenarioSpec,
     if not envs:  # empty strategy sweep == sequential mode's empty result
         return runs
     has_observer_noise = _has_observer_noise(events[0])
-    evaluator = PooledTPDEvaluator([env.cost_model for env in envs])
-    hierarchy = envs[0].hierarchy
+    elastic = spec.is_elastic
     n_rows = len(envs)
-    D = hierarchy.dimensions
+    # pooled evaluators are cached per topology COHORT (the tuple of run
+    # rows currently sharing one hierarchy shape): static sweeps keep
+    # one evaluator for the whole run; elastic sweeps split into cohorts
+    # while runs' populations diverge and re-merge as they re-align —
+    # each cohort is still ONE exact pooled call per round
+    evaluators: dict = {}
 
     for env in envs:
         env.begin()
-    placements = np.empty((n_rows, D), np.int64)
     for r in range(rounds):
         for i in range(n_rows):
             for ev in events[i]:
@@ -204,21 +246,44 @@ def run_batched(spec: ScenarioSpec,
                     runs[i].event_log.append(f"r{r}: {msg}")
                     if verbose:
                         print(f"    [event s{runs[i].seed}] r{r}: {msg}")
-            placements[i] = np.asarray(strats[i].propose(r), np.int64)
-        _validate_rows(hierarchy, placements)
-        tpds = evaluator.tpds(placements)          # ONE exact call
+            _sync_topology(envs[i], strats[i], events[i], runs[i], r,
+                           verbose)
+        props = [np.asarray(strats[i].propose(r), np.int64)
+                 for i in range(n_rows)]
+        # group lockstep rows by topology epoch: runs whose hierarchy
+        # (and therefore placement dimension D) diverged score in
+        # separate pooled calls; Hierarchy is a frozen dataclass, so
+        # field equality — not object identity — defines the cohort
+        cohorts: dict = {}
+        for i, env in enumerate(envs):
+            cohorts.setdefault(env.hierarchy, []).append(i)
+        tpds = np.empty(n_rows, np.float64)
+        for hierarchy, idxs in cohorts.items():
+            placements = np.stack([props[i] for i in idxs])
+            _validate_rows(hierarchy, placements)
+            key = tuple(idxs)
+            evaluator = evaluators.get(key)
+            if evaluator is None:
+                evaluator = evaluators[key] = PooledTPDEvaluator(
+                    [envs[i].cost_model for i in idxs])
+            tpds[idxs] = evaluator.tpds(placements)  # ONE call per cohort
         for i in range(n_rows):
             true_tpd = float(tpds[i])
             observed = true_tpd
             for ev in events[i]:
                 observed = ev.transform_tpd(r, observed, erngs[i])
-            # a copy, not a view: the placements buffer is reused next
-            # round and strategies may retain what observe() hands them
-            strats[i].observe(placements[i].copy(), observed)
+            # hand observe() the same array propose() returned — exactly
+            # what the sequential loop does (the pooled evaluator reads
+            # its own stacked copy, so later strategy-held mutations
+            # can't corrupt scoring)
+            strats[i].observe(props[i], observed)
             runs[i].tpds.append(true_tpd)
             if has_observer_noise:
                 runs[i].metrics.setdefault("observed_tpd", []).append(
                     float(observed))
+            if elastic:
+                runs[i].metrics.setdefault("topology_version", []).append(
+                    float(envs[i].topology_version))
             if verbose:
                 print(f"    [{runs[i].strategy} s{runs[i].seed}] "
                       f"r{r:3d} tpd={true_tpd:8.4f}")

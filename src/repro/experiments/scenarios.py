@@ -25,7 +25,15 @@ name            kind        what it reproduces / probes
 ``large-1k``    simulated   1k clients, depth-6/width-3 (364 slots)
 ``large-4k``    simulated   4k clients, depth-5/width-4 (341 slots)
 ``large-10k``   simulated   10k clients, depth-6/width-4 (1365 slots)
+``flash-crowd``     simulated  population ramps mid-run; tree re-grows
+``composite-storm`` simulated  joins+leaves+churn+stragglers+noise at once
+``ebb-and-flow``    simulated  periodic join/leave waves across capacity
 ==============  ==========  ====================================================
+
+The last three are ELASTIC: ``ClientJoin``/``ClientLeave`` events
+genuinely resize the pool, and the environments re-hierarchize (new
+``Hierarchy``, bumped ``topology_version``, strategy ``migrate`` hooks)
+whenever the population crosses the current tree's capacity window.
 
 The ``large-*`` rungs are the swarm-scale regime: they are only
 practical through the exact vectorized evaluators
@@ -40,6 +48,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
@@ -97,7 +106,18 @@ class ScheduledEvent:
     Event instances in a spec are templates: the runner works on a
     ``fresh()`` copy per (strategy, seed) run so mutable state (e.g. a
     straggler's saved speeds) never leaks across runs.
+
+    Same-round application order is deterministic and documented:
+    within each round, events fire sorted by ``(class_name, index)`` —
+    class name first, spec position breaking ties (``make_events``
+    performs the stable sort once) — so composite schedules replay
+    identically across the sequential and batched runners regardless of
+    how the spec happened to list them.
     """
+
+    # True for events that resize the population (ClientJoin/Leave):
+    # the runners re-sync the topology after applying a round's events
+    resizes_pool = False
 
     def fresh(self) -> "ScheduledEvent":
         return copy.deepcopy(self)
@@ -105,6 +125,14 @@ class ScheduledEvent:
     def on_round(self, round_idx: int, pool: ClientPool,
                  rng: np.random.Generator) -> Optional[str]:
         """Mutate ``pool`` in place; return a log line or None."""
+        return None
+
+    def on_topology(self, update) -> None:
+        """An elastic resize renumbered the population: events holding
+        client-id-keyed state carry it through ``update.client_remap``
+        (same :class:`~repro.core.hierarchy.TopologyUpdate` the strategy
+        ``migrate`` hooks receive; the runners invoke this right after
+        them, in both execution modes)."""
         return None
 
     def transform_tpd(self, round_idx: int, tpd: float,
@@ -175,11 +203,31 @@ class StragglerSpike(ScheduledEvent):
     _saved: Dict[int, tuple] = field(default_factory=dict, repr=False)
     _until: int = field(default=-1, repr=False)
 
+    def _rekey_saved(self, remap) -> None:
+        if self._saved and remap is not None:
+            self._saved = {int(remap[c]): v
+                           for c, v in self._saved.items()
+                           if c < len(remap) and remap[c] >= 0}
+
+    def on_topology(self, update):
+        # a resize renumbered the population mid-spike: re-key the saved
+        # speeds so recovery restores the RIGHT (surviving) devices —
+        # departed stragglers are simply forgotten
+        self._rekey_saved(update.client_remap)
+
     def on_round(self, round_idx, pool, rng):
         if self._saved and round_idx >= self._until:
+            # a SAME-round ClientLeave (canonical order puts it first)
+            # may have renumbered the pool before this restore and the
+            # end-of-round on_topology re-key: peek the pool's pending
+            # resize log so the restore targets current indices
+            self._rekey_saved(pool.pending_remap())
             restored = 0
             for c, (slowed, original) in self._saved.items():
-                if pool.pspeed[c] == slowed:
+                # belt and braces on top of on_topology's re-keying: the
+                # index bound plus the slowed-value check keep a stale
+                # recovery from touching the wrong device
+                if c < len(pool) and pool.pspeed[c] == slowed:
                     pool.pspeed[c] = original
                     restored += 1
             self._saved = {}
@@ -207,6 +255,60 @@ class StragglerSpike(ScheduledEvent):
 
 
 @dataclass
+class ClientJoin(ScheduledEvent):
+    """Every ``every`` rounds from ``first_round`` (through
+    ``last_round``, when set), ``count`` fresh devices JOIN the pool —
+    a true population resize (arrays grow, new ids are minted), not the
+    attribute masking ``ClientChurn`` does. Attributes are sampled from
+    the paper's Sec. IV-A distributions. The environments re-hierarchize
+    when the growth crosses the tree's capacity (flash crowds)."""
+    resizes_pool = True
+    every: int = 10
+    count: int = 4
+    first_round: int = 5
+    last_round: Optional[int] = None
+
+    def on_round(self, round_idx, pool, rng):
+        if round_idx < self.first_round or \
+                (round_idx - self.first_round) % self.every != 0:
+            return None
+        if self.last_round is not None and round_idx > self.last_round:
+            return None
+        pool.join(memcap=rng.uniform(10, 50, self.count),
+                  pspeed=rng.uniform(5, 15, self.count))
+        return f"join: +{self.count} clients (pool now {len(pool)})"
+
+
+@dataclass
+class ClientLeave(ScheduledEvent):
+    """Every ``every`` rounds from ``first_round``, ``count`` random
+    clients LEAVE the pool — a true resize: survivors are renumbered and
+    the composed old->new id remap flows through the topology update to
+    every strategy's ``migrate`` hook. Departures can take out current
+    aggregator hosts; the strategies repair such placements. Never
+    shrinks the pool below ``min_clients``."""
+    resizes_pool = True
+    every: int = 10
+    count: int = 4
+    first_round: int = 10
+    last_round: Optional[int] = None
+    min_clients: int = 8
+
+    def on_round(self, round_idx, pool, rng):
+        if round_idx < self.first_round or \
+                (round_idx - self.first_round) % self.every != 0:
+            return None
+        if self.last_round is not None and round_idx > self.last_round:
+            return None
+        k = min(self.count, len(pool) - self.min_clients)
+        if k <= 0:
+            return None
+        who = rng.choice(len(pool), size=k, replace=False)
+        pool.leave(who)
+        return f"leave: -{k} clients (pool now {len(pool)})"
+
+
+@dataclass
 class LatencyNoise(ScheduledEvent):
     """Multiplicative lognormal-ish noise on the observed TPD — the
     black-box signal the strategy sees gets dirtier, the true system
@@ -218,12 +320,17 @@ class LatencyNoise(ScheduledEvent):
 
 
 _EVENT_TYPES = {cls.__name__: cls for cls in
-                (PSpeedDrift, ClientChurn, StragglerSpike, LatencyNoise)}
+                (PSpeedDrift, ClientChurn, StragglerSpike, LatencyNoise,
+                 ClientJoin, ClientLeave)}
 
 
 def event_from_dict(d: Dict[str, Any]) -> ScheduledEvent:
     d = dict(d)
-    cls = _EVENT_TYPES[d.pop("event")]
+    name = d.pop("event", None)
+    cls = _EVENT_TYPES.get(name)
+    if cls is None:
+        known = ", ".join(sorted(_EVENT_TYPES))
+        raise ValueError(f"unknown event type {name!r}; known: {known}")
     return cls(**d)
 
 
@@ -277,7 +384,17 @@ class ScenarioSpec:
         return build_environment(self, seed)
 
     def make_events(self) -> Tuple[ScheduledEvent, ...]:
-        return tuple(e.fresh() for e in self.events)
+        """Fresh per-run event copies in the CANONICAL application
+        order: stable-sorted by ``(class_name, spec index)``, so a
+        composite schedule fires identically every run, in every
+        execution mode, however the spec listed its events."""
+        fresh = [e.fresh() for e in self.events]
+        return tuple(sorted(fresh, key=lambda e: type(e).__name__))
+
+    @property
+    def is_elastic(self) -> bool:
+        """Does any scheduled event resize the client population?"""
+        return any(e.resizes_pool for e in self.events)
 
     # -- variants ----------------------------------------------------------
     def with_overrides(self, **overrides) -> "ScenarioSpec":
@@ -314,11 +431,22 @@ class ScenarioSpec:
 
 
 def _coerce(value, current):
-    """Coerce a CLI string to the field's current type."""
+    """Coerce a CLI string to the field's current type.
+
+    Scalars coerce by the current value's type; TUPLE fields (the event
+    schedule above all) parse as JSON — a list of ``{"event": ...}``
+    dicts becomes a tuple of :class:`ScheduledEvent` via
+    ``event_from_dict``, any other JSON list becomes a plain tuple, and
+    ``""``/``none``/``[]``/``()`` clear the field — so
+    ``--set 'events=[{"event":"ClientJoin","count":4}]'`` works from
+    the command line.
+    """
     if not isinstance(value, str) or isinstance(current, str):
         return value
     if isinstance(current, bool):
         return value.lower() in ("1", "true", "yes", "on")
+    if isinstance(current, tuple):
+        return _coerce_sequence(value)
     if isinstance(current, int) or (current is None and value.isdigit()):
         return int(value)
     if isinstance(current, float):
@@ -329,6 +457,21 @@ def _coerce(value, current):
         except ValueError:
             return value
     return value
+
+
+def _coerce_sequence(value: str) -> tuple:
+    """Parse a CLI string for a tuple-typed ScenarioSpec field (see
+    :func:`_coerce`). Raises ``ValueError`` on malformed input, which
+    ``with_overrides`` turns into the usual descriptive TypeError."""
+    v = value.strip()
+    if v.lower() in ("", "none", "()", "[]"):
+        return ()
+    parsed = json.loads(v)  # JSONDecodeError is a ValueError
+    if not isinstance(parsed, list):
+        raise ValueError(f"expected a JSON list, got {type(parsed).__name__}")
+    if parsed and all(isinstance(e, dict) for e in parsed):
+        return tuple(event_from_dict(e) for e in parsed)
+    return tuple(parsed)
 
 
 # ---------------------------------------------------------------------------
@@ -415,6 +558,42 @@ register_scenario(ScenarioSpec(
     trainers_per_leaf=2, n_clients=256, rounds=150,
     description="256-client pool on a depth-4/width-3 tree (40 slots): "
                 "the scale smoke for placement search."))
+
+register_scenario(ScenarioSpec(
+    name="flash-crowd", kind="simulated", depth=2, width=2,
+    trainers_per_leaf=4, n_clients=12,
+    events=(ClientJoin(every=5, count=6, first_round=10, last_round=40),),
+    rounds=80,
+    description="Population ramps 12 -> ~54 mid-run: the tree re-grows "
+                "(depth-2 -> -3 -> -4, D 3 -> 7 -> 15) as the flash "
+                "crowd crosses each capacity window; swarms migrate "
+                "instead of restarting."))
+
+register_scenario(ScenarioSpec(
+    name="composite-storm", kind="simulated", depth=2, width=2,
+    trainers_per_leaf=4, n_clients=14,
+    events=(ClientJoin(every=12, count=5, first_round=6),
+            ClientLeave(every=18, count=6, first_round=18,
+                        min_clients=11),
+            ClientChurn(every=10, fraction=0.2, first_round=4),
+            StragglerSpike(every=15, duration=4, fraction=0.2,
+                           slowdown=5.0, first_round=5),
+            LatencyNoise(sigma=0.1)),
+    rounds=80,
+    description="Everything at once: joins, departures, device churn, "
+                "straggler spikes and observation noise — the composite "
+                "adaptive scenario the roadmap asks for."))
+
+register_scenario(ScenarioSpec(
+    name="ebb-and-flow", kind="simulated", depth=2, width=2,
+    trainers_per_leaf=4, n_clients=12,
+    events=(ClientJoin(every=20, count=8, first_round=10),
+            ClientLeave(every=20, count=8, first_round=20,
+                        min_clients=11),),
+    rounds=100,
+    description="Periodic join/leave waves oscillating across the "
+                "capacity boundary: the topology re-hierarchizes every "
+                "~10 rounds (the migrate-vs-cold-restart benchmark)."))
 
 register_scenario(ScenarioSpec(
     name="large-1k", kind="simulated", depth=6, width=3,

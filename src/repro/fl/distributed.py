@@ -191,15 +191,31 @@ class FLTrainStep:
                 "n_clients": self.n_clients_total}
 
 
-def choose_fl_hierarchy(n_clients: int) -> Hierarchy:
+# the historical preference ladder (deeper trees first) and, above it,
+# the swarm-scale rungs the elastic environments opt into
+_BASE_LADDER = ((3, 2, 2), (3, 2, 1), (2, 3, 4), (2, 3, 3),
+                (2, 2, 4), (2, 2, 2), (2, 2, 1))
+_SCALE_LADDER = ((6, 4, 2), (6, 3, 2), (5, 3, 2), (4, 3, 2),
+                 (4, 2, 2)) + _BASE_LADDER
+
+
+def choose_fl_hierarchy(n_clients: int, *, scale: bool = False) -> Hierarchy:
     """Pick a depth/width whose minimum client count fits ``n_clients``.
 
     Preference order: deeper trees first (more interesting schedules).
     Extra clients beyond the minimum become additional trainers (the
     round-robin assignment absorbs them).
+
+    ``scale=True`` extends the ladder with the swarm-scale rungs
+    (depth-4 .. depth-6, the large-1k/large-10k tree shapes) so a large
+    population keeps a proportionate tree instead of collapsing onto
+    the 7-slot depth-3 one — this is what the elastic environments use
+    to re-hierarchize a GROWING population (a flash crowd climbs
+    depth-2 -> -3 -> -4 as it crosses each rung's minimum). The default
+    keeps the historical small-cluster ladder, so launch/bench/example
+    callers build the same trees as before.
     """
-    for depth, width, tpl in ((3, 2, 2), (3, 2, 1), (2, 3, 4), (2, 3, 3),
-                              (2, 2, 4), (2, 2, 2), (2, 2, 1)):
+    for depth, width, tpl in (_SCALE_LADDER if scale else _BASE_LADDER):
         if Hierarchy(depth, width, tpl).min_clients <= n_clients:
             return Hierarchy(depth=depth, width=width, trainers_per_leaf=tpl,
                              n_clients=n_clients)

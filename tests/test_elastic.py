@@ -1,0 +1,644 @@
+"""Elastic topology: dynamic client populations, per-round
+re-hierarchization, swarm migration, and sweep checkpointing.
+
+Covers the PR-4 guarantees:
+
+* true pool resizes (``ClientJoin``/``ClientLeave``) with composed
+  old->new id remaps, and slot remaps between consecutive hierarchies;
+* ``FlagSwapPSO.migrate`` carrying surviving per-slot state (pinned
+  against an independent from-scratch reference implementation, plus a
+  migrate-vs-cold-restart end-to-end comparison on ``ebb-and-flow``);
+* batched-vs-sequential BIT-IDENTITY on the elastic presets
+  (``flash-crowd``, ``composite-storm``) — cohort-grouped pooled
+  evaluation must not change a single float;
+* a ``ClientLeave`` removing a current aggregator forces a valid
+  placement repair;
+* canonical same-round event ordering;
+* strategy-state checkpointing (exact resume through JSON);
+* CLI ``--set`` coercion for event-list fields.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.hierarchy import (ClientPool, Hierarchy, TopologyUpdate,
+                                  compose_remaps, slot_remap)
+from repro.core.placement import (PSOConfig, PSOPlacement,
+                                  repair_placement)
+from repro.core.pso import FlagSwapPSO
+from repro.core.registry import create_strategy, register_strategy
+from repro.experiments import (ClientJoin, ClientLeave, ExperimentResult,
+                               SimulatedEnvironment, get_scenario,
+                               run_experiment, run_single,
+                               validate_result_dict)
+from repro.experiments.scenarios import (ClientChurn, LatencyNoise,
+                                         ScenarioSpec, StragglerSpike,
+                                         _coerce)
+
+
+# ---------------------------------------------------------------------------
+# pool resizes + remap composition
+# ---------------------------------------------------------------------------
+def test_pool_join_extends_and_logs_identity_remap():
+    pool = ClientPool.random(10, seed=0)
+    speeds = pool.pspeed.copy()
+    ids = pool.join(memcap=[20.0, 30.0], pspeed=[7.0, 9.0])
+    assert list(ids) == [10, 11]
+    assert len(pool) == 12
+    np.testing.assert_array_equal(pool.pspeed[:10], speeds)
+    assert pool.pspeed[10] == 7.0 and pool.pspeed[11] == 9.0
+    old_n, remap = pool.drain_resizes()
+    assert old_n == 10
+    np.testing.assert_array_equal(remap, np.arange(10))
+    assert pool.drain_resizes() is None  # drained
+
+
+def test_pool_leave_compacts_and_remaps():
+    pool = ClientPool.random(8, seed=1)
+    s = pool.pspeed.copy()
+    remap = pool.leave([2, 5])
+    assert len(pool) == 6
+    # survivors renumbered contiguously, order preserved
+    np.testing.assert_array_equal(remap, [0, 1, -1, 2, 3, -1, 4, 5])
+    np.testing.assert_array_equal(pool.pspeed,
+                                  s[[0, 1, 3, 4, 6, 7]])
+
+
+def test_pool_resize_log_composes_across_ops():
+    pool = ClientPool.random(6, seed=2)
+    pool.join(memcap=[20.0] * 2, pspeed=[7.0] * 2)   # ids 6, 7
+    pool.leave([0, 6])                                # old id 0 + a joiner
+    old_n, remap = pool.drain_resizes()
+    assert old_n == 6
+    # old ids 1..5 survive both ops; id 0 departed
+    np.testing.assert_array_equal(remap, [-1, 0, 1, 2, 3, 4])
+    assert len(pool) == 6
+
+
+def test_pool_leave_guards():
+    pool = ClientPool.random(4, seed=0)
+    with pytest.raises(ValueError, match="out of range"):
+        pool.leave([7])
+    with pytest.raises(ValueError, match="entire"):
+        pool.leave([0, 1, 2, 3])
+
+
+def test_compose_remaps_identity_passthrough():
+    r = np.asarray([1, -1, 0])
+    assert compose_remaps(None, None) is None
+    np.testing.assert_array_equal(compose_remaps(None, r), r)
+    np.testing.assert_array_equal(compose_remaps(r, None), r)
+
+
+# ---------------------------------------------------------------------------
+# slot remaps between hierarchies
+# ---------------------------------------------------------------------------
+def test_slot_remap_depth_growth_keeps_upper_tree():
+    old = Hierarchy(2, 2, 4)   # D = 3
+    new = Hierarchy(3, 2, 2)   # D = 7
+    remap = slot_remap(old, new)
+    # root + both level-1 slots survive; the new deepest level is new
+    np.testing.assert_array_equal(remap, [0, 1, 2, -1, -1, -1, -1])
+    # shrink is the inverse on surviving slots
+    back = slot_remap(new, old)
+    np.testing.assert_array_equal(back, [0, 1, 2])
+
+
+def test_slot_remap_width_change_drops_extra_subtrees():
+    old = Hierarchy(2, 3, 2)   # root + 3 children
+    new = Hierarchy(2, 2, 2)   # root + 2 children
+    np.testing.assert_array_equal(slot_remap(old, new), [0, 1, 2])
+    np.testing.assert_array_equal(slot_remap(new, old), [0, 1, 2, -1])
+
+
+def test_slot_paths_are_canonical():
+    h = Hierarchy(3, 2, 2)
+    assert h.slot_path(0) == ()
+    assert h.slot_path(1) == (0,)
+    assert h.slot_path(2) == (1,)
+    assert h.slot_path(5) == (1, 0)
+    # path round-trips through the BFS indexing
+    for s in range(h.dimensions):
+        idx = 0
+        for k in h.slot_path(s):
+            idx = 1 + idx * h.width + k
+        assert idx == s
+
+
+# ---------------------------------------------------------------------------
+# FlagSwapPSO.migrate — pinned against a from-scratch reference
+# ---------------------------------------------------------------------------
+def _migrate_reference(pso, new_n, srm, crm):
+    """Independent scalar re-implementation of the documented migrate
+    spec (the oracle the vectorized hook is pinned against)."""
+    P, old_n = pso.n_particles, pso.n_clients
+    new_D = len(srm)
+    exp_x = np.empty((P, new_D))
+    exp_p = np.empty((P, new_D))
+    exp_v = np.zeros((P, new_D))
+    v_max = max(1.0, new_D * pso.velocity_factor)
+
+    def carry_val(vec, s):
+        o = srm[s]
+        if o < 0:
+            return None
+        cid = int(np.floor(vec[o])) % old_n
+        frac = float(vec[o] - np.floor(vec[o]))
+        nid = cid if crm is None else int(crm[cid])
+        return None if nid < 0 else nid + frac
+
+    rng = np.random.default_rng()
+    rng.bit_generator.state = pso.rng.bit_generator.state
+    for i in range(P):
+        carried = [carry_val(pso.x[i], s) for s in range(new_D)]
+        holes = [s for s, c in enumerate(carried) if c is None]
+        if holes:
+            taken = {int(c) for c in carried if c is not None}
+            fresh = [int(c) for c in rng.permutation(new_n)
+                     if int(c) not in taken]
+            for s, c in zip(holes, fresh):
+                carried[s] = float(c)
+        exp_x[i] = carried
+        pb = [carry_val(pso.pbest_x[i], s) for s in range(new_D)]
+        exp_p[i] = [carried[s] if pb[s] is None else pb[s]
+                    for s in range(new_D)]
+        for s in range(new_D):
+            if srm[s] >= 0:
+                exp_v[i, s] = np.clip(pso.v[i, srm[s]], -v_max, v_max)
+    gb = [carry_val(pso.gbest_x, s) for s in range(new_D)]
+    exp_g = np.asarray([exp_x[0, s] if gb[s] is None else gb[s]
+                        for s in range(new_D)])
+    return exp_x, exp_v, exp_p, exp_g
+
+
+@pytest.mark.parametrize("case", ["grow", "shrink", "leave_only"])
+def test_migrate_matches_reference_oracle(case):
+    pso = FlagSwapPSO(n_slots=7, n_clients=20, seed=3)
+    pso.run(lambda p: -float(p.sum()), iterations=4)
+    if case == "grow":
+        srm = slot_remap(Hierarchy(3, 2, 2), Hierarchy(4, 2, 2))
+        new_n, crm = 40, np.arange(20)
+    elif case == "shrink":
+        srm = slot_remap(Hierarchy(3, 2, 2), Hierarchy(2, 2, 4))
+        crm = np.full(20, -1)
+        crm[:15] = np.arange(15)
+        new_n = 15
+    else:  # same shape, five clients depart
+        srm = np.arange(7)
+        crm = np.full(20, -1)
+        crm[5:] = np.arange(15)
+        new_n = 15
+    exp_x, exp_v, exp_p, exp_g = _migrate_reference(pso, new_n, srm, crm)
+    pso.migrate(new_n, srm, crm)
+    np.testing.assert_array_equal(pso.x, exp_x)
+    np.testing.assert_array_equal(pso.v, exp_v)
+    np.testing.assert_array_equal(pso.pbest_x, exp_p)
+    np.testing.assert_array_equal(pso.gbest_x, exp_g)
+    assert pso.gbest_f == -np.inf
+    assert np.all(pso.pbest_f == -np.inf)
+    assert pso.n_slots == len(srm) and pso.n_clients == new_n
+    # every proposed placement is valid on the new shape
+    ps = pso.placements()
+    assert ps.shape == (pso.n_particles, len(srm))
+    assert ps.min() >= 0 and ps.max() < new_n
+    for row in ps:
+        assert len(set(row.tolist())) == len(row)
+
+
+def test_migrate_identity_is_noop():
+    pso = FlagSwapPSO(n_slots=7, n_clients=15, seed=0)
+    pso.run(lambda p: -float(p.sum()), iterations=3)
+    x, v, pb, gb = (pso.x.copy(), pso.v.copy(), pso.pbest_x.copy(),
+                    pso.gbest_x.copy())
+    rng_state = json.dumps(pso.rng.bit_generator.state, default=str)
+    pso.migrate(15, np.arange(7), np.arange(15))
+    np.testing.assert_array_equal(pso.x, x)
+    np.testing.assert_array_equal(pso.v, v)
+    np.testing.assert_array_equal(pso.pbest_x, pb)
+    np.testing.assert_array_equal(pso.gbest_x, gb)
+    # no holes -> the rng stream is untouched
+    assert json.dumps(pso.rng.bit_generator.state, default=str) == rng_state
+    assert pso.migrations == 1
+
+
+@register_strategy("pso-coldstart", config=PSOConfig,
+                   description="test-only: cold-restarts on topology change")
+class _ColdRestartPSO(PSOPlacement):
+    """The from-scratch baseline migrate() is measured against: on every
+    topology update the swarm is rebuilt blank (fresh permutations, no
+    carried state)."""
+    name = "pso-coldstart"
+
+    def __init__(self, hierarchy, seed=0, **kw):
+        super().__init__(hierarchy, seed=seed, **kw)
+        self._seed = seed
+
+    def migrate(self, update):
+        self.hierarchy = update.new_hierarchy
+        old = self.pso
+        self.pso = FlagSwapPSO(
+            n_slots=self.hierarchy.dimensions,
+            n_clients=self.hierarchy.total_clients,
+            n_particles=old.n_particles, inertia=old.inertia,
+            c1=old.c1, c2=old.c2, velocity_factor=old.velocity_factor,
+            seed=(self._seed, update.version),
+            record_per_particle=old.history.record_per_particle)
+        self._gbest_eval = 0
+        self._pending = False
+
+
+def test_migrated_swarm_no_worse_than_cold_restart_on_ebb_and_flow():
+    """The acceptance pin: across the ebb-and-flow preset's repeated
+    topology changes, the migrated swarm's post-resize TPD trajectory is
+    no worse (multi-seed mean) than rebuilding the swarm from scratch at
+    every change."""
+    spec = get_scenario("ebb-and-flow")
+    res = run_experiment(spec, ["pso", "pso-coldstart"],
+                         seeds=(0, 1, 2, 3, 4), progress=False)
+    first_resize = 10  # ClientJoin(first_round=10)
+    post = {s: np.mean([sum(r.tpds[first_resize:])
+                        for r in res.runs_for(s)])
+            for s in res.strategies}
+    assert any("topology" in line for run in res.runs
+               for line in run.event_log)
+    assert post["pso"] <= post["pso-coldstart"]
+
+
+# ---------------------------------------------------------------------------
+# elastic environments + placement repair
+# ---------------------------------------------------------------------------
+def test_sync_topology_rehierarchizes_on_capacity_crossing():
+    h = Hierarchy(2, 2, 4, n_clients=12)     # window [11, 19]
+    pool = ClientPool.random(12, seed=0)
+    env = SimulatedEnvironment(h, pool)
+    pool.join(memcap=np.full(4, 20.0), pspeed=np.full(4, 8.0))
+    up = env.sync_topology()                 # 16 in-window: same tree
+    assert up.version == 1
+    assert up.new_hierarchy.dimensions == 3
+    assert up.new_hierarchy.n_clients == 16
+    pool.join(memcap=np.full(8, 20.0), pspeed=np.full(8, 8.0))
+    up = env.sync_topology()                 # 24 > 19: re-hierarchize
+    assert up.version == 2 and env.topology_version == 2
+    assert up.new_hierarchy.dimensions == 7  # choose_fl_hierarchy(24)
+    assert env.hierarchy is up.new_hierarchy
+    assert env.cost_model.hierarchy is up.new_hierarchy
+    # the retargeted cost model prices the new shape
+    tpd = env.cost_model.tpd_fast(np.arange(7))
+    assert np.isfinite(tpd) and tpd > 0
+    assert env.sync_topology() is None       # nothing pending
+
+
+def test_client_leave_of_current_aggregator_forces_valid_repair():
+    h = Hierarchy(3, 2, 2, n_clients=20)
+    pool = ClientPool.random(20, seed=0)
+    env = SimulatedEnvironment(h, pool)
+    strat = create_strategy("static", h, placement=tuple(range(7)))
+    # remove slot-3's host (client 3) and a trainer
+    pool.leave([3, 15])
+    update = env.sync_topology()
+    assert update is not None
+    strat.migrate(update)
+    placement = strat.propose(0)
+    env.hierarchy.validate_placement(placement)      # repaired + valid
+    # surviving hosts kept their (renumbered) identity: clients 0,1,2
+    # keep ids, 4..6 shift down by one
+    np.testing.assert_array_equal(placement[:3], [0, 1, 2])
+    np.testing.assert_array_equal(placement[4:], [3, 4, 5])
+    obs = env.step(0, placement)
+    assert obs.topology_version == 1
+
+
+def test_repair_placement_fills_with_unused_ids():
+    old_h = Hierarchy(2, 2, 4, n_clients=12)
+    new_h = Hierarchy(3, 2, 2, n_clients=24)
+    update = TopologyUpdate(
+        version=1, old_hierarchy=old_h, new_hierarchy=new_h,
+        slot_remap=slot_remap(old_h, new_h),
+        client_remap=np.arange(12))
+    rng = np.random.default_rng(0)
+    out = repair_placement([5, 2, 9], update, rng)
+    np.testing.assert_array_equal(out[:3], [5, 2, 9])
+    new_h.validate_placement(out)
+
+
+def test_every_registered_strategy_survives_a_resize():
+    spec = get_scenario("ebb-and-flow")
+    res = run_experiment(
+        spec, ["pso", "pso-adaptive", "random", "uniform", "ga", "sa",
+               "cem", "greedy"],
+        rounds=45, seeds=(0,), progress=False)
+    for run in res.runs:
+        assert len(run.tpds) == 45
+        assert all(np.isfinite(t) and t > 0 for t in run.tpds)
+        assert max(run.metrics["topology_version"]) >= 2
+
+
+def test_emulated_environment_rejects_pool_resizes():
+    from types import SimpleNamespace
+    from repro.experiments.environments import EmulatedEnvironment
+    pool = ClientPool.random(10, seed=0)
+    env = EmulatedEnvironment(SimpleNamespace(
+        hierarchy=Hierarchy(2, 2, 1, n_clients=10), clients=pool))
+    assert env.sync_topology() is None
+    pool.join(memcap=[20.0], pspeed=[8.0])
+    with pytest.raises(NotImplementedError, match="simulated track"):
+        env.sync_topology()
+
+
+def test_straggler_recovery_survives_a_leave_renumbering():
+    """A ClientLeave between a spike and its recovery renumbers the
+    survivors; on_topology re-keys the straggler's saved speeds so the
+    surviving slowed devices are still restored."""
+    spec = ScenarioSpec(
+        name="_spike_leave", kind="simulated", depth=3, width=2,
+        trainers_per_leaf=2, n_clients=24, rounds=16,
+        events=(StragglerSpike(every=50, duration=8, fraction=0.3,
+                               slowdown=6.0, first_round=2),
+                ClientLeave(every=50, count=4, first_round=5,
+                            min_clients=15)))
+    run = run_single(spec, "uniform", seed=0, rounds=16)
+    recovery = [line for line in run.event_log if "recovered" in line]
+    assert recovery, run.event_log
+    # 7 slowed originally; at most the 4 departures can be forgotten
+    n_restored = int(recovery[0].split("(")[1].split()[0])
+    assert n_restored >= 3
+    # recovered pool prices rounds like an untouched one: final rounds'
+    # uniform-rotation TPDs return to the same scale as the start
+    assert run.tpds[-1] < 3 * run.tpds[0]
+
+
+def test_straggler_recovery_same_round_as_leave():
+    """Canonical order runs ClientLeave BEFORE StragglerSpike within a
+    round: a recovery landing on a leave round must re-key through the
+    pool's pending resize log (on_topology only fires at end of round),
+    or surviving stragglers stay slowed forever."""
+    spec = ScenarioSpec(
+        name="_spike_leave_same_round", kind="simulated", depth=3,
+        width=2, trainers_per_leaf=2, n_clients=24, rounds=12,
+        events=(StragglerSpike(every=50, duration=4, fraction=0.3,
+                               slowdown=6.0, first_round=2),
+                ClientLeave(every=50, count=4, first_round=6,
+                            min_clients=15)))
+    run = run_single(spec, "uniform", seed=0, rounds=12)
+    # r2 spike (7 slowed), r6: leave renumbers THEN recovery restores
+    recovery = [l for l in run.event_log if "recovered" in l]
+    assert recovery and recovery[0].startswith("r6:")
+    n_restored = int(recovery[0].split("(")[1].split()[0])
+    assert n_restored >= 3   # all surviving stragglers, not 0
+
+
+def test_choose_fl_hierarchy_scale_is_opt_in():
+    """Launch/bench/example callers keep the historical small-cluster
+    trees; only scale=True (the elastic environments) climbs the
+    swarm-scale rungs."""
+    from repro.fl.distributed import choose_fl_hierarchy
+    for n in (31, 64, 256):
+        legacy = choose_fl_hierarchy(n)
+        assert (legacy.depth, legacy.width) == (3, 2)
+    assert choose_fl_hierarchy(64, scale=True).dimensions == 15
+    assert choose_fl_hierarchy(1024, scale=True).dimensions == 364
+    assert choose_fl_hierarchy(10000, scale=True).dimensions == 1365
+
+
+def test_cem_migrate_gives_joiners_real_mass():
+    from repro.core.hierarchy import slot_remap as _sr
+    old_h = Hierarchy(2, 2, 4, n_clients=12)
+    new_h = Hierarchy(3, 2, 2, n_clients=24)
+    strat = create_strategy("cem", old_h, seed=0)
+    strat.probs = np.full((3, 12), 1.0 / 12)
+    update = TopologyUpdate(
+        version=1, old_hierarchy=old_h, new_hierarchy=new_h,
+        slot_remap=_sr(old_h, new_h), client_remap=np.arange(12))
+    strat.migrate(update)
+    assert strat.probs.shape == (7, 24)
+    np.testing.assert_allclose(strat.probs.sum(axis=1), 1.0)
+    # the 12 joiners hold a real share on carried slots, not ~0
+    assert strat.probs[0, 12:].min() > 1.0 / (4 * 24)
+
+
+# ---------------------------------------------------------------------------
+# canonical event ordering
+# ---------------------------------------------------------------------------
+def test_make_events_orders_by_class_name_then_index():
+    spec = ScenarioSpec(
+        name="_order", kind="simulated",
+        events=(StragglerSpike(), ClientJoin(count=1), LatencyNoise(),
+                ClientChurn(every=3), ClientJoin(count=2)))
+    ordered = spec.make_events()
+    assert [type(e).__name__ for e in ordered] == \
+        ["ClientChurn", "ClientJoin", "ClientJoin", "LatencyNoise",
+         "StragglerSpike"]
+    # stable: the two joins keep their spec order
+    assert ordered[1].count == 1 and ordered[2].count == 2
+    # fresh copies, not the spec's templates
+    assert ordered[0] is not spec.events[3]
+
+
+def test_event_order_is_spec_listing_invariant():
+    base = dict(name="_inv", kind="simulated", depth=2, width=2,
+                trainers_per_leaf=4, n_clients=14, rounds=30)
+    a = ScenarioSpec(events=(ClientJoin(every=7, count=3, first_round=5),
+                             ClientChurn(every=5, fraction=0.3)), **base)
+    b = ScenarioSpec(events=(ClientChurn(every=5, fraction=0.3),
+                             ClientJoin(every=7, count=3, first_round=5)),
+                     **base)
+    ra = run_experiment(a, ["pso"], seeds=(0,), progress=False)
+    rb = run_experiment(b, ["pso"], seeds=(0,), progress=False)
+    assert ra.runs[0].tpds == rb.runs[0].tpds
+    assert ra.runs[0].event_log == rb.runs[0].event_log
+
+
+# ---------------------------------------------------------------------------
+# batched-vs-sequential bit identity on the elastic presets
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scenario", ["flash-crowd", "composite-storm"])
+def test_elastic_batched_sequential_bit_identity(scenario):
+    spec = get_scenario(scenario)
+    strategies = ["pso", "random", "uniform", "sa", "cem"]
+    seq = run_experiment(spec, strategies, seeds=(0, 1), progress=False,
+                         mode="sequential")
+    bat = run_experiment(spec, strategies, seeds=(0, 1), progress=False,
+                         mode="batched")
+    assert len(seq.runs) == len(bat.runs) == len(strategies) * 2
+    for a, b in zip(seq.runs, bat.runs):
+        assert (a.strategy, a.seed) == (b.strategy, b.seed)
+        assert a.tpds == b.tpds                 # bit-identical floats
+        assert a.event_log == b.event_log
+        assert a.metrics == b.metrics
+        assert a.diagnostics == b.diagnostics
+    # the scenario actually exercised elasticity
+    assert any("topology" in line for r in seq.runs for line in r.event_log)
+    assert max(seq.runs[0].metrics["topology_version"]) >= 1
+
+
+def test_flash_crowd_grows_dimension_and_versions_monotone():
+    res = run_experiment("flash-crowd", ["pso"], seeds=(0,),
+                         progress=False)
+    tv = res.runs[0].metrics["topology_version"]
+    assert len(tv) == res.rounds
+    assert all(b >= a for a, b in zip(tv, tv[1:]))  # monotone
+    assert max(tv) >= 2
+    # the tree climbs TWO structural rungs as the crowd arrives
+    log = res.runs[0].event_log
+    assert any("D=3 -> " in line for line in log)
+    assert any("D=15" in line for line in log)
+
+
+def test_rehierarchization_scales_with_population():
+    """A join on a swarm-scale tree must not collapse it: the chooser's
+    ladder re-selects the SAME large shape, not the small-regime tree."""
+    h = Hierarchy(6, 3, 2, n_clients=1024)    # the large-1k shape
+    pool = ClientPool.random(1024, seed=0)
+    env = SimulatedEnvironment(h, pool)
+    k = 1336 - 1024 + 1                       # one past the window
+    pool.join(memcap=np.full(k, 20.0), pspeed=np.full(k, 8.0))
+    up = env.sync_topology()
+    assert up.new_hierarchy.dimensions == 364  # still d6/w3, not D=7
+    assert (up.new_hierarchy.depth, up.new_hierarchy.width) == (6, 3)
+    np.testing.assert_array_equal(up.slot_remap, np.arange(364))
+
+
+# ---------------------------------------------------------------------------
+# strategy-state checkpointing
+# ---------------------------------------------------------------------------
+def _drive(strategy, env, start, stop):
+    tpds = []
+    for r in range(start, stop):
+        p = np.asarray(strategy.propose(r), np.int64)
+        obs = env.step(r, p)
+        strategy.observe(p, obs.tpd)
+        tpds.append(obs.tpd)
+    return tpds
+
+
+@pytest.mark.parametrize("name", ["pso", "pso-adaptive", "random",
+                                  "sa", "ga", "cem"])
+def test_checkpoint_roundtrip_resumes_exactly(name, tmp_path):
+    h = Hierarchy(3, 2, 2)
+    pool = ClientPool.random(h.total_clients, seed=3)
+    env = SimulatedEnvironment(h, pool)
+    straight = _drive(create_strategy(name, h, seed=5), env, 0, 40)
+
+    first = create_strategy(name, h, seed=5)
+    head = _drive(first, env, 0, 18)
+    state = json.loads(json.dumps(first.save_state()))  # via JSON
+    resumed = create_strategy(name, h, seed=999)        # wrong seed
+    resumed.load_state(state)
+    tail = _drive(resumed, env, 18, 40)
+    assert head + tail == straight
+
+
+def test_checkpoint_restores_swarm_history():
+    pso = FlagSwapPSO(n_slots=7, n_clients=15, seed=2)
+    pso.run(lambda p: -float(p.sum()), iterations=5)
+    state = json.loads(json.dumps(pso.state_dict()))
+    fresh = FlagSwapPSO(n_slots=7, n_clients=15, seed=0)
+    fresh.load_state(state)
+    assert fresh.history.best == pso.history.best
+    assert fresh.history.mean == pso.history.mean
+    assert len(fresh.history.per_particle) == 5
+    assert fresh.evaluations == pso.evaluations
+    np.testing.assert_array_equal(fresh.gbest_x, pso.gbest_x)
+
+
+def test_checkpoint_rejects_wrong_strategy():
+    h = Hierarchy(3, 2, 2)
+    state = create_strategy("pso", h, seed=0).save_state()
+    with pytest.raises(ValueError, match="cannot load"):
+        create_strategy("random", h, seed=0).load_state(state)
+
+
+def test_checkpoint_restores_migrated_hierarchy():
+    """An elastic run's checkpoint must restore a strategy consistent
+    with the topology it was captured on, not the scenario's
+    construction-time tree."""
+    spec = get_scenario("flash-crowd")
+    run = run_single(spec, "pso", seed=0, capture_state=True)
+    assert run.diagnostics["migrations"] >= 1
+    env = spec.make_environment(0)            # 3-slot starting tree
+    strat = create_strategy("pso", env.hierarchy, seed=0)
+    run.load_state(strat)
+    assert strat.hierarchy.dimensions == 15   # the migrated d4/w2 tree
+    placement = strat.propose(0)
+    assert len(placement) == 15
+    strat.hierarchy.validate_placement(placement)
+
+
+def test_run_single_captures_state_into_artifact(tmp_path):
+    spec = get_scenario("churn")
+    run = run_single(spec, "pso", seed=0, rounds=12, capture_state=True)
+    assert run.strategy_state is not None
+    # survives the artifact JSON round trip
+    d = json.loads(json.dumps(run.to_dict()))
+    from repro.experiments import StrategyRun
+    loaded = StrategyRun.from_dict(d)
+    env = spec.make_environment(0)
+    strat = create_strategy("pso", env.hierarchy, seed=123)
+    loaded.load_state(strat)
+    assert strat.pso.evaluations == run.diagnostics["evaluations"]
+
+    plain = run_single(spec, "pso", seed=0, rounds=12)
+    assert plain.strategy_state is None
+    assert "strategy_state" not in plain.to_dict()
+    with pytest.raises(ValueError, match="no .*strategy_state|carries no"):
+        plain.load_state(strat)
+
+
+# ---------------------------------------------------------------------------
+# schema v2 + CLI coercion
+# ---------------------------------------------------------------------------
+def test_schema_v2_validates_and_v1_stays_loadable():
+    res = run_experiment("flash-crowd", ["pso"], rounds=20, seeds=(0,),
+                         progress=False)
+    d = res.to_dict()
+    assert d["schema_version"] == 2
+    assert validate_result_dict(d) == []
+    legacy = json.loads(json.dumps(d))
+    legacy["schema_version"] = 1
+    assert validate_result_dict(legacy) == []     # compat window
+    legacy["schema_version"] = 3
+    assert any("schema_version" in e for e in validate_result_dict(legacy))
+    # elastic scenario round-trips (ClientJoin in the scenario dict)
+    loaded = ExperimentResult.from_dict(json.loads(json.dumps(d)))
+    assert loaded.scenario["events"][0]["event"] == "ClientJoin"
+
+
+def test_coerce_event_list_from_cli_strings():
+    events = _coerce('[{"event":"ClientJoin","count":3,"every":7},'
+                     ' {"event":"LatencyNoise","sigma":0.2}]', ())
+    assert [type(e).__name__ for e in events] == \
+        ["ClientJoin", "LatencyNoise"]
+    assert events[0].count == 3 and events[1].sigma == 0.2
+    assert _coerce("none", events) == ()
+    assert _coerce("[1, 2]", ()) == (1, 2)
+
+
+def test_with_overrides_accepts_event_schedules():
+    spec = get_scenario("paper-fig3").with_overrides(
+        events='[{"event":"ClientJoin","count":2,"every":9,'
+               '"first_round":3}]')
+    assert spec.is_elastic
+    assert isinstance(spec.events[0], ClientJoin)
+    # malformed JSON -> the usual descriptive TypeError
+    with pytest.raises(TypeError, match="cannot parse"):
+        get_scenario("paper-fig3").with_overrides(events="[oops")
+    with pytest.raises(TypeError, match="cannot parse"):
+        get_scenario("paper-fig3").with_overrides(
+            events='[{"event":"NoSuchEvent"}]')
+
+
+def test_cli_set_events_end_to_end(tmp_path):
+    from repro.experiments.cli import main as cli_main
+    out = tmp_path / "elastic_cli.json"
+    rc = cli_main([
+        "run", "churn", "--strategies", "pso", "--rounds", "16",
+        "--seeds", "0",
+        "--set", 'events=[{"event":"ClientJoin","count":6,"every":5,'
+                 '"first_round":4}]',
+        "--out", str(out)])
+    assert rc == 0
+    d = json.loads(out.read_text())
+    assert validate_result_dict(d) == []
+    assert d["scenario"]["events"][0]["event"] == "ClientJoin"
+    assert any("topology" in line for line in d["runs"][0]["event_log"])
