@@ -1,11 +1,23 @@
 # Tier-1 verification: the full test suite exactly as CI runs it.
 PY ?= python
 
-.PHONY: verify test bench-round bench-fig4 bench-scale \
-	bench-scale-smoke experiments-smoke
+# every bench/validate step below names this EXACT file — the bench
+# prints the path it wrote and the validate step consumes the same
+# variable, so a redirected --out can never validate a stale artifact
+BENCH_OUT ?= artifacts/benchmarks/BENCH_scale.json
+BENCH_BASELINE ?= benchmarks/baselines/BENCH_scale.baseline.json
+BENCH_TOLERANCE ?= 0.25
+
+.PHONY: verify test lint bench-round bench-fig4 bench-scale \
+	bench-scale-smoke bench-baseline experiments-smoke \
+	elastic-emulated-smoke
 
 verify test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# the CI lint tier (ruff's fast fatal-error rule set; see pyproject)
+lint:
+	ruff check .
 
 bench-round:
 	PYTHONPATH=src $(PY) benchmarks/bench_round_engine.py
@@ -14,16 +26,24 @@ bench-fig4:
 	PYTHONPATH=src $(PY) benchmarks/bench_fig4_cluster.py --rounds 50
 
 # swarm-scale sweep: scalar vs exact-fast vs batched, 1k -> 10k clients;
-# writes + schema-checks artifacts/benchmarks/BENCH_scale.json
+# writes + schema-checks $(BENCH_OUT)
 bench-scale:
-	PYTHONPATH=src $(PY) benchmarks/bench_scale.py
-	PYTHONPATH=src $(PY) benchmarks/bench_scale.py --validate \
-		artifacts/benchmarks/BENCH_scale.json
+	PYTHONPATH=src $(PY) benchmarks/bench_scale.py --out $(BENCH_OUT)
+	PYTHONPATH=src $(PY) benchmarks/bench_scale.py --validate $(BENCH_OUT)
 
+# CI smoke: schema gate + wall-clock regression gate against the
+# checked-in baseline (fails past $(BENCH_TOLERANCE) normalized drift)
 bench-scale-smoke:
-	PYTHONPATH=src $(PY) benchmarks/bench_scale.py --smoke
-	PYTHONPATH=src $(PY) benchmarks/bench_scale.py --validate \
-		artifacts/benchmarks/BENCH_scale.json
+	PYTHONPATH=src $(PY) benchmarks/bench_scale.py --smoke --out $(BENCH_OUT)
+	PYTHONPATH=src $(PY) benchmarks/bench_scale.py --validate $(BENCH_OUT) \
+		--compare-baseline $(BENCH_BASELINE) \
+		--tolerance $(BENCH_TOLERANCE)
+
+# refresh the checked-in regression baseline after INTENTIONAL perf
+# changes (commit the result)
+bench-baseline:
+	PYTHONPATH=src $(PY) benchmarks/bench_scale.py --smoke \
+		--out $(BENCH_BASELINE)
 
 # the CI smoke job, runnable locally: both paper tracks + one event
 # scenario through the experiments CLI, then schema validation
@@ -56,3 +76,23 @@ experiments-smoke:
 		artifacts/experiments/flash_crowd_seq_smoke.json \
 		artifacts/experiments/flash_crowd_bat_smoke.json \
 		artifacts/experiments/composite_storm_smoke.json
+
+# the elastic presets on the EMULATED track (orchestrator-level
+# admit/retire): small model, <=5 rounds, event timing tightened so the
+# capacity window is crossed inside the smoke budget; artifacts are
+# schema-v2 with a topology_version series showing the
+# re-hierarchizations
+elastic-emulated-smoke:
+	PYTHONPATH=src $(PY) -m repro.experiments run flash-crowd \
+		--env emulated --rounds 5 --seeds 0 --strategies pso,random \
+		--set model=mlp-smoke --set local_steps=1 --set batch_size=16 \
+		--set 'events=[{"event":"ClientJoin","every":1,"count":8,"first_round":1,"last_round":3}]' \
+		--out artifacts/experiments/flash_crowd_emulated_smoke.json
+	PYTHONPATH=src $(PY) -m repro.experiments run ebb-and-flow \
+		--env emulated --rounds 5 --seeds 0 --strategies pso,random \
+		--set model=mlp-smoke --set local_steps=1 --set batch_size=16 \
+		--set 'events=[{"event":"ClientJoin","every":2,"count":10,"first_round":1},{"event":"ClientLeave","every":2,"count":10,"first_round":2,"min_clients":11}]' \
+		--out artifacts/experiments/ebb_and_flow_emulated_smoke.json
+	PYTHONPATH=src $(PY) -m repro.experiments validate \
+		artifacts/experiments/flash_crowd_emulated_smoke.json \
+		artifacts/experiments/ebb_and_flow_emulated_smoke.json

@@ -15,10 +15,17 @@ seeds (their trajectories are bit-identical — the bench asserts it):
   ``PooledTPDEvaluator`` call per round for every (strategy, seed) run.
 
 Writes the ``BENCH_scale.json`` artifact (schema-versioned; CI runs
-``--smoke`` and ``--validate`` to fail on drift).
+``--smoke`` and ``--validate`` to fail on drift). ``--validate`` can
+additionally gate against a checked-in baseline
+(``--compare-baseline benchmarks/baselines/BENCH_scale.baseline.json
+--tolerance 0.25``): the build fails when any matched row's wall-clock
+regressed past the tolerance, so the uploaded ``BENCH_*.json`` artifacts
+form a guarded trajectory instead of a write-only log. Refresh the
+baseline with ``make bench-baseline`` after intentional perf changes.
 
-Run:  PYTHONPATH=src python benchmarks/bench_scale.py [--smoke]
-      PYTHONPATH=src python benchmarks/bench_scale.py --validate PATH
+Run:  PYTHONPATH=src python benchmarks/bench_scale.py [--smoke] [--out PATH]
+      PYTHONPATH=src python benchmarks/bench_scale.py --validate PATH \
+          [--compare-baseline BASE --tolerance 0.25]
 """
 from __future__ import annotations
 
@@ -192,6 +199,81 @@ def validate_bench_dict(d) -> list:
     return errors
 
 
+# the regression gate compares MACHINE-NORMALIZED wall-clock: each
+# engine's seconds divided by the same run's scalar-reference seconds
+# (both timed on the same box in the same process), i.e. the artifact's
+# speedup columns. A slower CI runner slows numerator and denominator
+# alike, so the checked-in baseline ports across machines; an engine
+# regression shows up as its speedup-over-scalar dropping. (A change
+# slowing the scalar reference and the engines equally escapes this
+# gate by construction — the full `make bench-scale` trajectory is the
+# backstop for that.) Higher = better.
+_GATED_METRICS = ("speedup_batched_vs_scalar",
+                  "speedup_sequential_vs_scalar")
+# workload identity: rows only compare when these all match, so a bench
+# reconfiguration fails loudly ("refresh the baseline") instead of
+# comparing apples to pears
+_WORKLOAD_KEYS = ("clients", "slots", "rounds", "seeds", "strategies")
+
+
+def compare_to_baseline(d: dict, baseline: dict,
+                        tolerance: float) -> list:
+    """Wall-clock regression gate: current artifact vs a checked-in
+    baseline. Returns problem strings (empty = within tolerance).
+
+    Fails when a row's normalized wall-clock regressed more than
+    ``tolerance`` (its speedup-over-scalar fell below
+    ``baseline / (1 + tolerance)``). Rows pair by scenario name; a row
+    whose workload drifted from the baseline's is itself a failure (the
+    baseline must be refreshed, not silently skipped). A current row
+    missing a baseline counterpart is informational only — new rungs
+    may land before their baseline.
+    """
+    problems = []
+    compared = 0
+    base_rows = {r.get("scenario"): r for r in baseline.get("rows", [])}
+    for row in d.get("rows", []):
+        name = row.get("scenario")
+        base = base_rows.get(name)
+        if base is None:
+            print(f"   [baseline] {name}: no baseline row, skipping")
+            continue
+        compared += 1
+        drifted = [k for k in _WORKLOAD_KEYS if row.get(k) != base.get(k)]
+        if drifted:
+            problems.append(
+                f"{name}: workload drifted from baseline ({', '.join(drifted)}"
+                f" changed) — refresh it with `make bench-baseline`")
+            continue
+        for k in _GATED_METRICS:
+            if k not in row or k not in base:
+                # a clean problem report, not a KeyError traceback, when
+                # a hand-edited/drifted baseline lacks a gated metric
+                problems.append(
+                    f"{name}: metric {k!r} missing from "
+                    f"{'artifact' if k not in row else 'baseline'} row — "
+                    f"refresh the baseline with `make bench-baseline`")
+                continue
+            cur, ref = float(row[k]), float(base[k])
+            floor = ref / (1.0 + tolerance)
+            verdict = "REGRESSED" if cur < floor else "ok"
+            print(f"   [baseline] {name}: {k} {cur:6.1f}x vs baseline "
+                  f"{ref:6.1f}x (floor {floor:6.1f}x) {verdict}")
+            if cur < floor:
+                problems.append(
+                    f"{name}: {k} fell to {cur:.1f}x (baseline {ref:.1f}x, "
+                    f"tolerance floor {floor:.1f}x) — normalized "
+                    f"wall-clock regressed >{tolerance:.0%}")
+    if compared == 0:
+        # a gate that matched nothing must not pass vacuously (e.g. a
+        # renamed smoke scenario would otherwise disable it silently)
+        problems.append(
+            "no artifact row matched any baseline row — the gate "
+            "compared nothing; refresh the baseline with "
+            "`make bench-baseline`")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true",
@@ -199,6 +281,13 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=str(OUT / "BENCH_scale.json"))
     ap.add_argument("--validate", metavar="PATH",
                     help="schema-check an existing artifact and exit")
+    ap.add_argument("--compare-baseline", metavar="PATH", default=None,
+                    help="with --validate: also fail when wall-clock "
+                         "regressed past --tolerance vs this baseline "
+                         "artifact")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional wall-clock regression vs "
+                         "the baseline (default 0.25 = 25%%)")
     args = ap.parse_args(argv)
 
     if args.validate:
@@ -215,15 +304,30 @@ def main(argv=None) -> int:
                   f"batched {row['speedup_batched_vs_scalar']:6.1f}x "
                   f"vs scalar, {row['rounds_per_sec_batched']:8.0f} "
                   f"rounds/s")
+        if args.compare_baseline:
+            baseline = json.loads(Path(args.compare_baseline).read_text())
+            problems = compare_to_baseline(d, baseline, args.tolerance)
+            if problems:
+                print(f"{args.validate}: WALL-CLOCK REGRESSION vs "
+                      f"{args.compare_baseline}")
+                for p in problems:
+                    print(f"  - {p}")
+                return 1
+            print(f"{args.validate}: within {args.tolerance:.0%} of "
+                  f"{args.compare_baseline}")
         return 0
 
     results = {"schema": BENCH_SCHEMA,
                "schema_version": BENCH_SCHEMA_VERSION,
                "smoke": bool(args.smoke), "rows": []}
     if args.smoke:
+        # 30 rounds + best-of-3: the regression gate compares these
+        # timings against the checked-in baseline, so they must be
+        # large enough that scheduler jitter stays well under the
+        # tolerance (10-round timings swing ~25% run to run)
         results["rows"].append(bench_scenario(
-            "large-1k", ["pso", "random"], (0, 1), rounds=10, reps=2,
-            scalar_reps=1))
+            "large-1k", ["pso", "random"], (0, 1), rounds=30, reps=3,
+            scalar_reps=2))
     else:
         results["rows"].append(bench_scenario(
             "large-1k", ["pso", "random"], (0, 1, 2)))
@@ -247,7 +351,13 @@ def main(argv=None) -> int:
         return 1
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(results, indent=1))
+    # atomic replace: a crashed/killed bench can never leave a partial
+    # artifact where the validate step (or CI upload) would pick it up
+    tmp = out.with_suffix(out.suffix + ".tmp")
+    tmp.write_text(json.dumps(results, indent=1))
+    tmp.replace(out)
+    # the exact path, on its own line — `make bench-scale-smoke` and CI
+    # validate THIS file, not a guessed location
     print(f"-> wrote {out}")
     return 0
 

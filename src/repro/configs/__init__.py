@@ -28,6 +28,7 @@ from repro.configs.recurrentgemma_2b import CONFIG as _rgemma
 from repro.configs.stablelm_3b import CONFIG as _stablelm3b
 from repro.configs.stablelm_1_6b import CONFIG as _stablelm16b
 from repro.configs.paper_mlp import CONFIG as _paper_mlp
+from repro.configs.paper_mlp import CONFIG_SMOKE as _mlp_smoke
 
 _REGISTRY = {
     c.name: c
@@ -43,6 +44,7 @@ _REGISTRY = {
         _stablelm3b,
         _stablelm16b,
         _paper_mlp,
+        _mlp_smoke,
     )
 }
 

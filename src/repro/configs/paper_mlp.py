@@ -20,3 +20,20 @@ CONFIG = ModelConfig(
     frontend_dim=784,
     citation="paper Sec. IV-C (SDFLMQ docker experiment)",
 )
+
+# CI-sized stand-in (~55k params): same workload shape, a fraction of the
+# flops — the emulated smoke jobs federate this so elastic runs with
+# dozens of clients finish in seconds on a CPU runner
+CONFIG_SMOKE = ModelConfig(
+    name="mlp-smoke",
+    family="mlp",
+    n_layers=2,
+    d_model=64,
+    n_heads=1,
+    n_kv_heads=1,
+    d_ff=64,
+    vocab_size=10,
+    frontend_len=784,
+    frontend_dim=784,
+    citation="CI smoke variant of paper-mlp-1m8",
+)

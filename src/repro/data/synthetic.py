@@ -91,26 +91,78 @@ def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float = 0.5,
     return [np.asarray(sorted(x), dtype=np.int64) for x in client_idx]
 
 
+def _carry_by_remap(old: list, remap: Optional[np.ndarray],
+                    new_total: int) -> list:
+    """Place survivors' entries at their remapped ids; ``None`` holes
+    mark joiners. ``remap`` is the composed old->new id map from
+    ``ClientPool.drain_resizes`` (-1 = departed; ``None`` = identity).
+    Shared by both federated datasets' ``resize``."""
+    if remap is None:
+        remap = np.arange(len(old))
+    new: list = [None] * new_total
+    for old_id, new_id in enumerate(remap):
+        if new_id >= 0:
+            new[int(new_id)] = old[old_id]
+    return new
+
+
+def _mint_streams(new_streams: list, old_streams: list,
+                  hwm: Optional[int]) -> tuple:
+    """Fill ``None`` holes with fresh stream ids minted above the
+    high-water mark, in ascending id order; returns ``(streams, hwm)``.
+    A departed client's stream id is never recycled onto a joiner."""
+    if hwm is None:
+        hwm = max(old_streams, default=-1) + 1
+    for i, s in enumerate(new_streams):
+        if s is None:
+            new_streams[i] = hwm
+            hwm += 1
+    return new_streams, hwm
+
+
 @dataclass
 class FederatedDataset:
-    """Per-client views over a base dataset, produced by dirichlet_partition."""
+    """Per-client views over a base dataset, produced by dirichlet_partition.
+
+    ELASTIC: :meth:`resize` reconciles the shard list with a client-pool
+    resize (the orchestrator's ``admit``/``retire``): survivors keep
+    their exact shards at their renumbered ids, departed shards are
+    dropped, and every joiner is provisioned a fresh Dirichlet-skewed
+    shard from the base set (``alpha`` controls the class skew, matching
+    the construction-time partitioner). Joiner shards are sampled from
+    the base distribution independently of the existing partition — new
+    devices bring their own data, which may overlap other clients'.
+
+    Batch draws are keyed by a per-client *stream id* (identity until
+    the first resize), the same indirection ``FederatedLMDataset``
+    uses: renumbering never moves a survivor onto another client's
+    batch-draw sequence, and a departed client's stream is never
+    recycled onto a joiner.
+    """
     base: SyntheticClassificationDataset
     partitions: list
+    alpha: float = 0.5
+    stream_of: Optional[list] = None  # client id -> stream id (None = identity)
+    stream_hwm: Optional[int] = None  # next fresh stream id (monotonic)
 
     @classmethod
     def make(cls, n_clients: int, alpha: float = 0.5, seed: int = 0,
              n_samples: int = 10_000) -> "FederatedDataset":
         base = SyntheticClassificationDataset(n_samples=n_samples, seed=seed)
         parts = dirichlet_partition(base.labels, n_clients, alpha=alpha, seed=seed)
-        return cls(base=base, partitions=parts)
+        return cls(base=base, partitions=parts, alpha=alpha)
 
     @property
     def n_clients(self) -> int:
         return len(self.partitions)
 
+    def _stream(self, client_id: int) -> int:
+        return client_id if self.stream_of is None \
+            else self.stream_of[client_id]
+
     def client_batch(self, client_id: int, batch_size: int, step: int) -> dict:
         part = self.partitions[client_id]
-        rng = np.random.default_rng((client_id, step))
+        rng = np.random.default_rng((self._stream(client_id), step))
         take = rng.choice(len(part), size=min(batch_size, len(part)), replace=False)
         idx = part[take]
         return {"x": self.base.features[idx], "y": self.base.labels[idx]}
@@ -120,20 +172,74 @@ class FederatedDataset:
         sizes = np.array([len(p) for p in self.partitions], dtype=np.float64)
         return (sizes / sizes.sum()).astype(np.float32)
 
+    # ---- elastic population ----------------------------------------------
+    def _provision_shard(self, rng: np.random.Generator) -> np.ndarray:
+        """One fresh non-IID shard for a joiner: Dirichlet(alpha) class
+        proportions, sized like the current mean shard (floor 8)."""
+        labels = self.base.labels
+        n_classes = int(labels.max()) + 1
+        size = max(8, int(np.mean([len(p) for p in self.partitions]))
+                   if self.partitions else 64)
+        counts = rng.multinomial(size, rng.dirichlet([self.alpha] * n_classes))
+        idx: list[int] = []
+        for c, k in enumerate(counts):
+            if k == 0:
+                continue
+            pool = np.where(labels == c)[0]
+            idx.extend(rng.choice(pool, size=k,
+                                  replace=k > len(pool)).tolist())
+        return np.asarray(sorted(idx), dtype=np.int64)
+
+    def resize(self, remap: Optional[np.ndarray], new_total: int,
+               rng: np.random.Generator) -> None:
+        """Reconcile shards with a pool resize (see class docstring).
+
+        ``remap`` is the composed old->new client id map from
+        ``ClientPool.drain_resizes`` (-1 = departed; ``None`` = identity
+        over the old population); ids beyond its image are joiners and
+        get provisioned from ``rng``, in ascending id order. Survivors
+        carry BOTH their shard and their batch-draw stream id.
+        """
+        old_streams = self.stream_of if self.stream_of is not None \
+            else list(range(len(self.partitions)))
+        new_parts = _carry_by_remap(self.partitions, remap, new_total)
+        new_streams, hwm = _mint_streams(
+            _carry_by_remap(old_streams, remap, new_total),
+            old_streams, self.stream_hwm)
+        for i in range(new_total):
+            if new_parts[i] is None:
+                new_parts[i] = self._provision_shard(rng)
+        self.partitions = new_parts
+        self.stream_of = new_streams
+        self.stream_hwm = hwm
+
 
 @dataclass
 class FederatedLMDataset:
     """Per-client LM token streams (non-IID via per-client seeds and
-    disjoint document-parameter ranges) for federating the transformer zoo."""
+    disjoint document-parameter ranges) for federating the transformer zoo.
+
+    ELASTIC: each client id maps to a *stream id* (identity until the
+    first :meth:`resize`), so a pool resize renumbering survivors keeps
+    every surviving client on its own token stream, departed streams are
+    retired for good (never recycled onto a joiner), and joiners mint
+    fresh stream ids above the high-water mark.
+    """
     vocab_size: int
     seq_len: int
     n_clients_: int
     seed: int = 0
     frontend: Optional[tuple] = None  # (frontend_len, frontend_dim) stub
+    stream_of: Optional[list] = None  # client id -> stream id (None = identity)
+    stream_hwm: Optional[int] = None  # next fresh stream id (monotonic)
 
     @property
     def n_clients(self) -> int:
         return self.n_clients_
+
+    def _stream(self, client_id: int) -> int:
+        return client_id if self.stream_of is None \
+            else self.stream_of[client_id]
 
     def _with_frontend(self, batch: dict, rng) -> dict:
         if self.frontend is not None:
@@ -144,10 +250,23 @@ class FederatedLMDataset:
         return batch
 
     def client_batch(self, client_id: int, batch_size: int, step: int) -> dict:
+        stream = self._stream(client_id)
         ds = SyntheticLMDataset(self.vocab_size, self.seq_len,
-                                seed=hash((self.seed, client_id)) % (2**31))
-        rng = np.random.default_rng((self.seed, client_id, step))
+                                seed=hash((self.seed, stream)) % (2**31))
+        rng = np.random.default_rng((self.seed, stream, step))
         return self._with_frontend(ds.batch(batch_size, step), rng)
+
+    def resize(self, remap: Optional[np.ndarray], new_total: int,
+               rng: np.random.Generator = None) -> None:
+        """Reconcile client->stream ids with a pool resize (see class
+        docstring); ``rng`` is accepted for interface symmetry with
+        :meth:`FederatedDataset.resize` but never consumed — stream
+        minting is a deterministic counter."""
+        old = self.stream_of if self.stream_of is not None \
+            else list(range(self.n_clients_))
+        self.stream_of, self.stream_hwm = _mint_streams(
+            _carry_by_remap(old, remap, new_total), old, self.stream_hwm)
+        self.n_clients_ = new_total
 
     def eval_batch(self, n: int = 256) -> dict:
         ds = SyntheticLMDataset(self.vocab_size, self.seq_len,

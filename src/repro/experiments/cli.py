@@ -6,6 +6,8 @@ Subcommands::
     run SCENARIO                sweep strategies x seeds, write artifact
         --strategies pso,random --rounds 25 --seeds 0,17
         --set depth=4 --set width=5        (ScenarioSpec overrides)
+        --env emulated                     (run on the other track, e.g.
+                                            elastic presets on Fig. 4)
         --out artifacts/experiments/foo.json
     validate PATH [PATH ...]    schema-check existing artifacts
 
@@ -56,6 +58,8 @@ def cmd_list(args) -> int:
 
 def cmd_run(args) -> int:
     spec = get_scenario(args.scenario)
+    if getattr(args, "env", None):
+        spec = spec.for_env(args.env)
     overrides = _parse_set(args.set)
     if overrides:
         try:
@@ -71,8 +75,12 @@ def cmd_run(args) -> int:
     result = run_experiment(spec, strategies, rounds=rounds, seeds=seeds,
                             verbose=args.verbose, mode=args.mode)
 
-    out = Path(args.out) if args.out else \
-        DEFAULT_OUT_DIR / f"{spec.name}.json"
+    # --env runs get a kind-suffixed default filename, so driving the
+    # same preset on both tracks never silently clobbers one artifact
+    # with the other
+    default_name = f"{spec.name}_{spec.kind}.json" \
+        if getattr(args, "env", None) else f"{spec.name}.json"
+    out = Path(args.out) if args.out else DEFAULT_OUT_DIR / default_name
     result.save(out)
     print(f"-> wrote {out} (schema v{result.schema_version}, "
           f"{len(result.runs)} runs)")
@@ -122,6 +130,12 @@ def build_parser() -> argparse.ArgumentParser:
                        help="comma-separated seeds (multi-seed sweep)")
     run_p.add_argument("--set", action="append", metavar="KEY=VALUE",
                        help="override a ScenarioSpec field (repeatable)")
+    run_p.add_argument("--env", default=None,
+                       choices=("simulated", "emulated"),
+                       help="run the scenario on the given track "
+                            "regardless of its registered kind (e.g. "
+                            "the elastic presets on the emulated "
+                            "Fig. 4 world)")
     run_p.add_argument("--out", default=None,
                        help=f"artifact path (default "
                             f"{DEFAULT_OUT_DIR}/<scenario>.json)")

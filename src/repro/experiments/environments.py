@@ -29,7 +29,7 @@ import numpy as np
 from repro.core.cost_model import CostModel, TwoTierCostModel
 from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, \
     slot_remap
-from repro.fl.distributed import choose_fl_hierarchy
+from repro.fl.distributed import elastic_rehierarchize
 
 
 @dataclass
@@ -120,16 +120,11 @@ class SimulatedEnvironment:
                 f"pool resize log starts at {old_n} clients but the "
                 f"hierarchy tracked {old_h.total_clients}")
         n = len(self.clients)
-        if n < old_h.min_clients or n > self._capacity:
-            new_h = choose_fl_hierarchy(n, scale=True)
-            self._capacity = max(new_h.max_clients, n)
-        else:
-            # in-window (n <= the established capacity): keep the tree,
-            # re-pin the client count — a scenario built overstuffed
-            # stays on its shape until the population shrinks out
-            new_h = Hierarchy(depth=old_h.depth, width=old_h.width,
-                              trainers_per_leaf=old_h.trainers_per_leaf,
-                              n_clients=n)
+        # the shared capacity-window rule (fl.distributed): in-window
+        # resizes keep the tree and re-pin the client count, crossings
+        # rebuild the structure — identical on the emulated track
+        new_h, self._capacity = elastic_rehierarchize(old_h, n,
+                                                      self._capacity)
         self.topology_version += 1
         update = TopologyUpdate(
             version=self.topology_version,
@@ -161,14 +156,33 @@ class EmulatedEnvironment:
     ``orchestrator.run_round``, so a strategy driven through this
     environment reproduces ``FederatedOrchestrator.run`` exactly
     (including model state evolution and eval metrics).
+
+    The topology is ELASTIC, exactly like the simulated track:
+    ``ClientJoin``/``ClientLeave`` events resize the orchestrator's live
+    pool, and :meth:`sync_topology` delegates to
+    ``FederatedOrchestrator.sync_population`` — survivors keep their
+    model weights (the global model) and data shards, joiners are
+    provisioned shards and train from the current global params, and the
+    re-hierarchization rule is the SAME capacity-window logic, so one
+    event schedule replays the identical hierarchy/``topology_version``
+    sequence on both tracks.
     """
     kind = "emulated"
 
     def __init__(self, orchestrator):
         self.orchestrator = orchestrator
-        self.hierarchy = orchestrator.hierarchy
         self.clients = orchestrator.clients
         self._cost_model: Optional[CostModel] = None
+
+    @property
+    def hierarchy(self) -> Hierarchy:
+        """The orchestrator's CURRENT hierarchy (elastic runs rebind it
+        mid-flight, so this must never be snapshotted at construction)."""
+        return self.orchestrator.hierarchy
+
+    @property
+    def topology_version(self) -> int:
+        return self.orchestrator.topology_version
 
     @property
     def cost_model(self) -> CostModel:
@@ -183,15 +197,18 @@ class EmulatedEnvironment:
         self.orchestrator.warmup()
 
     def sync_topology(self) -> Optional[TopologyUpdate]:
-        """The emulated track keeps live model/optimizer state per
-        client — elastic populations are simulated-only for now."""
-        if self.clients.drain_resizes() is not None:
-            raise NotImplementedError(
-                "ClientJoin/ClientLeave pool resizes are not supported "
-                "by the emulated environment (the orchestrator pins "
-                "per-client model state); run elastic scenarios on the "
-                "simulated track")
-        return None
+        """Reconcile the orchestrator with this round's pool resizes:
+        data shards carried/provisioned, FedAvg weights recomputed, the
+        round engine retargeted, and the returned update's
+        slot/client remaps feed the strategies' ``migrate`` hooks (the
+        runner calls them) — an aggregator-host departure is repaired
+        before the next proposal."""
+        update = self.orchestrator.sync_population()
+        if update is not None and self._cost_model is not None:
+            # keep the analytic view strategies hold a reference to
+            # pointed at the live topology
+            self._cost_model.retarget(update.new_hierarchy)
+        return update
 
     def step(self, round_idx: int, placement) -> RoundObservation:
         rec = self.orchestrator.run_round(round_idx, placement)
@@ -201,7 +218,8 @@ class EmulatedEnvironment:
             tpd=float(rec.tpd),
             metrics={"loss": rec.loss, "accuracy": rec.accuracy,
                      "train_time": rec.train_time,
-                     "agg_time": rec.agg_time})
+                     "agg_time": rec.agg_time},
+            topology_version=self.topology_version)
 
 
 def build_environment(spec, seed: int = 0) -> Environment:

@@ -14,7 +14,12 @@ Two execution modes produce bit-identical artifacts (parity-pinned):
 
 * **sequential** — one ``run_single`` propose/observe loop per
   (strategy, seed), each against its own environment. The only mode for
-  emulated scenarios.
+  emulated scenarios — including ELASTIC emulated runs, where each
+  round's ``ClientJoin``/``ClientLeave`` events resize the live
+  ``FederatedOrchestrator`` population through
+  ``EmulatedEnvironment.sync_topology`` (joiners train from the current
+  global model; the strategy migrates across the topology update
+  exactly as on the simulated track).
 * **batched** — every (strategy, seed) run of a simulated sweep advances
   in lockstep: per round, the runs' proposed placements are scored in
   ONE exact :class:`~repro.core.cost_model.PooledTPDEvaluator` call
@@ -167,6 +172,8 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
         if elastic:
             run.metrics.setdefault("topology_version", []).append(
                 float(obs.topology_version))
+            run.metrics.setdefault("n_clients", []).append(
+                float(len(env.clients)))
         for k, v in obs.metrics.items():
             run.metrics.setdefault(k, []).append(float(v))
         if verbose:
@@ -284,6 +291,8 @@ def run_batched(spec: ScenarioSpec,
             if elastic:
                 runs[i].metrics.setdefault("topology_version", []).append(
                     float(envs[i].topology_version))
+                runs[i].metrics.setdefault("n_clients", []).append(
+                    float(len(envs[i].clients)))
             if verbose:
                 print(f"    [{runs[i].strategy} s{runs[i].seed}] "
                       f"r{r:3d} tpd={true_tpd:8.4f}")

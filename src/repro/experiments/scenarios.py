@@ -34,6 +34,11 @@ The last three are ELASTIC: ``ClientJoin``/``ClientLeave`` events
 genuinely resize the pool, and the environments re-hierarchize (new
 ``Hierarchy``, bumped ``topology_version``, strategy ``migrate`` hooks)
 whenever the population crosses the current tree's capacity window.
+They run on BOTH tracks: ``spec.for_env("emulated")`` (CLI
+``--env emulated``) drives the same event schedule through the live
+``FederatedOrchestrator`` — clients admitted/retired mid-run, joiners
+training from the current global model — and replays the identical
+hierarchy sequence the simulated track produces.
 
 The ``large-*`` rungs are the swarm-scale regime: they are only
 practical through the exact vectorized evaluators
@@ -395,6 +400,22 @@ class ScenarioSpec:
     def is_elastic(self) -> bool:
         """Does any scheduled event resize the client population?"""
         return any(e.resizes_pool for e in self.events)
+
+    def for_env(self, kind: str) -> "ScenarioSpec":
+        """The same scenario on the other evaluation track.
+
+        ``for_env('emulated')`` runs a (possibly elastic) simulated
+        preset on the Fig. 4 world — real local training via
+        ``FederatedOrchestrator``, with the track-specific knobs
+        (``model``, ``local_steps``, ``timing``, ...) taking their
+        spec'd values; ``for_env('simulated')`` goes the other way. The
+        CLI's ``--env`` flag routes through here.
+        """
+        if kind not in ("simulated", "emulated"):
+            raise ValueError(f"unknown environment kind {kind!r}")
+        if kind == self.kind:
+            return self
+        return dataclasses.replace(self, kind=kind)
 
     # -- variants ----------------------------------------------------------
     def with_overrides(self, **overrides) -> "ScenarioSpec":

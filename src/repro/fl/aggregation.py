@@ -85,17 +85,40 @@ class SegmentAggregator:
     every round reuses the same compiled executables (plan shapes are
     placement-independent). Math is identical: each segment accumulates
     ``[host, children...]`` in the reference's order.
+
+    ELASTIC: :meth:`retarget` points the aggregator at a new hierarchy
+    after a mid-run resize. The jit'd executables are keyed by the
+    per-level cluster counts — a population change that keeps the tree
+    shape (in-window growth/shrink: same depth/width, only trainer
+    counts move) keeps every compiled function (jit's own argument-shape
+    cache absorbs the new src/seg lengths), and previously-seen shapes
+    (ebb-and-flow oscillating between two trees) are served from a
+    per-aggregator cache instead of re-jitting each crossing.
     """
 
     def __init__(self, hierarchy: Hierarchy):
-        self.hierarchy = hierarchy
-        self._n_clusters = [
+        self._fn_cache: dict = {}      # n_clusters -> jit'd level fn
+        self._fused_fns: dict = {}     # tuple(n_clusters) -> fused fn
+        self._weight_fn = jax.jit(self._apply_weights)
+        self._n_clusters: Optional[list] = None
+        self.retarget(hierarchy)
+
+    def retarget(self, hierarchy: Hierarchy) -> bool:
+        """Adopt ``hierarchy`` (elastic resize); returns True when the
+        compiled level executables actually changed (tree shape moved),
+        False when everything was reused."""
+        n_clusters = [
             lp.n_clusters
             for lp in hierarchy.round_plan(
                 np.arange(hierarchy.dimensions)).levels]
-        self._level_fns = [self._make_level_fn(n)
-                           for n in self._n_clusters]
-        self._weight_fn = jax.jit(self._apply_weights)
+        changed = n_clusters != self._n_clusters
+        self.hierarchy = hierarchy
+        if changed:
+            self._n_clusters = n_clusters
+            self._level_fns = [
+                self._fn_cache.setdefault(n, self._make_level_fn(n))
+                for n in n_clusters]
+        return changed
 
     # ---- the two shared math bodies (every path goes through these) --
     @staticmethod
@@ -128,9 +151,7 @@ class SegmentAggregator:
         return self._weight_fn(stacked_updates,
                                jnp.asarray(weights, jnp.float32))
 
-    def _make_fused(self):
-        n_clusters = self._n_clusters
-
+    def _make_fused(self, n_clusters: tuple):
         def fused(stacked, w, srcs, segs):
             vals = None
             weighted = self._apply_weights(stacked, w)
@@ -143,10 +164,13 @@ class SegmentAggregator:
 
     def aggregate_fused(self, stacked_updates, weights, plan: RoundPlan):
         """Weighting + every level + root extraction in ONE jit call —
-        the deterministic-timing hot path (no per-level host syncs)."""
-        fn = getattr(self, "_fused_fn", None)
+        the deterministic-timing hot path (no per-level host syncs).
+        Fused executables are cached per tree shape, so an elastic run
+        oscillating between two hierarchies compiles each once."""
+        key = tuple(self._n_clusters)
+        fn = self._fused_fns.get(key)
         if fn is None:
-            fn = self._fused_fn = self._make_fused()
+            fn = self._fused_fns[key] = self._make_fused(key)
         return fn(stacked_updates, jnp.asarray(weights, jnp.float32),
                   tuple(jnp.asarray(lp.src) for lp in plan.levels),
                   tuple(jnp.asarray(lp.seg) for lp in plan.levels))

@@ -221,3 +221,28 @@ def choose_fl_hierarchy(n_clients: int, *, scale: bool = False) -> Hierarchy:
                              n_clients=n_clients)
     return Hierarchy(depth=1, width=1, trainers_per_leaf=1,
                      n_clients=max(n_clients, 2))
+
+
+def elastic_rehierarchize(old: Hierarchy, n_clients: int,
+                          capacity: int) -> tuple:
+    """THE capacity-window re-hierarchization rule of the elastic tracks.
+
+    Returns ``(new_hierarchy, new_capacity)`` for a population that just
+    resized to ``n_clients`` under a tree previously allowed to carry up
+    to ``capacity`` clients. Outside the window ``[old.min_clients,
+    capacity]`` the structure is rebuilt through
+    :func:`choose_fl_hierarchy` (scale ladder) and the capacity re-pins
+    to the new tree's bound; inside it, the same tree shape is kept and
+    only ``n_clients`` is re-pinned (cheaper migration, identity
+    ``slot_remap``). Deterministic — no rng is consumed — and shared by
+    ``SimulatedEnvironment.sync_topology`` and
+    ``FederatedOrchestrator.sync_population`` so the two tracks replay
+    the SAME hierarchy sequence for the same event schedule (the
+    emulated-vs-simulated elastic parity tests pin this).
+    """
+    if n_clients < old.min_clients or n_clients > capacity:
+        new = choose_fl_hierarchy(n_clients, scale=True)
+        return new, max(new.max_clients, n_clients)
+    return Hierarchy(depth=old.depth, width=old.width,
+                     trainers_per_leaf=old.trainers_per_leaf,
+                     n_clients=n_clients), capacity

@@ -40,12 +40,19 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.hierarchy import ClientPool, Hierarchy
+from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, \
+    slot_remap
 from repro.core.placement import PlacementStrategy
 from repro.data.synthetic import FederatedDataset
 from repro.fl.aggregation import SegmentAggregator
+from repro.fl.distributed import elastic_rehierarchize
 from repro.models.api import Model
 from repro.utils.trees import tree_weighted_sum
+
+# rng stream tag for elastic data provisioning: joiner shards draw from
+# a dedicated stream so admitting clients never perturbs the training /
+# noise rng sequences of the surviving population
+_ELASTIC_STREAM = 0xE1A57
 
 
 @dataclass
@@ -88,7 +95,13 @@ class FederatedRunResult:
 
 
 class FederatedOrchestrator:
-    """Runs FL rounds against a strategy, measuring black-box TPD."""
+    """Runs FL rounds against a strategy, measuring black-box TPD.
+
+    The training population is ELASTIC: :meth:`admit` / :meth:`retire`
+    resize the live run mid-flight (joiners train from the current
+    global model and get fresh data shards; survivors keep theirs), and
+    :meth:`sync_population` reconciles hierarchy/data/engine state after
+    event-driven pool resizes — see the elastic section below."""
 
     def __init__(self, model: Model, hierarchy: Hierarchy,
                  clients: ClientPool, data: FederatedDataset, *,
@@ -134,6 +147,13 @@ class FederatedOrchestrator:
         # batched engine state (built lazily in _warmup)
         self._agg: Optional[SegmentAggregator] = None
         self._local_fns: Dict[tuple, Callable] = {}
+
+        # elastic population state: the hierarchy is a versioned run
+        # property (mirrors SimulatedEnvironment); the capacity window
+        # honors a deliberately overstuffed construction-time population
+        self.topology_version = 0
+        self._capacity = max(hierarchy.max_clients, len(clients))
+        self._elastic_rng = np.random.default_rng((seed, _ELASTIC_STREAM))
 
     # ==================================================================
     # deterministic per-cluster delay (eq. 6), shared by both engines
@@ -411,6 +431,104 @@ class FederatedOrchestrator:
     # kept as an alias for callers of the historical private name
     _warmup = warmup
 
+    # ==================================================================
+    # elastic population: admit / retire / sync_population
+    # ==================================================================
+    def admit(self, memcap, pspeed, mdatasize=None
+              ) -> Tuple[np.ndarray, Optional[TopologyUpdate]]:
+        """Admit fresh clients into the LIVE training population.
+
+        Appends the devices to the pool, provisions each a data shard
+        (``FederatedDataset.resize`` — survivors keep their exact
+        shards), recomputes the FedAvg weights, and re-hierarchizes when
+        the growth crosses the tree's capacity window. Returns ``(new
+        client ids, TopologyUpdate or None)`` — callers driving a
+        placement strategy must ``strategy.migrate(update)`` before the
+        next ``run_round``, exactly as the experiment runner does.
+
+        Joiners hold no model/optimizer state of their own: every round
+        starts each client's local steps from the CURRENT global
+        ``self.params``, so a mid-run joiner's first gradient step is
+        taken from the model the federation has already trained — never
+        from the round-0 init (pinned by the elastic-emulated tests).
+        """
+        ids = self.clients.join(memcap, pspeed, mdatasize)
+        return ids, self.sync_population()
+
+    def retire(self, ids) -> Optional[TopologyUpdate]:
+        """Retire clients from the live population: their data shards
+        are dropped, survivors are renumbered contiguously, and the
+        returned :class:`TopologyUpdate` carries the old->new id remap
+        plus the ``slot_remap`` every strategy's ``migrate`` hook uses
+        to REPAIR placements — a departure taking out a current
+        aggregator host yields a valid repaired placement for the very
+        next round."""
+        self.clients.leave(ids)
+        return self.sync_population()
+
+    def sync_population(self) -> Optional[TopologyUpdate]:
+        """Reconcile hierarchy + data + engine state with the (possibly
+        resized) client pool; ``None`` when the population is untouched.
+
+        This is the emulated twin of
+        ``SimulatedEnvironment.sync_topology``: it drains the pool's
+        resize log, carries surviving data shards across the id remap
+        (provisioning joiners via ``repro.data.synthetic``), recomputes
+        the FedAvg weights, re-hierarchizes through the SAME
+        capacity-window rule (:func:`elastic_rehierarchize`, so both
+        tracks replay identical hierarchy sequences for one event
+        schedule), and retargets the batched round engine — the
+        segment-sum executables are re-jitted only when the tree shape
+        actually changed. Events mutating the pool directly
+        (``ClientJoin``/``ClientLeave``) are wired here through
+        ``EmulatedEnvironment.sync_topology``.
+        """
+        drained = self.clients.drain_resizes()
+        if drained is None:
+            return None
+        old_n, client_remap = drained
+        old_h = self.hierarchy
+        if old_n != old_h.total_clients:
+            raise RuntimeError(
+                f"pool resize log starts at {old_n} clients but the "
+                f"hierarchy tracked {old_h.total_clients}")
+        n = len(self.clients)
+        resize = getattr(self.data, "resize", None)
+        if resize is None:
+            raise NotImplementedError(
+                f"{type(self.data).__name__} has no resize(); elastic "
+                f"populations need a dataset that can carry shards "
+                f"across a pool resize")
+        resize(client_remap, n, self._elastic_rng)
+        self.weights = self.data.client_weights()
+        new_h, self._capacity = elastic_rehierarchize(old_h, n,
+                                                      self._capacity)
+        self.topology_version += 1
+        update = TopologyUpdate(
+            version=self.topology_version,
+            old_hierarchy=old_h, new_hierarchy=new_h,
+            slot_remap=slot_remap(old_h, new_h),
+            client_remap=client_remap)
+        self.hierarchy = new_h
+        if self._agg is not None:
+            self._agg.retarget(new_h)
+        return update
+
+    def _check_population(self) -> None:
+        """Round-time invariant: the population must be synced."""
+        if self.clients.pending_remap() is not None:
+            raise RuntimeError(
+                "client pool was resized without sync_population(); use "
+                "admit()/retire() (or drive rounds through "
+                "EmulatedEnvironment, whose sync_topology wires "
+                "ClientJoin/ClientLeave events here)")
+        if not (len(self.clients) == self.hierarchy.total_clients
+                == self.data.n_clients):
+            raise RuntimeError(
+                f"inconsistent population: pool={len(self.clients)} "
+                f"hierarchy={self.hierarchy.total_clients} "
+                f"data={self.data.n_clients}")
+
     def run_round(self, r: int, placement) -> RoundRecord:
         """Execute ONE federated round at ``placement`` and return its
         record (the black-box TPD plus train/agg split and eval metrics).
@@ -421,6 +539,7 @@ class FederatedOrchestrator:
         before the first round.
         """
         placement = np.asarray(placement, np.int64)
+        self._check_population()
         self.hierarchy.validate_placement(placement)
 
         if self.engine == "loop":

@@ -334,16 +334,21 @@ def test_every_registered_strategy_survives_a_resize():
         assert max(run.metrics["topology_version"]) >= 2
 
 
-def test_emulated_environment_rejects_pool_resizes():
-    from types import SimpleNamespace
-    from repro.experiments.environments import EmulatedEnvironment
-    pool = ClientPool.random(10, seed=0)
-    env = EmulatedEnvironment(SimpleNamespace(
-        hierarchy=Hierarchy(2, 2, 1, n_clients=10), clients=pool))
-    assert env.sync_topology() is None
-    pool.join(memcap=[20.0], pspeed=[8.0])
-    with pytest.raises(NotImplementedError, match="simulated track"):
-        env.sync_topology()
+def test_emulated_environment_syncs_pool_resizes():
+    """PR 5: the emulated track is elastic too — an event-driven pool
+    resize flows through ``sync_topology`` into the orchestrator (it
+    used to raise NotImplementedError)."""
+    from repro.experiments.environments import build_environment
+    spec = get_scenario("paper-fig4").with_overrides(
+        model="mlp-smoke", local_steps=1, batch_size=8)
+    env = build_environment(spec, seed=0)
+    assert env.sync_topology() is None            # no resize, no update
+    env.clients.join(memcap=[20.0], pspeed=[8.0])
+    update = env.sync_topology()
+    assert update is not None
+    assert update.new_hierarchy.total_clients == 11
+    assert env.hierarchy is update.new_hierarchy
+    assert env.orchestrator.data.n_clients == 11  # shard provisioned
 
 
 def test_straggler_recovery_survives_a_leave_renumbering():
