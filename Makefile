@@ -8,16 +8,22 @@ BENCH_OUT ?= artifacts/benchmarks/BENCH_scale.json
 BENCH_BASELINE ?= benchmarks/baselines/BENCH_scale.baseline.json
 BENCH_TOLERANCE ?= 0.25
 
-.PHONY: verify test lint bench-round bench-fig4 bench-scale \
+.PHONY: verify test lint analyze bench-round bench-fig4 bench-scale \
 	bench-scale-smoke bench-baseline experiments-smoke \
 	elastic-emulated-smoke
 
 verify test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-# the CI lint tier (ruff's fast fatal-error rule set; see pyproject)
+# the CI lint tier (ruff E/F + isort + bugbear; see pyproject)
 lint:
 	ruff check .
+
+# repo-invariant static analysis: parity-oracle registry, RNG-stream
+# discipline, jit/cache-key hygiene, determinism sources (RPL0xx rules;
+# see src/repro/analysis/__init__.py for the catalog)
+analyze:
+	PYTHONPATH=src $(PY) -m repro.analysis
 
 bench-round:
 	PYTHONPATH=src $(PY) benchmarks/bench_round_engine.py

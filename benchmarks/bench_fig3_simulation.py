@@ -43,8 +43,8 @@ def run_cell(depth: int, width: int, particles: int, seed: int = 0,
                       inertia=0.01, c1=0.01, c2=1.0, velocity_factor=0.1,
                       seed=seed)
     t0 = time.perf_counter()
-    best = pso.run(cm.fitness, iterations=iterations,
-                   batch_fitness_fn=cm.batch_fitness)
+    pso.run(cm.fitness, iterations=iterations,
+            batch_fitness_fn=cm.batch_fitness)
     wall = time.perf_counter() - t0
     hist = pso.history
     t0_norm = max(hist.mean[0], 1e-9)

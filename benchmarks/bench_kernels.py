@@ -11,14 +11,12 @@ every row (so the table is also a correctness gate).
 from __future__ import annotations
 
 import json
-import time
 from pathlib import Path
 
+import jax.numpy as jnp
 import numpy as np
 
-import jax.numpy as jnp
-
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.kernels.fedavg import fedavg_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rglru import rglru_scan_pallas
@@ -118,7 +116,7 @@ def bench_fused_adamw(rng) -> list:
         want = fused_adamw_ref(*args)
         err = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) -
                                         b.astype(jnp.float32))))
-                  for a, b in zip(got, want))
+                  for a, b in zip(got, want, strict=True))
         vmem = 8 * bn * 4          # 4 in + 3 out + scratch, f32
         flops = 12 * n             # ~12 flops/element
         bytes_moved = 7 * n * 4    # information-theoretic floor

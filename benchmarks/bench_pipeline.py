@@ -12,8 +12,6 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -126,5 +124,4 @@ def main() -> dict:
 
 
 if __name__ == "__main__":
-    import os
     main()

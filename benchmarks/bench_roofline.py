@@ -26,8 +26,6 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-import numpy as np
-
 import jax
 
 from repro.configs import ASSIGNED, SHAPES, get_config
@@ -43,7 +41,7 @@ def model_params(arch: str) -> tuple:
     cfg = get_config(arch)
     model = get_model(cfg)
     shapes = jax.eval_shape(model.init, jax.random.key(0))
-    n_total = sum(l.size for l in jax.tree.leaves(shapes))
+    n_total = sum(x.size for x in jax.tree.leaves(shapes))
     n_active = n_total
     if cfg.moe is not None:
         e, k, f, d = (cfg.moe.n_experts, cfg.moe.top_k,

@@ -150,7 +150,7 @@ def bench_scenario(name, strategies, seeds, *, rounds=None,
     # all three rungs computed the same trajectories, bit for bit
     identical = identical and all(
         run.tpds[:scalar_rounds] == traj
-        for run, traj in zip(res_b.runs, scalar_traj))
+        for run, traj in zip(res_b.runs, scalar_traj, strict=True))
 
     row = {
         "scenario": name, "clients": h.total_clients,

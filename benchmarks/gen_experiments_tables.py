@@ -2,7 +2,6 @@
 the artifacts (idempotent; run after any dry-run refresh)."""
 from __future__ import annotations
 
-import json
 from pathlib import Path
 
 from benchmarks.bench_roofline import analyze, load_records

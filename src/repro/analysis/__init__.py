@@ -1,0 +1,58 @@
+"""repro.analysis: the repo-invariant static-analysis pass.
+
+The paper's reproduction rests on two mechanical contracts: every
+vectorized/batched hot path is pinned bit-identical to a scalar oracle,
+and every stochastic stream derives from an explicit ``(seed, stream)``
+tuple. This package enforces those contracts (plus the jit/cache-key and
+determinism-source hygiene they depend on) as an AST lint over ``src/``
+and ``tests/`` — run it with ``make analyze`` or
+``PYTHONPATH=src python -m repro.analysis``.
+
+Rule catalog (see :mod:`repro.analysis.rules` for the checkers and
+:mod:`repro.analysis.parity` for the oracle registry):
+
+========  ==============================================================
+RPL000    malformed suppression pragma (missing reason / unknown code)
+RPL001    vectorized or Pallas entry point without a registered scalar
+          oracle + parity test (``analysis/parity.py`` registry)
+RPL002    rng constructed from literal / ``hash()`` seeds instead of a
+          named stream constant or seed parameter
+RPL003    ``jax.jit`` without explicit ``static_argnames`` in ``core/``
+          or ``fl/``; version-token cache keys capturing the mutable
+          object in a closure
+RPL004    nondeterminism sources: wall-clock reads, unordered set/dict
+          iteration feeding arrays, salted string ``hash()``
+========  ==============================================================
+
+Violations are suppressed inline with a written reason::
+
+    something_flagged()  # repro-lint: disable=RPL004 (timing display only)
+
+A pragma without a parenthesised reason is itself an RPL000 violation,
+so every suppression in the tree documents why it is sound.
+"""
+from repro.analysis.engine import FileContext, Pragma, Violation, load_context, load_tree, run
+from repro.analysis.parity import REGISTRY, OraclePair
+from repro.analysis.rules import RULES
+from repro.analysis.sanitize import (
+    DeterminismError,
+    artifact_hash,
+    assert_deterministic,
+    determinism_guard,
+)
+
+__all__ = [
+    "FileContext",
+    "Pragma",
+    "Violation",
+    "load_context",
+    "load_tree",
+    "run",
+    "REGISTRY",
+    "OraclePair",
+    "RULES",
+    "DeterminismError",
+    "artifact_hash",
+    "assert_deterministic",
+    "determinism_guard",
+]

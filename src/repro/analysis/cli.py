@@ -1,0 +1,58 @@
+"""``python -m repro.analysis`` — run the pass, print findings, exit 1
+on any violation (the `analyze` CI job and ``make analyze`` call this)."""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import Optional, Sequence
+
+from repro.analysis import engine, rules
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis",
+        description="repo-invariant static analysis (rules RPL000-RPL004)",
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        help="directories/files to scan, relative to --root "
+        "(default: src tests)",
+    )
+    ap.add_argument(
+        "--root",
+        default=".",
+        help="repository root the scan paths are relative to",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog"
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code, summary in sorted(rules.RULES.items()):
+            print(f"{code}  {summary}")
+        return 0
+
+    root = Path(args.root).resolve()
+    paths = tuple(args.paths) or ("src", "tests")
+    contexts = engine.load_tree(root, paths)
+    violations = engine.run(contexts, root=root)
+    for v in violations:
+        print(v.render())
+    n_files = len(contexts)
+    if violations:
+        print(
+            f"repro.analysis: {len(violations)} violation(s) "
+            f"in {n_files} files",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"repro.analysis: {n_files} files clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,206 @@
+"""Analysis engine: file discovery, pragma parsing, rule dispatch.
+
+The engine is deliberately stdlib-only (``ast`` + ``re``): the pass must
+run in the lint tier of CI before any heavyweight dependency is
+imported, and it must be able to parse files that would fail to import
+(that is the point of a lint).
+
+Suppression pragma grammar (trailing on the flagged line, or alone on
+the line directly above it)::
+
+    # repro-lint: disable=RPL002 (seed restored from checkpoint state)
+    # repro-lint: disable=RPL001,RPL004 (reason covering both)
+
+The parenthesised reason is mandatory: a pragma without one never
+suppresses anything and is itself reported as RPL000, so ``make
+analyze`` exiting 0 guarantees every suppression in the tree carries a
+written justification.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+PRAGMA_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=(?P<codes>[A-Z]{3}\d{3}(?:\s*,\s*[A-Z]{3}\d{3})*)"
+    r"(?:\s*\((?P<reason>[^)]+)\))?"
+)
+
+# directories never scanned: fixtures are deliberate rule violations
+EXCLUDED_PARTS = frozenset({"analysis_fixtures", "__pycache__"})
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One rule finding, keyed the way CI and editors expect."""
+
+    path: str  # repo-relative posix path
+    line: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+@dataclass(frozen=True)
+class Pragma:
+    line: int
+    codes: Tuple[str, ...]
+    reason: str  # "" when the author omitted the mandatory reason
+
+
+@dataclass
+class FileContext:
+    """One parsed file plus everything rules need to inspect it."""
+
+    path: Path  # absolute
+    rel: str  # repo-relative posix path ("src/repro/core/pso.py")
+    source: str
+    tree: ast.Module
+    pragmas: List[Pragma]
+    parents: Dict[ast.AST, ast.AST]
+
+    def suppressed(self, line: int, code: str) -> bool:
+        """True when a well-formed pragma covers ``code`` at ``line``.
+
+        A pragma suppresses its own line (trailing comment) and the line
+        below it (comment-above style). Reasonless pragmas suppress
+        nothing — they only produce RPL000.
+        """
+        for p in self.pragmas:
+            if code in p.codes and p.reason and line in (p.line, p.line + 1):
+                return True
+        return False
+
+    def enclosing_function(
+        self, node: ast.AST
+    ) -> Optional[ast.FunctionDef]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.random.key`` -> "jax.random.key"; None for non-name chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _parse_pragmas(source: str) -> List[Pragma]:
+    pragmas = []
+    for lineno, text in enumerate(source.splitlines(), start=1):
+        m = PRAGMA_RE.search(text)
+        if m is None:
+            continue
+        codes = tuple(c.strip() for c in m.group("codes").split(","))
+        pragmas.append(
+            Pragma(line=lineno, codes=codes, reason=(m.group("reason") or "").strip())
+        )
+    return pragmas
+
+
+def _build_parents(tree: ast.Module) -> Dict[ast.AST, ast.AST]:
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def load_context(path: Path, root: Path, rel: Optional[str] = None) -> FileContext:
+    """Parse one file. ``rel`` overrides the repo-relative path — tests
+    use this to scan fixture snippets as if they lived under ``src/``."""
+    source = path.read_text()
+    tree = ast.parse(source, filename=str(path))
+    return FileContext(
+        path=path,
+        rel=rel if rel is not None else path.resolve().relative_to(root).as_posix(),
+        source=source,
+        tree=tree,
+        pragmas=_parse_pragmas(source),
+        parents=_build_parents(tree),
+    )
+
+
+def iter_python_files(root: Path, paths: Sequence[str]) -> Iterable[Path]:
+    for entry in paths:
+        base = root / entry
+        if base.is_file() and base.suffix == ".py":
+            yield base
+            continue
+        for p in sorted(base.rglob("*.py")):
+            if EXCLUDED_PARTS.isdisjoint(p.parts):
+                yield p
+
+
+def load_tree(root: Path, paths: Sequence[str] = ("src", "tests")) -> List[FileContext]:
+    return [load_context(p, root) for p in iter_python_files(root, paths)]
+
+
+def _check_pragmas(ctx: FileContext, known_codes: Iterable[str]) -> List[Violation]:
+    """RPL000: every pragma must carry a reason and reference real rules.
+
+    Not suppressible — a reasonless pragma suppressing its own report
+    would defeat the mandatory-reason contract.
+    """
+    known = set(known_codes)
+    out = []
+    for p in ctx.pragmas:
+        if not p.reason:
+            out.append(
+                Violation(
+                    ctx.rel,
+                    p.line,
+                    "RPL000",
+                    "suppression pragma is missing its mandatory "
+                    "(reason) — say why the finding is sound",
+                )
+            )
+        unknown = [c for c in p.codes if c not in known]
+        if unknown:
+            out.append(
+                Violation(
+                    ctx.rel,
+                    p.line,
+                    "RPL000",
+                    f"pragma references unknown rule(s): {', '.join(unknown)}",
+                )
+            )
+    return out
+
+
+def run(
+    contexts: Sequence[FileContext],
+    root: Optional[Path] = None,
+    registry: Optional[Sequence] = None,
+) -> List[Violation]:
+    """Run every rule over ``contexts`` and return unsuppressed findings."""
+    # imported here so `engine` stays importable from rules/parity
+    from repro.analysis import parity, rules
+
+    violations: List[Violation] = []
+    for ctx in contexts:
+        violations.extend(_check_pragmas(ctx, rules.RULES))
+        for check in rules.PER_FILE_CHECKS:
+            for v in check(ctx):
+                if not ctx.suppressed(v.line, v.code):
+                    violations.append(v)
+    by_rel = {ctx.rel: ctx for ctx in contexts}
+    for v in parity.check(contexts, registry=registry, root=root):
+        ctx = by_rel.get(v.path)
+        if ctx is None or not ctx.suppressed(v.line, v.code):
+            violations.append(v)
+    return sorted(violations, key=lambda v: (v.path, v.line, v.code))

@@ -1,0 +1,326 @@
+"""Per-file AST rules RPL002-RPL004 (RPL000 lives in the engine, RPL001
+in :mod:`repro.analysis.parity` — it needs the cross-file view).
+
+Each checker takes a :class:`~repro.analysis.engine.FileContext` and
+returns raw :class:`~repro.analysis.engine.Violation`\\ s; the engine
+applies pragma suppression. Scoping is by repo-relative path prefix so
+tests can replay the rules against fixture snippets under a synthetic
+``src/`` path.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Callable, Dict, List, Sequence
+
+from repro.analysis.engine import FileContext, Violation, dotted_name
+
+RULES: Dict[str, str] = {
+    "RPL000": "suppression pragma must carry a (reason) and name real rules",
+    "RPL001": "vectorized/batched or Pallas entry point must be registered "
+    "in the parity-oracle registry with a test covering both paths",
+    "RPL002": "rng streams in src/ must derive from a named stream constant "
+    "or a seed parameter — no literal seeds, no hash()-derived seeds",
+    "RPL003": "jax.jit in core//fl/ must declare static_argnames; "
+    "version-token cache keys must not close over the mutable object",
+    "RPL004": "no wall-clock reads, unordered set/dict iteration into "
+    "arrays, or salted string hash() outside the bench allowlist",
+}
+
+# --------------------------------------------------------------------------
+# RPL002: rng-stream discipline
+# --------------------------------------------------------------------------
+
+_RNG_CONSTRUCTORS = {
+    "default_rng",
+    "np.random.default_rng",
+    "numpy.random.default_rng",
+    "SeedSequence",
+    "np.random.SeedSequence",
+    "numpy.random.SeedSequence",
+    "PRNGKey",
+    "random.PRNGKey",
+    "jax.random.PRNGKey",
+    "jax.random.key",
+}
+
+
+def _contains_numeric_literal(node: ast.AST) -> bool:
+    return any(
+        isinstance(sub, ast.Constant) and isinstance(sub.value, (int, float))
+        and not isinstance(sub.value, bool)
+        for sub in ast.walk(node)
+    )
+
+
+def _contains_hash_call(node: ast.AST) -> bool:
+    return any(
+        isinstance(sub, ast.Call)
+        and isinstance(sub.func, ast.Name)
+        and sub.func.id == "hash"
+        for sub in ast.walk(node)
+    )
+
+
+def _restores_bit_generator_state(fn: ast.AST) -> bool:
+    """True when the enclosing function reassigns ``<rng>.bit_generator
+    .state`` — the checkpoint-restore idiom where a fresh ``default_rng()``
+    is immediately overwritten with saved state."""
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Assign):
+            for tgt in sub.targets:
+                if (
+                    isinstance(tgt, ast.Attribute)
+                    and tgt.attr == "state"
+                    and isinstance(tgt.value, ast.Attribute)
+                    and tgt.value.attr == "bit_generator"
+                ):
+                    return True
+    return False
+
+
+def check_rng_streams(ctx: FileContext) -> List[Violation]:
+    if not ctx.rel.startswith("src/"):
+        return []
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        seed_exprs: List[ast.AST] = []
+        if name in _RNG_CONSTRUCTORS:
+            if not node.args and not node.keywords:
+                fn = ctx.enclosing_function(node)
+                if fn is None or not _restores_bit_generator_state(fn):
+                    out.append(
+                        Violation(
+                            ctx.rel,
+                            node.lineno,
+                            "RPL002",
+                            f"{name}() with no seed is OS-entropy "
+                            "nondeterminism; pass (seed, STREAM) — only the "
+                            "checkpoint bit_generator.state restore idiom "
+                            "is exempt",
+                        )
+                    )
+                continue
+            seed_exprs = [*node.args, *[k.value for k in node.keywords]]
+        else:
+            # seed= keyword anywhere in src/ is a stream boundary too
+            seed_exprs = [k.value for k in node.keywords if k.arg == "seed"]
+        for expr in seed_exprs:
+            if _contains_hash_call(expr):
+                out.append(
+                    Violation(
+                        ctx.rel,
+                        node.lineno,
+                        "RPL002",
+                        "hash()-derived seed (salted for str, opaque for "
+                        "ints) — derive with np.random.SeedSequence over "
+                        "named stream parts",
+                    )
+                )
+            elif _contains_numeric_literal(expr):
+                out.append(
+                    Violation(
+                        ctx.rel,
+                        node.lineno,
+                        "RPL002",
+                        "literal seed component — name it as a module-level "
+                        "_*_STREAM constant or take it as a parameter",
+                    )
+                )
+    return out
+
+
+# --------------------------------------------------------------------------
+# RPL003: jit/cache-key hygiene
+# --------------------------------------------------------------------------
+
+_JIT_SCOPES = ("src/repro/core/", "src/repro/fl/")
+_VERSION_ATTRS = {"version", "topology_version"}
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return dotted_name(node) in ("jax.jit", "jit")
+
+
+def _root_name(node: ast.Attribute) -> str | None:
+    cur: ast.AST = node
+    while isinstance(cur, ast.Attribute):
+        cur = cur.value
+    return cur.id if isinstance(cur, ast.Name) else None
+
+
+def check_jit_hygiene(ctx: FileContext) -> List[Violation]:
+    if not ctx.rel.startswith(_JIT_SCOPES):
+        return []
+    out = []
+    # jax.jit nodes configured through functools.partial(jax.jit, static_...)
+    configured = set()
+    for node in ast.walk(ctx.tree):
+        if (
+            isinstance(node, ast.Call)
+            and dotted_name(node.func) in ("functools.partial", "partial")
+            and node.args
+            and _is_jax_jit(node.args[0])
+            and any(k.arg and k.arg.startswith("static_") for k in node.keywords)
+        ):
+            configured.add(id(node.args[0]))
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and _is_jax_jit(node.func)):
+            continue
+        if id(node.func) in configured:
+            continue
+        if not any(k.arg and k.arg.startswith("static_") for k in node.keywords):
+            out.append(
+                Violation(
+                    ctx.rel,
+                    node.lineno,
+                    "RPL003",
+                    "jax.jit without explicit static_argnames — declare the "
+                    "static surface (static_argnames=() when there is none) "
+                    "so cache-key behavior is reviewable",
+                )
+            )
+    # version-token reads must not coexist with closures over the object
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        version_roots = set()
+        for sub in ast.walk(fn):
+            if (
+                isinstance(sub, ast.Attribute)
+                and sub.attr in _VERSION_ATTRS
+                and ctx.enclosing_function(sub) is fn
+            ):
+                root = _root_name(sub)
+                if root is not None:
+                    version_roots.add(root)
+        if not version_roots:
+            continue
+        for sub in ast.walk(fn):
+            if sub is fn or not isinstance(
+                sub, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+            ):
+                continue
+            captured = version_roots & {
+                n.id
+                for n in ast.walk(sub)
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+            }
+            if captured:
+                out.append(
+                    Violation(
+                        ctx.rel,
+                        sub.lineno,
+                        "RPL003",
+                        f"closure captures mutable object(s) {sorted(captured)} "
+                        f"whose version token {fn.name} reads for a cache key — "
+                        "bake a snapshot into locals instead",
+                    )
+                )
+    return out
+
+
+# --------------------------------------------------------------------------
+# RPL004: determinism sources
+# --------------------------------------------------------------------------
+
+_WALL_CLOCK = {
+    "time.time",
+    "time.time_ns",
+    "datetime.now",
+    "datetime.utcnow",
+    "datetime.today",
+    "date.today",
+    "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+    "datetime.date.today",
+}
+_ARRAY_CTORS = {
+    "np.array",
+    "np.asarray",
+    "np.stack",
+    "np.fromiter",
+    "numpy.array",
+    "numpy.asarray",
+    "jnp.array",
+    "jnp.asarray",
+    "jnp.stack",
+}
+
+
+def _is_unordered_iteration(node: ast.AST) -> bool:
+    if isinstance(node, ast.SetComp):
+        return True
+    if isinstance(node, ast.Call):
+        fname = dotted_name(node.func)
+        if fname == "set":
+            return True
+        if isinstance(node.func, ast.Attribute) and node.func.attr in (
+            "keys",
+            "values",
+        ):
+            return True
+    if isinstance(node, (ast.GeneratorExp, ast.ListComp)):
+        return any(_is_unordered_iteration(g.iter) for g in node.generators)
+    return False
+
+
+def check_determinism_sources(ctx: FileContext) -> List[Violation]:
+    if not ctx.rel.startswith(("src/", "tests/")):
+        return []
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if name in _WALL_CLOCK:
+            out.append(
+                Violation(
+                    ctx.rel,
+                    node.lineno,
+                    "RPL004",
+                    f"{name}() is a wall-clock read — use time.perf_counter "
+                    "for durations; benchmarks/ is the timing allowlist",
+                )
+            )
+        elif name in _ARRAY_CTORS and node.args and _is_unordered_iteration(
+            node.args[0]
+        ):
+            out.append(
+                Violation(
+                    ctx.rel,
+                    node.lineno,
+                    "RPL004",
+                    f"{name} over unordered set/dict iteration — element "
+                    "order is insertion/hash dependent; sorted(...) first",
+                )
+            )
+        elif (
+            ctx.rel.startswith("src/")
+            and name == "hash"
+            and any(
+                isinstance(sub, ast.Constant) and isinstance(sub.value, str)
+                for a in node.args
+                for sub in ast.walk(a)
+            )
+        ):
+            out.append(
+                Violation(
+                    ctx.rel,
+                    node.lineno,
+                    "RPL004",
+                    "hash() over a str is salted per process "
+                    "(PYTHONHASHSEED) — any value derived from it differs "
+                    "across runs",
+                )
+            )
+    return out
+
+
+PER_FILE_CHECKS: Sequence[Callable[[FileContext], List[Violation]]] = (
+    check_rng_streams,
+    check_jit_hygiene,
+    check_determinism_sources,
+)

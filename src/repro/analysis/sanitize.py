@@ -1,0 +1,124 @@
+"""Runtime determinism sanitizer: run twice, hash the artifacts.
+
+The static rules keep nondeterminism *sources* out of the tree; this
+module turns the complementary runtime claim — "this round/sweep is
+bit-identical when repeated" — into an executable check that new
+environments inherit for free:
+
+    from repro.analysis.sanitize import assert_deterministic
+
+    obs = assert_deterministic(lambda: env.step(0, placement))
+
+or, batching several checks through one report::
+
+    with determinism_guard() as guard:
+        guard.check("round0", lambda: env.step(0, placement))
+        guard.check("pso", lambda: pso_run())
+
+``artifact_hash`` canonicalizes nested dicts (sorted keys), sequences,
+dataclasses, scalars, and anything ``np.asarray`` understands (numpy
+and jax arrays included) into one sha256, so two results collide iff
+every array byte and every scalar matches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, List, Optional, Tuple, TypeVar
+
+import numpy as np
+
+T = TypeVar("T")
+
+
+class DeterminismError(AssertionError):
+    """Raised when repeated runs of a factory disagree bit-for-bit."""
+
+
+def _update(h: "hashlib._Hash", obj: Any) -> None:
+    if obj is None or isinstance(obj, (bool, int, str, bytes)):
+        h.update(b"s")
+        h.update(repr(obj).encode())
+    elif isinstance(obj, float):
+        # through float64 bytes: hashes -0.0 != 0.0 and nan == nan,
+        # which is exactly the bit-identity contract
+        h.update(b"f")
+        h.update(np.float64(obj).tobytes())
+    elif isinstance(obj, dict):
+        h.update(b"d")
+        for key in sorted(obj, key=repr):
+            _update(h, key)
+            _update(h, obj[key])
+    elif isinstance(obj, (list, tuple)):
+        h.update(b"l")
+        h.update(str(len(obj)).encode())
+        for item in obj:
+            _update(h, item)
+    elif dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        h.update(b"c")
+        h.update(type(obj).__name__.encode())
+        for f in dataclasses.fields(obj):
+            _update(h, f.name)
+            _update(h, getattr(obj, f.name))
+    else:
+        arr = np.asarray(obj)  # covers np/jax arrays and array scalars
+        h.update(b"a")
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+
+
+def artifact_hash(obj: Any) -> str:
+    """sha256 over the canonicalized artifact tree."""
+    h = hashlib.sha256()
+    _update(h, obj)
+    return h.hexdigest()
+
+
+def assert_deterministic(
+    factory: Callable[[], T], runs: int = 2, label: str = ""
+) -> T:
+    """Call ``factory`` ``runs`` times; raise :class:`DeterminismError`
+    unless every result hashes identically. Returns the first result so
+    parity tests can keep asserting on it."""
+    first = factory()
+    want = artifact_hash(first)
+    for i in range(1, runs):
+        got = artifact_hash(factory())
+        if got != want:
+            raise DeterminismError(
+                f"{label or 'factory'}: run {i} hashed {got[:16]}… but "
+                f"run 0 hashed {want[:16]}… — a nondeterminism source "
+                "leaked into this path"
+            )
+    return first
+
+
+class determinism_guard:
+    """Context manager collecting several :func:`assert_deterministic`
+    checks into one failure report at ``__exit__``."""
+
+    def __init__(self, runs: int = 2):
+        self.runs = runs
+        self.failures: List[Tuple[str, str]] = []
+
+    def __enter__(self) -> "determinism_guard":
+        return self
+
+    def check(
+        self, label: str, factory: Callable[[], T], runs: Optional[int] = None
+    ) -> Optional[T]:
+        try:
+            return assert_deterministic(
+                factory, runs=self.runs if runs is None else runs, label=label
+            )
+        except DeterminismError as e:
+            self.failures.append((label, str(e)))
+            return None
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None and self.failures:
+            report = "; ".join(msg for _, msg in self.failures)
+            raise DeterminismError(
+                f"{len(self.failures)} determinism check(s) failed: {report}"
+            )

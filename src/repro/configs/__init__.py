@@ -6,29 +6,27 @@
 from __future__ import annotations
 
 from repro.configs.base import (
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
     FLConfig,
     ModelConfig,
     MoEConfig,
     ShapeConfig,
-    SHAPES,
-    TRAIN_4K,
-    PREFILL_32K,
-    DECODE_32K,
-    LONG_500K,
 )
-
-from repro.configs.qwen3_moe_235b_a22b import CONFIG as _qwen3_moe
 from repro.configs.granite_8b import CONFIG as _granite_8b
-from repro.configs.xlstm_1_3b import CONFIG as _xlstm
-from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
 from repro.configs.granite_moe_1b_a400m import CONFIG as _granite_moe
 from repro.configs.llava_next_mistral_7b import CONFIG as _llava
 from repro.configs.minitron_8b import CONFIG as _minitron
+from repro.configs.paper_mlp import CONFIG as _paper_mlp, CONFIG_SMOKE as _mlp_smoke
+from repro.configs.qwen3_moe_235b_a22b import CONFIG as _qwen3_moe
 from repro.configs.recurrentgemma_2b import CONFIG as _rgemma
-from repro.configs.stablelm_3b import CONFIG as _stablelm3b
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
 from repro.configs.stablelm_1_6b import CONFIG as _stablelm16b
-from repro.configs.paper_mlp import CONFIG as _paper_mlp
-from repro.configs.paper_mlp import CONFIG_SMOKE as _mlp_smoke
+from repro.configs.stablelm_3b import CONFIG as _stablelm3b
+from repro.configs.xlstm_1_3b import CONFIG as _xlstm
 
 _REGISTRY = {
     c.name: c

@@ -10,8 +10,8 @@ variant used by the CPU smoke tests (2 layers, d_model <= 512,
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)

@@ -9,8 +9,22 @@
   strategy registry (``create_strategy``; ``make_strategy`` is the
   deprecated shim).
 """
-from repro.core.hierarchy import Hierarchy, ClientPool
 from repro.core.cost_model import CostModel, TwoTierCostModel
+from repro.core.hierarchy import ClientPool, Hierarchy
+from repro.core.placement import (
+    AdaptivePSOPlacement,
+    CEMPlacement,
+    ExhaustivePlacement,
+    GAPlacement,
+    GreedySpeedPlacement,
+    PlacementStrategy,
+    PSOPlacement,
+    RandomPlacement,
+    SimulatedAnnealingPlacement,
+    StaticPlacement,
+    UniformRoundRobinPlacement,
+    make_strategy,
+)
 from repro.core.pso import FlagSwapPSO, SwarmHistory
 from repro.core.registry import (
     StrategyInfo,
@@ -20,20 +34,6 @@ from repro.core.registry import (
     register_strategy,
     resolve_strategy,
     strategy_names,
-)
-from repro.core.placement import (
-    PlacementStrategy,
-    RandomPlacement,
-    UniformRoundRobinPlacement,
-    PSOPlacement,
-    AdaptivePSOPlacement,
-    GAPlacement,
-    SimulatedAnnealingPlacement,
-    CEMPlacement,
-    GreedySpeedPlacement,
-    ExhaustivePlacement,
-    StaticPlacement,
-    make_strategy,
 )
 
 __all__ = [

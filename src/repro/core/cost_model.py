@@ -33,13 +33,11 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.hierarchy import ClientPool, Hierarchy, \
-    rows_with_duplicates
+from repro.core.hierarchy import ClientPool, Hierarchy, rows_with_duplicates
 
 
 @dataclass(frozen=True)
@@ -138,8 +136,8 @@ class CostModel:
         # level boundaries are static: per-level max is a sliced reduce
         # (scatter/segment ops are 50x slower than dense math on CPU XLA,
         # so the whole evaluator is dense: one-hot einsums, no scatter)
-        level_bounds = [(h.level_starts[l], h.level_starts[l + 1])
-                        for l in range(depth)]
+        level_bounds = [(h.level_starts[lv], h.level_starts[lv + 1])
+                        for lv in range(depth)]
 
         if xp is None:
             xp = jnp
@@ -305,7 +303,7 @@ class CostModel:
                          for a, b in level_bounds]
             return xp.sum(xp.stack(level_max[::-1], axis=1), axis=1)
 
-        return jax.jit(batch) if xp is jnp else batch
+        return jax.jit(batch, static_argnames=()) if xp is jnp else batch
 
     @property
     def topology_version(self) -> int:

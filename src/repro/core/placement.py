@@ -27,8 +27,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, \
-    fill_placement_holes
+from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, fill_placement_holes
 from repro.core.pso import FlagSwapPSO
 from repro.core.registry import create_strategy, register_strategy
 

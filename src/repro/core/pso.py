@@ -36,12 +36,11 @@ check in deployment mode stops re-deduplicating the whole swarm.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Union
+from typing import Callable, List, Optional, Union
 
 import numpy as np
 
-from repro.core.hierarchy import fill_placement_holes, \
-    rows_with_duplicates
+from repro.core.hierarchy import fill_placement_holes, rows_with_duplicates
 
 
 @dataclass

@@ -1,8 +1,8 @@
 from repro.data.synthetic import (
-    SyntheticLMDataset,
-    SyntheticClassificationDataset,
-    dirichlet_partition,
     FederatedDataset,
+    SyntheticClassificationDataset,
+    SyntheticLMDataset,
+    dirichlet_partition,
 )
 
 __all__ = [

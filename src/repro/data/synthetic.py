@@ -16,6 +16,23 @@ from typing import Iterator, Optional
 
 import numpy as np
 
+# named rng streams: every per-purpose stream in this module is an
+# explicit (seed, STREAM, ...) tuple, never a bare literal
+_EVAL_STREAM = 0xE7A1  # held-out eval shard
+
+
+def _doc_seed(*parts) -> int:
+    """Deterministic 31-bit seed from mixed int/str stream parts.
+
+    ``hash()`` over a str is salted per process (PYTHONHASHSEED), so it
+    can never feed a seed; SeedSequence mixing is process-independent.
+    """
+    ints = [
+        int.from_bytes(p.encode(), "little") if isinstance(p, str) else int(p)
+        for p in parts
+    ]
+    return int(np.random.SeedSequence(ints).generate_state(1)[0] >> 1)
+
 
 class SyntheticLMDataset:
     """An infinite, seeded LM token stream with mild structure.
@@ -252,12 +269,12 @@ class FederatedLMDataset:
     def client_batch(self, client_id: int, batch_size: int, step: int) -> dict:
         stream = self._stream(client_id)
         ds = SyntheticLMDataset(self.vocab_size, self.seq_len,
-                                seed=hash((self.seed, stream)) % (2**31))
+                                seed=_doc_seed(self.seed, stream))
         rng = np.random.default_rng((self.seed, stream, step))
         return self._with_frontend(ds.batch(batch_size, step), rng)
 
     def resize(self, remap: Optional[np.ndarray], new_total: int,
-               rng: np.random.Generator = None) -> None:
+               rng: Optional[np.random.Generator] = None) -> None:
         """Reconcile client->stream ids with a pool resize (see class
         docstring); ``rng`` is accepted for interface symmetry with
         :meth:`FederatedDataset.resize` but never consumed — stream
@@ -270,8 +287,8 @@ class FederatedLMDataset:
 
     def eval_batch(self, n: int = 256) -> dict:
         ds = SyntheticLMDataset(self.vocab_size, self.seq_len,
-                                seed=hash((self.seed, "eval")) % (2**31))
-        rng = np.random.default_rng((self.seed, 999))
+                                seed=_doc_seed(self.seed, "eval"))
+        rng = np.random.default_rng((self.seed, _EVAL_STREAM))
         return self._with_frontend(ds.batch(n, 0), rng)
 
     def client_weights(self) -> np.ndarray:

@@ -16,6 +16,7 @@ Three concepts:
   CLI: ``python -m repro.experiments run paper-fig4 --strategies
   pso,random --rounds 25 --seeds 0,17``.
 """
+from repro.core.hierarchy import TopologyUpdate
 from repro.experiments.environments import (
     EmulatedEnvironment,
     Environment,
@@ -31,8 +32,7 @@ from repro.experiments.results import (
     aggregate_runs,
     validate_result_dict,
 )
-from repro.experiments.runner import run_batched, run_experiment, \
-    run_single
+from repro.experiments.runner import run_batched, run_experiment, run_single
 from repro.experiments.scenarios import (
     ClientChurn,
     ClientJoin,
@@ -47,7 +47,6 @@ from repro.experiments.scenarios import (
     list_scenarios,
     register_scenario,
 )
-from repro.core.hierarchy import TopologyUpdate
 
 __all__ = [
     "Environment", "SimulatedEnvironment", "EmulatedEnvironment",

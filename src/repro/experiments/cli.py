@@ -65,7 +65,7 @@ def cmd_run(args) -> int:
         try:
             spec = spec.with_overrides(**overrides)
         except TypeError as e:
-            raise SystemExit(str(e))
+            raise SystemExit(str(e)) from e
     seeds = [int(s) for s in args.seeds.split(",") if s != ""]
     strategies = [s for s in args.strategies.split(",") if s]
     rounds = args.rounds if args.rounds is not None else spec.rounds

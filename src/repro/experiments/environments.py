@@ -27,8 +27,7 @@ from typing import Dict, Optional, Protocol, runtime_checkable
 import numpy as np
 
 from repro.core.cost_model import CostModel, TwoTierCostModel
-from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, \
-    slot_remap
+from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, slot_remap
 from repro.fl.distributed import elastic_rehierarchize
 
 

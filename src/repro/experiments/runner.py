@@ -47,11 +47,9 @@ import numpy as np
 
 from repro.core.cost_model import PooledTPDEvaluator
 from repro.core.hierarchy import rows_with_duplicates
-from repro.core.registry import build_config, create_strategy, \
-    resolve_strategy
+from repro.core.registry import build_config, create_strategy, resolve_strategy
 from repro.experiments.results import ExperimentResult, StrategyRun
-from repro.experiments.scenarios import ScenarioSpec, ScheduledEvent, \
-    get_scenario
+from repro.experiments.scenarios import ScenarioSpec, ScheduledEvent, get_scenario
 
 StrategyLike = Union[str, Tuple[str, dict], Tuple[str, object]]
 
@@ -297,7 +295,7 @@ def run_batched(spec: ScenarioSpec,
                 print(f"    [{runs[i].strategy} s{runs[i].seed}] "
                       f"r{r:3d} tpd={true_tpd:8.4f}")
 
-    for run, strategy in zip(runs, strats):
+    for run, strategy in zip(runs, strats, strict=True):
         _finalize_run(run, strategy)
     return runs
 

@@ -6,11 +6,7 @@ from repro.fl.aggregation import (
     hierarchical_psum,
 )
 from repro.fl.distributed import FLTrainStep, choose_fl_hierarchy
-from repro.fl.orchestrator import (
-    FederatedOrchestrator,
-    FederatedRunResult,
-    RoundRecord,
-)
+from repro.fl.orchestrator import FederatedOrchestrator, FederatedRunResult, RoundRecord
 
 __all__ = [
     "AggregationPlan", "fedavg", "flat_psum", "hierarchical_fedavg",

@@ -19,13 +19,12 @@ top level aligned with the physical DCN boundary.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence
-
-import numpy as np
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.hierarchy import Hierarchy, RoundPlan
 from repro.utils.trees import tree_weighted_sum
@@ -54,7 +53,7 @@ def hierarchical_fedavg(updates: Sequence, weights: Sequence[float],
     placement = np.asarray(placement, np.int64)
     h.validate_placement(placement)
     weighted = [jax.tree.map(lambda x: x * w, u)
-                for u, w in zip(updates, weights)]
+                for u, w in zip(updates, weights, strict=True)]
     trainers = h.trainer_assignment(placement)
     # value held at each slot, built bottom-up
     slot_value = [None] * h.dimensions
@@ -99,7 +98,8 @@ class SegmentAggregator:
     def __init__(self, hierarchy: Hierarchy):
         self._fn_cache: dict = {}      # n_clusters -> jit'd level fn
         self._fused_fns: dict = {}     # tuple(n_clusters) -> fused fn
-        self._weight_fn = jax.jit(self._apply_weights)
+        self._weight_fn = jax.jit(self._apply_weights,
+                                  static_argnames=())
         self._n_clusters: Optional[list] = None
         self.retarget(hierarchy)
 
@@ -144,7 +144,8 @@ class SegmentAggregator:
     @classmethod
     def _make_level_fn(cls, n_clusters: int):
         return jax.jit(functools.partial(cls._reduce_level,
-                                         n_clusters=n_clusters))
+                                         n_clusters=n_clusters),
+                       static_argnames=())
 
     def weighted(self, stacked_updates, weights):
         """stacked (C, ...) pytree * per-client weights -> weighted stack."""
@@ -155,12 +156,12 @@ class SegmentAggregator:
         def fused(stacked, w, srcs, segs):
             vals = None
             weighted = self._apply_weights(stacked, w)
-            for i, (src, seg) in enumerate(zip(srcs, segs)):
+            for i, (src, seg) in enumerate(zip(srcs, segs, strict=True)):
                 vals = self._reduce_level(weighted, vals, src, seg,
                                           n_clusters[i])
             return jax.tree.map(lambda x: x[0], vals)
 
-        return jax.jit(fused)
+        return jax.jit(fused, static_argnames=())
 
     def aggregate_fused(self, stacked_updates, weights, plan: RoundPlan):
         """Weighting + every level + root extraction in ONE jit call —

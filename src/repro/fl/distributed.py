@@ -24,17 +24,15 @@ from __future__ import annotations
 
 from typing import Optional, Sequence
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core.hierarchy import Hierarchy
 from repro.fl.aggregation import AggregationPlan, flat_psum, hierarchical_psum
 from repro.kernels import compat
 from repro.models.api import Model
-from repro.models.sharding import ShardingPolicy
 
 
 class FLTrainStep:
@@ -184,6 +182,7 @@ class FLTrainStep:
         return round_fn
 
     # ------------------------------------------------------------------
+    # repro-lint: disable=RPL001 (shape helper, no vectorized compute to pin)
     def batch_shape(self, shape_cfg) -> dict:
         """Per-client batch split of a global shape."""
         per = shape_cfg.global_batch // self.n_clients_total

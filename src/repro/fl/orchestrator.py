@@ -35,13 +35,11 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, \
-    slot_remap
+from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, slot_remap
 from repro.core.placement import PlacementStrategy
 from repro.data.synthetic import FederatedDataset
 from repro.fl.aggregation import SegmentAggregator
@@ -136,13 +134,15 @@ class FederatedOrchestrator:
         self.params = model.init(jax.random.key(seed))
         self.local_lr = local_lr
         self._grad_step = jax.jit(jax.value_and_grad(
-            lambda p, b: model.loss_fn(p, b)[0]))
-        self._eval = jax.jit(lambda p, b: model.loss_fn(p, b))
+            lambda p, b: model.loss_fn(p, b)[0]), static_argnames=())
+        self._eval = jax.jit(lambda p, b: model.loss_fn(p, b),
+                             static_argnames=())
         self.weights = data.client_weights()
 
         # weighted-sum of a cluster's updates, jit'd once (loop engine)
         self._wsum = jax.jit(
-            lambda trees, w: tree_weighted_sum(trees, w))
+            lambda trees, w: tree_weighted_sum(trees, w),
+            static_argnames=())
 
         # batched engine state (built lazily in _warmup)
         self._agg: Optional[SegmentAggregator] = None
@@ -188,10 +188,10 @@ class FederatedOrchestrator:
         for s in range(self.local_steps):
             batch = self.data.client_batch(client_id, self.batch_size,
                                            round_idx * self.local_steps + s)
-            l, grads = self._grad_step(params, batch)
+            lval, grads = self._grad_step(params, batch)
             params = jax.tree.map(
                 lambda p, g: p - self.local_lr * g, params, grads)
-            loss = float(l)
+            loss = float(lval)
         jax.block_until_ready(jax.tree.leaves(params)[0])
         if self.timing == "deterministic":
             dt = float(self.local_steps)  # unit work per local step
@@ -208,7 +208,7 @@ class FederatedOrchestrator:
         """
         h = self.hierarchy
         weighted = [jax.tree.map(lambda x, w=w: x * w, u)
-                    for u, w in zip(updates, self.weights)]
+                    for u, w in zip(updates, self.weights, strict=True)]
         trainers = h.trainer_assignment(placement)
         slot_value = [None] * h.dimensions
         total = 0.0
@@ -268,7 +268,7 @@ class FederatedOrchestrator:
                                for k, v in steps[0].items()))
             buckets.setdefault(sig, []).append((c, steps))
         out = []
-        for sig, entries in buckets.items():
+        for _sig, entries in buckets.items():
             ids = np.asarray([c for c, _ in entries], np.int64)
             keys = entries[0][1][0].keys()
             stacked = {k: np.stack([np.stack([np.asarray(st[k])
@@ -288,17 +288,17 @@ class FederatedOrchestrator:
         def local_all(params, batches):
             def per_client(client_batches):
                 def step(p, b):
-                    l, g = jax.value_and_grad(
+                    lval, g = jax.value_and_grad(
                         lambda q: loss_fn(q, b)[0])(p)
                     return jax.tree.map(
-                        lambda x, gg: x - lr * gg, p, g), l
+                        lambda x, gg: x - lr * gg, p, g), lval
 
                 final, losses = jax.lax.scan(step, params, client_batches)
                 return final, losses[-1]
 
             return jax.vmap(per_client)(batches)
 
-        fn = jax.jit(local_all)
+        fn = jax.jit(local_all, static_argnames=())
         self._local_fns[sig] = fn
         return fn
 
@@ -417,8 +417,8 @@ class FederatedOrchestrator:
             self._evaluate()
             return
         batch = self.data.client_batch(0, self.batch_size, 0)
-        l, g = self._grad_step(self.params, batch)
-        jax.block_until_ready(l)
+        lval, g = self._grad_step(self.params, batch)
+        jax.block_until_ready(lval)
         h = self.hierarchy
         n_pool = h.total_clients - h.dimensions
         base, extra = divmod(n_pool, h.n_leaves)

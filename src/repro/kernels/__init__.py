@@ -4,8 +4,7 @@ Each kernel ships three pieces: ``<name>.py`` (pl.pallas_call + explicit
 BlockSpec VMEM tiling), an entry in ``ops.py`` (jit'd dispatch wrapper),
 and an oracle in ``ref.py`` (pure jnp; the CPU/dry-run default path).
 """
-from repro.kernels.ops import (fedavg, fedavg_tree, flash_attention,
-                               fused_adamw, rglru_scan)
+from repro.kernels.ops import fedavg, fedavg_tree, flash_attention, fused_adamw, rglru_scan
 from repro.kernels.tpd import batch_tpd_pallas, tpd_kernel_inputs
 
 __all__ = ["fedavg", "fedavg_tree", "flash_attention", "fused_adamw",

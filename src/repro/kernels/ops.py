@@ -20,11 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.fedavg import fedavg_pallas, DEFAULT_BLOCK_N
-from repro.kernels.flash_attention import (
-    flash_attention_pallas, DEFAULT_BLOCK_Q, DEFAULT_BLOCK_KV)
-from repro.kernels.rglru import (
-    rglru_scan_pallas, DEFAULT_BLOCK_T, DEFAULT_BLOCK_D)
+from repro.kernels.fedavg import DEFAULT_BLOCK_N, fedavg_pallas
+from repro.kernels.flash_attention import DEFAULT_BLOCK_KV, DEFAULT_BLOCK_Q, flash_attention_pallas
+from repro.kernels.rglru import DEFAULT_BLOCK_D, DEFAULT_BLOCK_T, rglru_scan_pallas
 
 
 def _on_tpu() -> bool:
@@ -57,14 +55,14 @@ def fedavg_tree(trees, weights, *, use_pallas: Optional[bool] = None,
     """
     leaves_list = [jax.tree.leaves(t) for t in trees]
     treedef = jax.tree.structure(trees[0])
-    shapes = [l.shape for l in leaves_list[0]]
-    sizes = [l.size for l in leaves_list[0]]
+    shapes = [x.shape for x in leaves_list[0]]
+    sizes = [x.size for x in leaves_list[0]]
     stacked = jnp.stack(
-        [jnp.concatenate([l.reshape(-1) for l in ls]) for ls in leaves_list])
+        [jnp.concatenate([x.reshape(-1) for x in ls]) for ls in leaves_list])
     w = jnp.asarray(weights, stacked.dtype)
     flat = fedavg(stacked, w, use_pallas=use_pallas, interpret=interpret)
     out, off = [], 0
-    for shape, size in zip(shapes, sizes):
+    for shape, size in zip(shapes, sizes, strict=True):
         out.append(flat[off: off + size].reshape(shape))
         off += size
     return jax.tree.unflatten(treedef, out)

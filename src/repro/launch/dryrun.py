@@ -1,13 +1,10 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: prove every (architecture x input shape x mesh)
 combination lowers, compiles, and fits — without any TPU.
 
 For each combination this driver:
   1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod)
-     out of 512 placeholder host devices (XLA_FLAGS above — set before
-     ANY jax import, which is why those are the first two lines);
+     out of 512 placeholder host devices (XLA_FLAGS below — set before
+     ANY jax import);
   2. builds the step bundle (the FL round / prefill / decode step with
      its ShapeDtypeStruct inputs and shardings — launch/specs.py);
   3. ``jax.jit(fn, in_shardings, out_shardings).lower(*args).compile()``;
@@ -20,18 +17,27 @@ Usage:
         --shape train_4k [--multi-pod]
     PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
 """
-import argparse
-import json
-import time
-import traceback
-from pathlib import Path
+import os
 
-import jax
+# 512 placeholder host devices — MUST be set before ANY jax import,
+# which is why every import below carries a noqa: E402
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-from repro.configs import ASSIGNED, SHAPES
-from repro.launch.mesh import make_production_mesh, mesh_chip_count
-from repro.launch.specs import build_bundle
-from repro.utils.hlo import count_hlo_ops, profile_hlo
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ASSIGNED, SHAPES  # noqa: E402
+from repro.launch.mesh import (  # noqa: E402
+    make_production_mesh,
+    mesh_chip_count,
+)
+from repro.launch.specs import build_bundle  # noqa: E402
+from repro.utils.hlo import count_hlo_ops, profile_hlo  # noqa: E402
 
 DEFAULT_OUT = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
 
@@ -76,24 +82,24 @@ def dryrun_one(arch: str, shape: str, multi_pod: bool = False,
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
         mesh_name = "2x16x16" if multi_pod else "16x16"
-    t0 = time.time()
+    t0 = time.perf_counter()
     bundle = build_bundle(arch, shape, mesh, placement=placement,
                           force_mode=force_mode, seq_shard=seq_shard)
-    t_build = time.time() - t0
+    t_build = time.perf_counter() - t0
 
     jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
                      out_shardings=bundle.out_shardings)
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered = jitted.lower(*bundle.args)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     hlo = compiled.as_text()
-    t0 = time.time()
+    t0 = time.perf_counter()
     prof = profile_hlo(hlo)
-    t_profile = time.time() - t0
+    t_profile = time.perf_counter() - t0
     record = {
         "arch": arch, "shape": shape, "mesh": mesh_name,
         "chips": mesh_chip_count(mesh),

@@ -13,10 +13,9 @@ from __future__ import annotations
 import argparse
 import time
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import get_model

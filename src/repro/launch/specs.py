@@ -22,18 +22,16 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, get_shape
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.hierarchy import Hierarchy
 from repro.fl.distributed import FLTrainStep, choose_fl_hierarchy
 from repro.models import get_model, make_train_step
-from repro.models.api import Model, _path_str
+from repro.models.api import _path_str
 from repro.models.sharding import ShardingPolicy, make_policy
 from repro.optim import sgd
 
@@ -72,14 +70,16 @@ def _ns(mesh: Mesh, tree):
 
 def _replicated_like(mesh: Mesh, tree_struct):
     return jax.tree.map(
-        lambda l: NamedSharding(mesh, P(*([None] * l.ndim))), tree_struct)
+        lambda leaf: NamedSharding(mesh, P(*([None] * leaf.ndim))),
+        tree_struct)
 
 
 def param_bytes(cfg: ModelConfig) -> int:
     """Total f32-equivalent parameter bytes (eval_shape; no allocation)."""
     model = get_model(cfg)
+    # repro-lint: disable=RPL002 (shape-only trace; key value never consumed)
     shapes = jax.eval_shape(model.init, jax.random.key(0))
-    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(shapes))
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(shapes))
 
 
 def fl_replica_feasible(cfg: ModelConfig, mesh: Mesh) -> bool:
@@ -162,6 +162,7 @@ def _fl_train_bundle(arch: str, cfg: ModelConfig, shape: ShapeConfig,
                     else fl.client_axes[0])
 
     params_struct, opt_struct = jax.eval_shape(
+        # repro-lint: disable=RPL002 (shape-only trace; key never consumed)
         fl.init_stacked, jax.random.key(0))
     param_specs = _ns(mesh, fl.stacked_param_pspecs())
     opt_specs = _replicated_like(mesh, opt_struct)

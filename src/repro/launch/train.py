@@ -14,16 +14,13 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 from pathlib import Path
 
-import numpy as np
-
 from repro.configs import get_config
-from repro.core.hierarchy import ClientPool
 from repro.core.cost_model import CostModel
-import dataclasses
-
+from repro.core.hierarchy import ClientPool
 from repro.core.registry import create_strategy, list_strategies
 from repro.data.synthetic import make_federated_dataset
 from repro.fl.distributed import choose_fl_hierarchy

@@ -4,13 +4,13 @@ from __future__ import annotations
 from typing import Optional
 
 from repro.configs.base import ModelConfig
-from repro.models.api import Model, make_train_step, make_grad_step, make_serve_step
-from repro.models.sharding import ShardingPolicy, UNSHARDED, make_policy
-from repro.models.transformer import build_decoder_model
-from repro.models.xlstm import build_xlstm_model
-from repro.models.rglru import build_rglru_model
+from repro.models.api import Model, make_grad_step, make_serve_step, make_train_step
 from repro.models.encdec import build_encdec_model
 from repro.models.mlp import build_mlp_model
+from repro.models.rglru import build_rglru_model
+from repro.models.sharding import UNSHARDED, ShardingPolicy, make_policy
+from repro.models.transformer import build_decoder_model
+from repro.models.xlstm import build_xlstm_model
 
 _BUILDERS = {
     "dense": build_decoder_model,

@@ -7,14 +7,14 @@ that returns a ``Model``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.sharding import ShardingPolicy, UNSHARDED
+from repro.models.sharding import ShardingPolicy
 
 
 @dataclass
@@ -38,6 +38,7 @@ class Model:
 
     # ------------------------------------------------------------------
     def param_shapes(self, rng=None):
+        # repro-lint: disable=RPL002 (shape-only default for eval_shape)
         rng = rng if rng is not None else jax.random.key(0)
         return jax.eval_shape(self.init, rng)
 

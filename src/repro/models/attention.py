@@ -23,7 +23,6 @@ Shapes: q (B, S, Hq, hd); k, v (B, T, Hkv, hd). All softmax math in f32.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax
@@ -35,7 +34,7 @@ NEG_INF = -1e30
 class _Partial(NamedTuple):
     out: jnp.ndarray   # (B, S, Hq, hd) f32, un-normalized (sum of p*v)
     m: jnp.ndarray     # (B, S, Hq) running max
-    l: jnp.ndarray     # (B, S, Hq) running denom
+    denom: jnp.ndarray  # (B, S, Hq) running softmax denominator
 
 
 def _merge(a: _Partial, b: _Partial) -> _Partial:
@@ -43,11 +42,11 @@ def _merge(a: _Partial, b: _Partial) -> _Partial:
     ea = jnp.exp(a.m - m)
     eb = jnp.exp(b.m - m)
     out = a.out * ea[..., None] + b.out * eb[..., None]
-    return _Partial(out=out, m=m, l=a.l * ea + b.l * eb)
+    return _Partial(out=out, m=m, denom=a.denom * ea + b.denom * eb)
 
 
 def _finalize(p: _Partial, dtype) -> jnp.ndarray:
-    return (p.out / jnp.maximum(p.l, 1e-30)[..., None]).astype(dtype)
+    return (p.out / jnp.maximum(p.denom, 1e-30)[..., None]).astype(dtype)
 
 
 def _group_q(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
@@ -73,11 +72,11 @@ def _attend_dense_core(q, k, v, mask: Optional[jnp.ndarray], scale: float
     p = jnp.exp(scores - m_safe[..., None])
     if mask is not None:
         p = jnp.where(mask[None, :, None, None, :], p, 0.0)
-    l = jnp.sum(p, axis=-1)
+    denom = jnp.sum(p, axis=-1)
     out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
     return _Partial(out=out.reshape(b, sq, hkv * g, hd),
                     m=m.reshape(b, sq, hkv * g),
-                    l=l.reshape(b, sq, hkv * g))
+                    denom=denom.reshape(b, sq, hkv * g))
 
 
 # largest (Sq) a single dense tile may materialize; larger rectangles are
@@ -110,7 +109,7 @@ def _attend_dense(q, k, v, mask: Optional[jnp.ndarray], scale: float
         return x.reshape((b, sq) + x.shape[3:])
 
     return _Partial(out=unchunk(part.out), m=unchunk(part.m),
-                    l=unchunk(part.l))
+                    denom=unchunk(part.denom))
 
 
 def _causal_partial(q, k, v, scale: float, leaf: int) -> _Partial:
@@ -129,7 +128,7 @@ def _causal_partial(q, k, v, scale: float, leaf: int) -> _Partial:
     hi = _merge(hi_diag, hi_rect)
     return _Partial(out=jnp.concatenate([lo.out, hi.out], axis=1),
                     m=jnp.concatenate([lo.m, hi.m], axis=1),
-                    l=jnp.concatenate([lo.l, hi.l], axis=1))
+                    denom=jnp.concatenate([lo.denom, hi.denom], axis=1))
 
 
 def causal_attention(q, k, v, *, scale: Optional[float] = None,
@@ -183,9 +182,9 @@ def windowed_attention(q, k, v, *, window: int, scale: Optional[float] = None,
         m = jnp.max(scores, axis=-1)
         p = jnp.exp(scores - jnp.maximum(m, NEG_INF / 2)[..., None])
         p = jnp.where(scores_mask[None, :, None, None, :], p, 0.0)
-        l = jnp.sum(p, axis=-1)
+        denom = jnp.sum(p, axis=-1)
         out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v_blk.astype(jnp.float32))
-        out = out / jnp.maximum(l, 1e-30)[..., None]
+        out = out / jnp.maximum(denom, 1e-30)[..., None]
         return out.reshape(b_, sq, hkv * g, hd).astype(q.dtype)
 
     # lax.map keeps the HLO one-block-sized regardless of S (the 500k

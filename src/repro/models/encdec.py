@@ -19,10 +19,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models import attention as attn_lib
-from repro.models import common
+from repro.models import attention as attn_lib, common
 from repro.models.api import Model
-from repro.models.sharding import ShardingPolicy, UNSHARDED, shard_hint
+from repro.models.sharding import UNSHARDED, ShardingPolicy, shard_hint
 
 
 # --------------------------------------------------------------------------
@@ -284,8 +283,10 @@ def build_encdec_model(cfg: ModelConfig, policy: ShardingPolicy = UNSHARDED,
             "k": jnp.zeros((batch_size, cfg.frontend_len, cfg.n_kv_heads, hd), dt),
             "v": jnp.zeros((batch_size, cfg.frontend_len, cfg.n_kv_heads, hd), dt),
         }
-        stack = lambda tree: jax.tree.map(
-            lambda z: jnp.zeros((cfg.n_layers,) + z.shape, z.dtype), tree)
+        def stack(tree):
+            return jax.tree.map(
+                lambda z: jnp.zeros((cfg.n_layers,) + z.shape, z.dtype),
+                tree)
         return {"self": stack(self_one), "cross": stack(cross_one),
                 "pos": jnp.asarray(cache_len - 1, jnp.int32)}
 

@@ -14,7 +14,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models import common
 from repro.models.api import Model
-from repro.models.sharding import ShardingPolicy, UNSHARDED
+from repro.models.sharding import UNSHARDED, ShardingPolicy
 
 
 def init_mlp_params(rng, cfg: ModelConfig) -> dict:
@@ -22,7 +22,8 @@ def init_mlp_params(rng, cfg: ModelConfig) -> dict:
     keys = jax.random.split(rng, len(dims) - 1)
     dtype = jnp.dtype(cfg.param_dtype)
     layers = []
-    for k, (din, dout) in zip(keys, zip(dims[:-1], dims[1:])):
+    for k, (din, dout) in zip(keys, zip(dims[:-1], dims[1:], strict=True),
+                              strict=True):
         layers.append({
             "w": common.dense_init(k, (din, dout), dtype),
             "b": jnp.zeros((dout,), dtype),

@@ -27,7 +27,6 @@ shard_map wrapper (E_local == E, no psum).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -79,7 +78,6 @@ def _expert_compute(x2d: jnp.ndarray, gates: jnp.ndarray,
     scatter-add weighted outputs back.
     """
     t, d = x2d.shape
-    e_local = w_gate.shape[0]
     cap = min(capacity, t)
     # (E_local, C) token indices per expert, by gate magnitude
     gw, gi = jax.lax.top_k(gates.T, cap)                        # (E_local, C)
@@ -157,7 +155,6 @@ def moe_ffn(params: dict, x: jnp.ndarray, cfg: MoEConfig,
                               params["w_down"], capacity)
         return out.reshape(b, s, d).astype(x.dtype), aux
 
-    n_shards = policy.model_size
     batch_axes = policy.batch_axes or ()
     div = max(policy.batch_size_divisor, 1)
     if x2d.shape[0] % div != 0:

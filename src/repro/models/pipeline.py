@@ -24,19 +24,17 @@ checks loss AND grads on a forged 2-pod mesh).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.kernels import compat
 from repro.models import common
 from repro.models.sharding import ShardingPolicy
-from repro.models.transformer import (init_decoder_params, logits_fn,
-                                      make_block_fn, embed_inputs)
+from repro.models.transformer import embed_inputs, logits_fn, make_block_fn
 
 
 def pipeline_spec_rule(base_rule):
@@ -130,9 +128,9 @@ def make_pp_loss_fn(cfg: ModelConfig, policy: ShardingPolicy, mesh: Mesh,
     # manual over pod; data/model stay under GSPMD inside
     def loss_fn(params, batch):
         param_specs = jax.tree_util.tree_map_with_path(
-            lambda path, l: P(*(("pod",) + (None,) * (l.ndim - 1)))
+            lambda path, leaf: P(*(("pod",) + (None,) * (leaf.ndim - 1)))
             if _path_str(path).startswith("layers/")
-            else P(*((None,) * l.ndim)),
+            else P(*((None,) * leaf.ndim)),
             params)
         return compat.shard_map(
             pp_body, mesh=mesh,

@@ -26,10 +26,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models import attention as attn_lib
-from repro.models import common
+from repro.models import attention as attn_lib, common
 from repro.models.api import Model
-from repro.models.sharding import ShardingPolicy, UNSHARDED, shard_hint
+from repro.models.sharding import UNSHARDED, ShardingPolicy, shard_hint
 
 RGLRU_C = 8.0
 CONV_WIDTH = 4
@@ -324,7 +323,8 @@ def build_rglru_model(cfg: ModelConfig, policy: ShardingPolicy = UNSHARDED,
         # wasteful; for the serving path we run the recurrences statefully.
         tokens = batch["tokens"]
         b, s = tokens.shape
-        x = (common.embed(params["embed"], tokens) * math.sqrt(cfg.d_model)).astype(jnp.dtype(cfg.dtype))
+        x = (common.embed(params["embed"], tokens)
+             * math.sqrt(cfg.d_model)).astype(jnp.dtype(cfg.dtype))
         cache_len = min(cfg.local_attn_window, s)
 
         def triple_body(x, triple):

@@ -121,7 +121,7 @@ def shard_hint(x, policy: ShardingPolicy, *logical_dims, force: bool = False):
         raise ValueError(
             f"shard_hint rank mismatch: {len(logical_dims)} dims for shape {x.shape}")
     resolved = []
-    for d, size in zip(logical_dims, x.shape):
+    for d, size in zip(logical_dims, x.shape, strict=True):
         if isinstance(d, tuple):
             resolved.append(policy.dim(d[0], d[1]))
         else:

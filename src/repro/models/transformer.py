@@ -11,8 +11,6 @@ per-layer FSDP gathers appear once inside the loop (ZeRO-3 schedule).
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -20,11 +18,10 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models import attention as attn_lib
-from repro.models import common
+from repro.models import attention as attn_lib, common
 from repro.models.api import Model
 from repro.models.moe import init_moe, moe_ffn, moe_spec
-from repro.models.sharding import ShardingPolicy, UNSHARDED, shard_hint
+from repro.models.sharding import UNSHARDED, ShardingPolicy, shard_hint
 
 
 # --------------------------------------------------------------------------
@@ -32,8 +29,8 @@ from repro.models.sharding import ShardingPolicy, UNSHARDED, shard_hint
 # --------------------------------------------------------------------------
 
 def _init_attn(key, cfg: ModelConfig, dtype) -> dict:
-    hd = cfg.resolved_head_dim
     kq, kk, kv, ko = jax.random.split(key, 4)
+    hd = cfg.resolved_head_dim
     return {
         "wq": common.dense_init(kq, (cfg.d_model, cfg.n_heads * hd), dtype),
         "wk": common.dense_init(kk, (cfg.d_model, cfg.n_kv_heads * hd), dtype),
@@ -376,7 +373,6 @@ def make_prefill_fn(cfg: ModelConfig, policy: ShardingPolicy,
 # --------------------------------------------------------------------------
 
 def make_spec_rule(cfg: ModelConfig, policy: ShardingPolicy):
-    hd = cfg.resolved_head_dim
     m_ok_q = cfg.n_heads % max(policy.model_size, 1) == 0
     m_ok_kv = cfg.n_kv_heads % max(policy.model_size, 1) == 0
     m = policy.model_axis

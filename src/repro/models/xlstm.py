@@ -34,7 +34,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models import common
 from repro.models.api import Model
-from repro.models.sharding import ShardingPolicy, UNSHARDED, shard_hint
+from repro.models.sharding import UNSHARDED, ShardingPolicy, shard_hint
 
 GATE_CAP = 15.0
 

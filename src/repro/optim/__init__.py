@@ -1,15 +1,9 @@
-from repro.optim.optimizers import (
-    OptState,
-    adamw,
-    sgd,
-    Optimizer,
-    clip_by_global_norm,
-)
+from repro.optim.optimizers import Optimizer, OptState, adamw, clip_by_global_norm, sgd
 from repro.optim.schedules import (
     constant_schedule,
     cosine_schedule,
-    warmup_cosine_schedule,
     linear_schedule,
+    warmup_cosine_schedule,
 )
 
 __all__ = [

@@ -79,7 +79,8 @@ def adamw(lr: ScheduleOrFloat = 3e-4, b1: float = 0.9, b2: float = 0.95,
         flat_g = jax.tree.leaves(grads)
         flat_m = jax.tree.leaves(state.mu)
         flat_v = jax.tree.leaves(state.nu)
-        out = [_upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        out = [_upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v,
+                                            strict=True)]
         new_p = treedef.unflatten([o[0] for o in out])
         new_m = treedef.unflatten([o[1] for o in out])
         new_v = treedef.unflatten([o[2] for o in out])
@@ -121,7 +122,8 @@ def sgd(lr: ScheduleOrFloat = 1e-2, momentum: float = 0.0,
         flat_p, treedef = jax.tree.flatten(params)
         flat_g = jax.tree.leaves(grads)
         flat_m = jax.tree.leaves(state.mu)
-        out = [_upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        out = [_upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m,
+                                         strict=True)]
         new_p = treedef.unflatten([o[0] for o in out])
         new_m = treedef.unflatten([o[1] for o in out])
         return new_p, OptState(step=step, mu=new_m, nu=())

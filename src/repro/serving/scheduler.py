@@ -18,13 +18,12 @@ from __future__ import annotations
 
 import time
 from collections import defaultdict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
-
-import numpy as np
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.api import Model
 
@@ -130,7 +129,7 @@ class WaveScheduler:
         """Serve everything in the queue; returns completed requests."""
         served: List[Request] = []
         wave_idx = 0
-        for plen, reqs in sorted(self._buckets().items()):
+        for _plen, reqs in sorted(self._buckets().items()):
             for i in range(0, len(reqs), self.max_batch):
                 wave = reqs[i: i + self.max_batch]
                 self._run_wave(wave, wave_idx)

@@ -15,16 +15,13 @@ from __future__ import annotations
 
 import json
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional
 
-import numpy as np
-
 import jax
 
-from repro.checkpoint.store import (latest_step, restore_checkpoint,
-                                    save_checkpoint)
+from repro.checkpoint.store import latest_step, restore_checkpoint, save_checkpoint
 from repro.models.api import Model, make_train_step
 
 
@@ -89,7 +86,7 @@ class TrainLoop:
 
     # ------------------------------------------------------------------
     def run(self, verbose: bool = False) -> dict:
-        t0 = time.time()
+        t0 = time.perf_counter()
         for step in range(self.start_step, self.cfg.total_steps):
             batch = self.batch_fn(step)
             self.params, self.opt_state, metrics = self.step_fn(
@@ -110,7 +107,7 @@ class TrainLoop:
                 self._save(step + 1)
         return {
             "steps": self.cfg.total_steps,
-            "wall_s": time.time() - t0,
+            "wall_s": time.perf_counter() - t0,
             "final": self.metrics_log[-1] if self.metrics_log else {},
             "metrics_log": self.metrics_log,
         }

@@ -1,14 +1,14 @@
-from repro.utils.trees import (
-    tree_size,
-    tree_bytes,
-    tree_zeros_like,
-    tree_add,
-    tree_scale,
-    tree_weighted_sum,
-    tree_allclose,
-    tree_global_norm,
-)
 from repro.utils.hlo import collective_bytes, count_hlo_ops
+from repro.utils.trees import (
+    tree_add,
+    tree_allclose,
+    tree_bytes,
+    tree_global_norm,
+    tree_scale,
+    tree_size,
+    tree_weighted_sum,
+    tree_zeros_like,
+)
 
 __all__ = [
     "tree_size",

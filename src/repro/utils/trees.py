@@ -62,7 +62,7 @@ def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
     if len(la) != len(lb):
         return False
     return all(np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
-               for x, y in zip(la, lb))
+               for x, y in zip(la, lb, strict=True))
 
 
 def tree_global_norm(tree):

@@ -1,0 +1,49 @@
+"""Fixture: fully compliant module — the false-positive guard.
+
+Every idiom here is one the real tree relies on; none may be flagged.
+"""
+import time
+
+import jax
+import numpy as np
+
+_EVENT_STREAM = 0xE7E47  # named module-level stream constant
+
+
+def stream_rng(seed):
+    return np.random.default_rng((seed, _EVENT_STREAM))
+
+
+def param_rng(seed):
+    return np.random.default_rng(seed)
+
+
+def derived_seed(seed, stream):
+    return int(np.random.SeedSequence((seed, stream)).generate_state(1)[0])
+
+
+def declared_jit(fn):
+    return jax.jit(fn, static_argnames=())
+
+
+def version_key_with_snapshot(pool):
+    key = (id(pool), pool.version)
+    table = np.asarray(pool.table)
+
+    def evaluate(x):
+        return table[x]
+
+    return key, evaluate
+
+
+def duration():
+    t0 = time.perf_counter()
+    return time.perf_counter() - t0
+
+
+def ordered_array(table):
+    return np.array(sorted(table.keys()))
+
+
+def suppressed_with_reason():
+    return time.time()  # repro-lint: disable=RPL004 (display-only timestamp)

@@ -1,0 +1,7 @@
+"""Fixture: malformed pragmas — each must surface RPL000."""
+import time
+
+# repro-lint: disable=RPL004
+t = time.perf_counter()  # pragma above has no (reason) -> RPL000
+
+x = 1  # repro-lint: disable=RPL999 (unknown rule code) -> RPL000

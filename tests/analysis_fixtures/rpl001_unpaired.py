@@ -1,0 +1,24 @@
+"""Fixture: vectorized entry points with no parity-registry entry."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def batch_frobnicate(xs):
+    """Public batch_* def, unregistered -> RPL001."""
+    return [x + 1 for x in xs]
+
+
+def frobnicate_batched(xs):
+    """Public *_batched def, unregistered -> RPL001."""
+    return [x + 1 for x in xs]
+
+
+def mystery_kernel(x):
+    """Calls pl.pallas_call, unregistered -> RPL001."""
+    return pl.pallas_call(lambda r, o: None,
+                          out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+
+def _private_batch_helper_batched(xs):
+    """Private: name pattern alone does not trigger the rule."""
+    return xs

@@ -1,0 +1,30 @@
+"""Fixture: rng-stream discipline violations."""
+import numpy as np
+
+
+def literal_seed():
+    return np.random.default_rng(42)  # bare literal -> RPL002
+
+
+def literal_stream_component(seed):
+    return np.random.default_rng((seed, 999))  # literal component -> RPL002
+
+
+def unseeded():
+    return np.random.default_rng()  # OS entropy -> RPL002
+
+
+def hash_seed(seed):
+    rng = np.random.default_rng(hash((seed, "train")))  # hash -> RPL002
+    return rng
+
+
+def hashed_seed_kwarg(seed, dataset_cls):
+    return dataset_cls(seed=hash((seed, 1)))  # seed= kwarg via hash -> RPL002
+
+
+class Checkpointable:
+    def load_state(self, d):
+        # the restore idiom is exempt: fresh rng immediately overwritten
+        self.rng = np.random.default_rng()
+        self.rng.bit_generator.state = d["rng"]

@@ -1,0 +1,38 @@
+"""Fixture: jit/cache-key hygiene violations."""
+import functools
+
+import jax
+
+
+def undeclared_jit(fn):
+    return jax.jit(fn)  # no static_argnames -> RPL003
+
+
+def declared_jit(fn):
+    return jax.jit(fn, static_argnames=())  # explicit empty surface: ok
+
+
+def declared_via_partial(fn):
+    deco = functools.partial(jax.jit, static_argnames=("mode",))  # ok
+    return deco(fn)
+
+
+class Cache:
+    def bad_cached_eval(self, pool):
+        key = (id(pool), pool.version)  # reads the version token...
+
+        def evaluate(x):
+            return pool.table[x]  # ...but closes over the object -> RPL003
+
+        self._cache[key] = evaluate
+        return evaluate
+
+    def good_cached_eval(self, pool):
+        key = (id(pool), pool.version)
+        table = pool.table.copy()  # snapshot baked into locals
+
+        def evaluate(x):
+            return table[x]
+
+        self._cache[key] = evaluate
+        return evaluate

@@ -1,0 +1,38 @@
+"""Fixture: nondeterminism-source violations."""
+import time
+from datetime import datetime
+
+import numpy as np
+
+
+def wall_clock():
+    return time.time()  # -> RPL004
+
+
+def wall_clock_datetime():
+    return datetime.now()  # -> RPL004
+
+
+def unordered_into_array(ids):
+    return np.array(set(ids))  # hash-ordered elements -> RPL004
+
+
+def dict_keys_into_array(table):
+    return np.asarray(table.keys())  # -> RPL004
+
+
+def comprehension_over_set(ids):
+    return np.array([i * 2 for i in set(ids)])  # -> RPL004
+
+
+def salted_hash(seed):
+    return hash((seed, "eval"))  # str hash is per-process -> RPL004
+
+
+def sorted_is_fine(table):
+    return np.array(sorted(table.keys()))  # deterministic order: ok
+
+
+def durations_are_fine():
+    t0 = time.perf_counter()
+    return time.perf_counter() - t0

@@ -38,7 +38,8 @@ def test_hierarchical_equals_flat(seed):
 
     flat = fedavg(updates, list(w))
     hier = hierarchical_fedavg(updates, list(w), h, placement)
-    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(hier)):
+    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(hier),
+                    strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-5, atol=2e-6)
 
@@ -56,7 +57,7 @@ def test_placement_invariance(seed):
     p2 = rng.permutation(n)[: h.dimensions]
     g1 = hierarchical_fedavg(updates, list(w), h, p1)
     g2 = hierarchical_fedavg(updates, list(w), h, p2)
-    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-5, atol=2e-6)
 
@@ -81,7 +82,7 @@ def test_plan_levels_structure():
     placement = np.arange(h.dimensions)
     plan = AggregationPlan.build(h, placement, n_devices=h.total_clients)
     assert len(plan.levels) == h.depth
-    for groups, carrier, in_group in plan.levels:
+    for groups, carrier, _in_group in plan.levels:
         devs = [d for g in groups for d in g]
         assert sorted(devs) == list(range(plan.n_devices))  # full partition
         assert carrier.sum() >= 1

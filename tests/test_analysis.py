@@ -1,0 +1,202 @@
+"""The static-analysis pass itself: every RPL0xx rule family must catch
+its seeded fixture violation, stay silent on compliant idioms, honor
+reasoned pragmas, and come up clean on the real tree."""
+from pathlib import Path
+
+from repro.analysis import engine, parity, rules
+from repro.analysis.parity import REGISTRY, OraclePair
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "analysis_fixtures"
+
+
+def load_fixture(name, rel="src/repro/core/fixture_mod.py"):
+    """Parse a fixture as if it lived at ``rel`` so path-scoped rules
+    (src/-only, core//fl/-only) apply to it."""
+    return engine.load_context(FIXTURES / name, REPO, rel=rel)
+
+
+def codes_at(violations, code):
+    return sorted(v.line for v in violations if v.code == code)
+
+
+def run_per_file(ctx):
+    out = []
+    for check in rules.PER_FILE_CHECKS:
+        out.extend(v for v in check(ctx) if not ctx.suppressed(v.line, v.code))
+    return out
+
+
+# ---------------------------------------------------------------- RPL000
+def test_rpl000_reasonless_and_unknown_pragmas():
+    ctx = load_fixture("rpl000_pragma.py")
+    violations = engine._check_pragmas(ctx, rules.RULES)
+    assert len(codes_at(violations, "RPL000")) == 2
+    msgs = " ".join(v.message for v in violations)
+    assert "missing its mandatory" in msgs and "RPL999" in msgs
+
+
+def test_rpl000_reasonless_pragma_does_not_suppress():
+    ctx = load_fixture("rpl000_pragma.py")
+    assert not ctx.suppressed(5, "RPL004")
+
+
+# ---------------------------------------------------------------- RPL001
+def test_rpl001_unpaired_batch_and_pallas_defs_fire():
+    ctx = load_fixture("rpl001_unpaired.py")
+    violations = parity.check([ctx], registry=(), root=REPO)
+    flagged = {v.message.split()[0] for v in violations}
+    assert flagged == {"batch_frobnicate", "frobnicate_batched",
+                       "mystery_kernel"}
+
+
+def test_rpl001_registry_entry_covers_the_def():
+    ctx = load_fixture("rpl001_unpaired.py")
+    reg = (OraclePair(fast="repro.core.fixture_mod:batch_frobnicate",
+                      oracle="repro.core.fixture_mod:batch_frobnicate",
+                      tests=("tests/analysis_fixtures/rpl001_unpaired.py",)),)
+    violations = parity.check([ctx], registry=reg, root=REPO)
+    flagged = {v.message.split()[0] for v in violations}
+    assert "batch_frobnicate" not in flagged
+
+
+def test_rpl001_deleting_an_oracle_fails_the_pass():
+    """Registry rot: an entry whose oracle symbol no longer resolves
+    (e.g. tpd_ref deleted from kernels/ref.py) must fail."""
+    contexts = engine.load_tree(REPO)
+    by_rel = {c.rel: c for c in contexts}
+    assert parity.resolve_symbol(by_rel, "repro.kernels.ref:tpd_ref")
+    reg = (OraclePair(fast="repro.kernels.tpd:batch_tpd_pallas",
+                      oracle="repro.kernels.ref:tpd_ref_DELETED",
+                      tests=("tests/test_scale_parity.py",)),)
+    violations = [v for v in parity.check(contexts, registry=reg, root=REPO)
+                  if "does not resolve" in v.message]
+    assert violations and "tpd_ref_DELETED" in violations[0].message
+
+
+def test_rpl001_unregistering_a_kernel_fails_the_pass():
+    """Dropping the batch_tpd_pallas entry leaves the kernel unpaired."""
+    contexts = engine.load_tree(REPO)
+    reg = tuple(p for p in REGISTRY
+                if p.fast != "repro.kernels.tpd:batch_tpd_pallas")
+    violations = parity.check(contexts, registry=reg, root=REPO)
+    assert any(v.code == "RPL001" and "batch_tpd_pallas" in v.message
+               for v in violations)
+
+
+def test_rpl001_missing_test_file_fails_the_pass():
+    contexts = engine.load_tree(REPO)
+    reg = (OraclePair(fast="repro.kernels.tpd:batch_tpd_pallas",
+                      oracle="repro.kernels.ref:tpd_ref",
+                      tests=("tests/test_does_not_exist.py",)),)
+    violations = parity.check(contexts, registry=reg, root=REPO)
+    assert any("missing test file" in v.message for v in violations)
+
+
+# ---------------------------------------------------------------- RPL002
+def test_rpl002_fixture_violations():
+    ctx = load_fixture("rpl002_rng.py")
+    lines = codes_at(run_per_file(ctx), "RPL002")
+    # literal, literal component, unseeded, hash seed, hash seed= kwarg
+    assert len(lines) == 5
+
+
+def test_rpl002_restore_idiom_is_exempt():
+    ctx = load_fixture("rpl002_rng.py")
+    restore_line = ctx.source.splitlines().index(
+        "        self.rng = np.random.default_rng()") + 1
+    assert restore_line not in codes_at(run_per_file(ctx), "RPL002")
+
+
+def test_rpl002_replacing_a_stream_constant_with_a_literal_fails():
+    """The acceptance tamper check: degrade runner.py's
+    (seed, _EVENT_STREAM) to (seed, 1234) and the pass must fail."""
+    rel = "src/repro/experiments/runner.py"
+    path = REPO / rel
+    clean = engine.load_context(path, REPO)
+    assert codes_at(run_per_file(clean), "RPL002") == []
+    tampered = clean.source.replace("(seed, _EVENT_STREAM)", "(seed, 1234)")
+    assert tampered != clean.source
+    import ast
+    ctx = engine.FileContext(
+        path=path, rel=rel, source=tampered, tree=ast.parse(tampered),
+        pragmas=engine._parse_pragmas(tampered),
+        parents=engine._build_parents(ast.parse(tampered)))
+    ctx.parents = engine._build_parents(ctx.tree)
+    assert codes_at(run_per_file(ctx), "RPL002")
+
+
+def test_rpl002_only_applies_to_src():
+    ctx = load_fixture("rpl002_rng.py", rel="tests/fixture_mod.py")
+    assert codes_at(run_per_file(ctx), "RPL002") == []
+
+
+# ---------------------------------------------------------------- RPL003
+def test_rpl003_fixture_violations():
+    ctx = load_fixture("rpl003_jit.py")
+    lines = codes_at(run_per_file(ctx), "RPL003")
+    src_lines = ctx.source.splitlines()
+    jit_line = src_lines.index("    return jax.jit(fn)  "
+                               "# no static_argnames -> RPL003") + 1
+    closure_line = src_lines.index("        def evaluate(x):") + 1
+    assert lines == sorted([jit_line, closure_line])
+
+
+def test_rpl003_scoped_to_core_and_fl():
+    ctx = load_fixture("rpl003_jit.py", rel="src/repro/models/fixture.py")
+    assert codes_at(run_per_file(ctx), "RPL003") == []
+
+
+# ---------------------------------------------------------------- RPL004
+def test_rpl004_fixture_violations():
+    ctx = load_fixture("rpl004_determinism.py")
+    lines = codes_at(run_per_file(ctx), "RPL004")
+    # time.time, datetime.now, set->array, keys->array, comp-over-set,
+    # salted string hash
+    assert len(lines) == 6
+    msgs = [v.message for v in run_per_file(ctx) if v.code == "RPL004"]
+    assert any("wall-clock" in m for m in msgs)
+    assert any("unordered" in m for m in msgs)
+    assert any("salted" in m for m in msgs)
+
+
+def test_rpl004_applies_to_tests_but_not_str_hash():
+    ctx = load_fixture("rpl004_determinism.py", rel="tests/fixture_mod.py")
+    # wall-clock + unordered iteration still banned in tests/, the
+    # str-hash check is src/-only
+    msgs = [v.message for v in run_per_file(ctx) if v.code == "RPL004"]
+    assert len(msgs) == 5
+    assert not any("salted" in m for m in msgs)
+
+
+# ------------------------------------------------------------ integration
+def test_clean_fixture_has_no_findings():
+    ctx = load_fixture("clean.py")
+    assert run_per_file(ctx) == []
+    assert engine._check_pragmas(ctx, rules.RULES) == []
+
+
+def test_real_tree_is_clean():
+    """`make analyze` exits 0: the whole scanned tree has no violations
+    and every pragma carries a written reason."""
+    contexts = engine.load_tree(REPO)
+    violations = engine.run(contexts, root=REPO)
+    assert violations == [], "\n".join(v.render() for v in violations)
+
+
+def test_fixtures_are_excluded_from_the_real_scan():
+    contexts = engine.load_tree(REPO)
+    assert not any("analysis_fixtures" in c.rel for c in contexts)
+
+
+def test_cli_reports_violations_and_exit_codes(tmp_path, capsys):
+    from repro.analysis.cli import main
+    bad = tmp_path / "src"
+    bad.mkdir()
+    (bad / "mod.py").write_text("import time\nt = time.time()\n")
+    assert main(["--root", str(tmp_path), "src"]) == 1
+    out = capsys.readouterr().out
+    assert "RPL004" in out and "src/mod.py:2" in out
+    (bad / "mod.py").write_text("x = 1\n")
+    assert main(["--root", str(tmp_path), "src"]) == 0
+    assert main(["--list-rules"]) == 0

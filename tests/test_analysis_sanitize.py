@@ -1,0 +1,77 @@
+"""Runtime determinism sanitizer (repro.analysis.sanitize) plus the
+registry-pinned run_batched <-> run_single sweep parity, executed under
+the sanitizer so the sequential oracle is also proven run-to-run
+deterministic."""
+import numpy as np
+import pytest
+
+from repro.analysis.sanitize import (
+    DeterminismError,
+    artifact_hash,
+    assert_deterministic,
+    determinism_guard,
+)
+from repro.experiments import get_scenario
+from repro.experiments.runner import run_batched, run_single
+
+
+def test_artifact_hash_canonicalizes_dict_order():
+    a = {"a": 1, "b": [1.0, 2.0], "c": np.arange(3)}
+    b = {"c": np.arange(3), "b": [1.0, 2.0], "a": 1}
+    assert artifact_hash(a) == artifact_hash(b)
+
+
+def test_artifact_hash_is_bit_exact_on_arrays():
+    a = np.arange(4, dtype=np.float32)
+    b = a.copy()
+    b[2] = np.nextafter(b[2], np.float32(np.inf))
+    assert artifact_hash(a) == artifact_hash(a.copy())
+    assert artifact_hash(a) != artifact_hash(b)
+    # dtype and shape are part of the artifact identity
+    assert artifact_hash(a) != artifact_hash(a.astype(np.float64))
+    assert artifact_hash(a) != artifact_hash(a.reshape(2, 2))
+
+
+def test_artifact_hash_walks_dataclasses():
+    run_a = run_single(get_scenario("drift"), "uniform", seed=3, rounds=2)
+    run_b = run_single(get_scenario("drift"), "uniform", seed=3, rounds=2)
+    assert artifact_hash(run_a) == artifact_hash(run_b)
+
+
+def test_assert_deterministic_returns_first_result():
+    calls = []
+
+    def factory():
+        calls.append(0)
+        return {"n": 1}
+
+    assert assert_deterministic(factory) == {"n": 1}
+    assert len(calls) == 2
+
+
+def test_assert_deterministic_raises_on_drift():
+    counter = iter(range(10))
+    with pytest.raises(DeterminismError, match="nondeterminism"):
+        assert_deterministic(lambda: next(counter), label="counter")
+
+
+def test_determinism_guard_collects_then_raises():
+    with pytest.raises(DeterminismError, match="drifty"):
+        with determinism_guard() as guard:
+            ctr = iter(range(10))
+            assert guard.check("drifty", lambda: next(ctr)) is None
+            assert guard.check("stable", lambda: 42) == 42
+
+
+def test_run_single_sanitized_and_run_batched_matches():
+    """The parity-registry pin for ``run_batched``: the lockstep batched
+    sweep reproduces the sequential ``run_single`` oracle bit-for-bit,
+    and the oracle itself is run-to-run deterministic (each repeat
+    builds a fresh environment/strategy from the same seed)."""
+    spec = get_scenario("churn")
+    single = assert_deterministic(
+        lambda: run_single(spec, "pso", seed=0, rounds=6).tpds,
+        label="run_single churn/pso",
+    )
+    batched = run_batched(spec, [("pso", None)], seeds=(0,), rounds=6)[0]
+    assert np.array_equal(np.asarray(single), np.asarray(batched.tpds))

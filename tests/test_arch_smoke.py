@@ -1,11 +1,10 @@
 """Per-architecture smoke tests (deliverable f): every assigned arch, as a
 REDUCED variant of the same family, runs one forward/train step and one
 decode step on CPU with finite outputs and correct shapes."""
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.configs import ASSIGNED, get_config
 from repro.models import get_model
@@ -66,9 +65,11 @@ def test_train_step_updates_params(name, models):
     # at least one leaf changed and everything stays finite
     changed = any(
         not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
-        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params),
+                        strict=True))
     assert changed
-    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(new_params))
+    assert all(bool(jnp.isfinite(x).all())
+               for x in jax.tree.leaves(new_params))
 
 
 @pytest.mark.parametrize("name", ASSIGNED)

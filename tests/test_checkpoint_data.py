@@ -1,16 +1,18 @@
 """Checkpointing round-trips and the synthetic data pipeline."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import jax
-import jax.numpy as jnp
-
-from repro.checkpoint.store import (latest_step, restore_checkpoint,
-                                    save_checkpoint)
-from repro.data.synthetic import (FederatedDataset, FederatedLMDataset,
-                                  SyntheticLMDataset, dirichlet_partition,
-                                  make_federated_dataset)
+from repro.checkpoint.store import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_config
+from repro.data.synthetic import (
+    FederatedDataset,
+    FederatedLMDataset,
+    SyntheticLMDataset,
+    dirichlet_partition,
+    make_federated_dataset,
+)
 
 
 def _tree():
@@ -25,7 +27,8 @@ def test_checkpoint_roundtrip(tmp_path):
     like = jax.tree.map(jnp.zeros_like, tree)
     restored, extra = restore_checkpoint(str(tmp_path), like)
     assert extra == {"note": "hi"}
-    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
 

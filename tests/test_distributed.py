@@ -6,15 +6,13 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
-from repro.fl.distributed import FLTrainStep, choose_fl_hierarchy
 from repro.fl.aggregation import fedavg
+from repro.fl.distributed import FLTrainStep, choose_fl_hierarchy
 from repro.models import get_model
 from repro.optim import sgd
 
@@ -61,7 +59,8 @@ def test_fl_round_host_path_equals_flat_fedavg():
         updates.append(p_c)
     flat = fedavg(updates, [1.0 / n] * n)
     for a, b in zip(jax.tree.leaves(flat),
-                    jax.tree.leaves(jax.tree.map(lambda x: x[0], new_params))):
+                    jax.tree.leaves(jax.tree.map(lambda x: x[0], new_params)),
+                    strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=3e-4, atol=3e-5)
@@ -117,7 +116,8 @@ MESH_SCRIPT = textwrap.dedent("""
     flat = fedavg(updates, [1.0 / n] * n)
     errs = []
     got0 = jax.tree.map(lambda x: np.asarray(x[0], np.float32), new_params)
-    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(got0)):
+    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(got0),
+                    strict=True):
         errs.append(float(np.max(np.abs(np.asarray(a, np.float32) - b))))
     print(json.dumps({"max_err": max(errs), "loss": float(metrics["loss"])}))
 """)

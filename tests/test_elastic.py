@@ -22,19 +22,27 @@ import json
 import numpy as np
 import pytest
 
-from repro.core.hierarchy import (ClientPool, Hierarchy, TopologyUpdate,
-                                  compose_remaps, slot_remap)
-from repro.core.placement import (PSOConfig, PSOPlacement,
-                                  repair_placement)
+from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, compose_remaps, slot_remap
+from repro.core.placement import PSOConfig, PSOPlacement, repair_placement
 from repro.core.pso import FlagSwapPSO
 from repro.core.registry import create_strategy, register_strategy
-from repro.experiments import (ClientJoin, ClientLeave, ExperimentResult,
-                               SimulatedEnvironment, get_scenario,
-                               run_experiment, run_single,
-                               validate_result_dict)
-from repro.experiments.scenarios import (ClientChurn, LatencyNoise,
-                                         ScenarioSpec, StragglerSpike,
-                                         _coerce)
+from repro.experiments import (
+    ClientJoin,
+    ClientLeave,
+    ExperimentResult,
+    SimulatedEnvironment,
+    get_scenario,
+    run_experiment,
+    run_single,
+    validate_result_dict,
+)
+from repro.experiments.scenarios import (
+    ClientChurn,
+    LatencyNoise,
+    ScenarioSpec,
+    StragglerSpike,
+    _coerce,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -157,7 +165,7 @@ def _migrate_reference(pso, new_n, srm, crm):
             taken = {int(c) for c in carried if c is not None}
             fresh = [int(c) for c in rng.permutation(new_n)
                      if int(c) not in taken]
-            for s, c in zip(holes, fresh):
+            for s, c in zip(holes, fresh, strict=False):
                 carried[s] = float(c)
         exp_x[i] = carried
         pb = [carry_val(pso.pbest_x[i], s) for s in range(new_D)]
@@ -387,7 +395,7 @@ def test_straggler_recovery_same_round_as_leave():
                             min_clients=15)))
     run = run_single(spec, "uniform", seed=0, rounds=12)
     # r2 spike (7 slowed), r6: leave renumbers THEN recovery restores
-    recovery = [l for l in run.event_log if "recovered" in l]
+    recovery = [e for e in run.event_log if "recovered" in e]
     assert recovery and recovery[0].startswith("r6:")
     n_restored = int(recovery[0].split("(")[1].split()[0])
     assert n_restored >= 3   # all surviving stragglers, not 0
@@ -466,7 +474,7 @@ def test_elastic_batched_sequential_bit_identity(scenario):
     bat = run_experiment(spec, strategies, seeds=(0, 1), progress=False,
                          mode="batched")
     assert len(seq.runs) == len(bat.runs) == len(strategies) * 2
-    for a, b in zip(seq.runs, bat.runs):
+    for a, b in zip(seq.runs, bat.runs, strict=True):
         assert (a.strategy, a.seed) == (b.strategy, b.seed)
         assert a.tpds == b.tpds                 # bit-identical floats
         assert a.event_log == b.event_log
@@ -482,7 +490,7 @@ def test_flash_crowd_grows_dimension_and_versions_monotone():
                          progress=False)
     tv = res.runs[0].metrics["topology_version"]
     assert len(tv) == res.rounds
-    assert all(b >= a for a, b in zip(tv, tv[1:]))  # monotone
+    assert all(b >= a for a, b in zip(tv, tv[1:], strict=False))  # monotone
     assert max(tv) >= 2
     # the tree climbs TWO structural rungs as the crowd arrives
     log = res.runs[0].event_log

@@ -19,19 +19,15 @@ Covers the PR-5 guarantees:
   write schema-v2 artifacts whose ``topology_version`` series shows the
   re-hierarchizations.
 """
-import dataclasses
-
+import jax
 import numpy as np
 import pytest
-
-import jax
 
 from repro.configs import get_config
 from repro.core.hierarchy import ClientPool, Hierarchy
 from repro.core.registry import create_strategy
 from repro.data.synthetic import FederatedDataset, FederatedLMDataset
 from repro.experiments import get_scenario, run_experiment
-from repro.experiments.environments import EmulatedEnvironment
 from repro.experiments.results import validate_result_dict
 from repro.experiments.runner import _EVENT_STREAM
 from repro.experiments.scenarios import ClientJoin, ClientLeave
@@ -54,7 +50,7 @@ def make_orchestrator(n_clients=10, seed=0, engine="auto", local_steps=2,
 
 def tree_allclose(a, b):
     return all(np.allclose(x, y) for x, y in
-               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+               zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True))
 
 
 # ---------------------------------------------------------------------------
@@ -105,7 +101,7 @@ def test_admit_returns_update_and_next_round_runs():
         strat = create_strategy("static", orch.hierarchy, seed=0,
                                 placement=[0, 1, 2])
         orch.warmup()
-        rec0 = orch.run_round(0, strat.propose(0))
+        orch.run_round(0, strat.propose(0))
         ids, update = orch.admit(memcap=[20.0, 30.0], pspeed=[7.0, 9.0])
         assert update is not None                  # 12 > capacity 10
         strat.migrate(update)
@@ -246,7 +242,7 @@ def test_batched_and_loop_engines_agree_across_a_resize():
         dims = orch.hierarchy.dimensions
         recs.append(orch.run_round(1, np.arange(dims)))
         records[engine] = recs
-    for a, b in zip(records["batched"], records["loop"]):
+    for a, b in zip(records["batched"], records["loop"], strict=True):
         assert a.tpd == pytest.approx(b.tpd, rel=1e-5)
         assert a.loss == pytest.approx(b.loss, rel=1e-4)
 
@@ -331,7 +327,7 @@ def test_flash_crowd_emulated_end_to_end(tmp_path):
         tv = run.metrics["topology_version"]
         assert len(tv) == 5
         assert max(tv) >= 1                        # >=1 re-hierarchization
-        assert all(b >= a for a, b in zip(tv, tv[1:]))
+        assert all(b >= a for a, b in zip(tv, tv[1:], strict=False))
         # the emulated track's training metrics ride along
         assert len(run.metrics["accuracy"]) == 5
         assert len(run.metrics["n_clients"]) == 5

@@ -17,8 +17,12 @@ from repro.core.cost_model import CostModel
 from repro.core.hierarchy import ClientPool, Hierarchy
 from repro.core.pso import FlagSwapPSO
 from repro.data.synthetic import make_federated_dataset
-from repro.experiments import (EmulatedEnvironment, SimulatedEnvironment,
-                               get_scenario, run_experiment, run_single)
+from repro.experiments import (
+    EmulatedEnvironment,
+    SimulatedEnvironment,
+    get_scenario,
+    run_experiment,
+)
 from repro.fl.orchestrator import FederatedOrchestrator
 from repro.models import get_model
 
@@ -113,7 +117,7 @@ def test_emulated_env_matches_orchestrator_run(emu_setup):
         strat.observe(p, obs.tpd)
         records.append(obs)
 
-    for ref, obs in zip(res_ref.rounds, records):
+    for ref, obs in zip(res_ref.rounds, records, strict=True):
         assert obs.tpd == ref.tpd
         assert obs.placement.tolist() == ref.placement
         assert obs.metrics["loss"] == ref.loss

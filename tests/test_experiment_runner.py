@@ -1,11 +1,9 @@
 """run_experiment sweeps, the ExperimentResult artifact, and the CLI."""
 import json
 
-import numpy as np
 import pytest
 
-from repro.experiments import (ExperimentResult, get_scenario,
-                               run_experiment, validate_result_dict)
+from repro.experiments import ExperimentResult, run_experiment, validate_result_dict
 from repro.experiments.cli import main as cli_main
 
 

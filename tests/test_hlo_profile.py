@@ -1,11 +1,9 @@
 """The structural HLO profiler that feeds §Roofline: trip-count-aware
 FLOPs/bytes/collectives, validated against jax-compiled programs with
 known analytic costs."""
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.utils.hlo import collective_bytes, count_hlo_ops, profile_hlo
 

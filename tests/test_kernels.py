@@ -1,9 +1,8 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.fedavg import fedavg_pallas
@@ -64,9 +63,11 @@ def test_fedavg_tree_wrapper():
              for _ in range(5)]
     w = list(RNG.dirichlet(np.ones(5)).astype(np.float32))
     out = ops.fedavg_tree(trees, w, use_pallas=True, interpret=True)
-    expect = jax.tree.map(lambda *xs: sum(wi * x for wi, x in zip(w, xs)),
+    expect = jax.tree.map(
+        lambda *xs: sum(wi * x for wi, x in zip(w, xs, strict=True)),
                           *trees)
-    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(expect)):
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(expect),
+                    strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
                                    atol=2e-6)
 
@@ -194,7 +195,7 @@ def test_fused_adamw_matches_ref(n, bn, dtype):
     args = (p, g, m, v, 1e-3, 0.1, 0.0975)
     got = fused_adamw_pallas(*args, block_n=bn, interpret=True)
     want = ref.fused_adamw_ref(*args)
-    for a, b in zip(got, want):
+    for a, b in zip(got, want, strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=3e-2 if dtype == jnp.bfloat16

@@ -1,15 +1,11 @@
 """Launch-layer logic: bundle building (1x1 mesh — no allocation),
 window resolution, FL-replica feasibility, roofline param accounting."""
-import numpy as np
+import jax
 import pytest
 
-import jax
-
-from repro.configs import ASSIGNED, get_config
-from repro.launch.specs import (FL_REPLICA_BUDGET_BYTES, _resolve_window,
-                                build_bundle, fl_replica_feasible,
-                                param_bytes)
+from repro.configs import get_config
 from repro.configs.base import SHAPES
+from repro.launch.specs import _resolve_window, build_bundle, fl_replica_feasible, param_bytes
 
 
 @pytest.fixture(scope="module")
@@ -40,7 +36,6 @@ def test_param_bytes_ordering():
 
 
 def test_fl_replica_feasibility(tiny_mesh):
-    mesh16 = jax.make_mesh((1, 1), ("data", "model"))
     # budget check is per model-axis shard; with model=1 only tiny archs fit
     assert not fl_replica_feasible(get_config("qwen3-moe-235b-a22b"),
                                    tiny_mesh)
@@ -60,8 +55,8 @@ def test_decode_bundles_build_without_allocation(arch, shape, tiny_mesh):
     assert b.kind == "decode"
     leaves = jax.tree.leaves(b.args,
                              is_leaf=lambda x: hasattr(x, "shape"))
-    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves
-               if hasattr(l, "dtype"))
+    assert all(isinstance(x, jax.ShapeDtypeStruct) for x in leaves
+               if hasattr(x, "dtype"))
     # decode token batch has the assigned global batch
     token = b.args[-1]["token"]
     assert token.shape[0] == SHAPES[shape].global_batch

@@ -2,7 +2,6 @@
 naive formulation, MoE routing invariants, and the mlstm chunked scan
 vs its sequential step recurrence."""
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # network-less box: fixed-seed fallback
@@ -13,7 +12,6 @@ import jax.numpy as jnp
 
 from repro.models import common
 from repro.models.moe import _route
-from repro.configs import MoEConfig
 
 
 # --------------------------------------------------------------------------

@@ -1,9 +1,8 @@
 """Optimizers and schedules (built from scratch, no optax)."""
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.optim import adamw, sgd
 from repro.optim.schedules import warmup_cosine_schedule
@@ -43,7 +42,7 @@ def test_adamw_state_mirrors_params():
     _, params = _quadratic()
     state = adamw(1e-3).init(params)
     assert jax.tree.structure(state.mu) == jax.tree.structure(params)
-    assert all(l.dtype == jnp.float32 for l in jax.tree.leaves(state.mu))
+    assert all(x.dtype == jnp.float32 for x in jax.tree.leaves(state.mu))
 
 
 def test_grad_clip_bounds_update():

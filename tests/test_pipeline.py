@@ -8,10 +8,8 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
-import pytest
-
 import jax
+import pytest
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -48,7 +46,7 @@ SCRIPT = textwrap.dedent("""
     gerr = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) -
                                      b.astype(jnp.float32))))
                for a, b in zip(jax.tree.leaves(ref_grads),
-                               jax.tree.leaves(pp_grads)))
+                               jax.tree.leaves(pp_grads), strict=True))
     print(json.dumps({
         "loss_err": abs(float(pp_loss) - float(ref_loss)),
         "grad_err": gerr,

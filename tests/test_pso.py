@@ -1,13 +1,12 @@
 """Flag-Swap PSO (paper Sec. III, eqs. 1-4)."""
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # network-less box: fixed-seed fallback
     from _hypothesis_stub import given, settings, strategies as st
 
-from repro.core.hierarchy import ClientPool, Hierarchy
 from repro.core.cost_model import CostModel
+from repro.core.hierarchy import ClientPool, Hierarchy
 from repro.core.pso import FlagSwapPSO
 
 
@@ -54,7 +53,7 @@ def test_gbest_monotone_improves():
     cm = CostModel(h, pool)
     pso = _pso(h.dimensions, h.total_clients, particles=6, seed=1)
     best_seen = -np.inf
-    for r in range(60):
+    for _ in range(60):
         placement = pso.ask()
         f = cm.fitness(placement)
         pso.tell(f)
@@ -90,7 +89,8 @@ def test_pso_beats_mean_random(rng):
 
 def test_ask_tell_cycles_through_particles():
     pso = _pso(particles=4)
-    seen = [tuple(pso.ask()) or pso.tell(-1.0) for _ in range(4)]
+    for _ in range(4):
+        pso.ask()
     assert pso._cursor == 0
     assert pso.evaluations == 0  # ask alone does not evaluate
     for _ in range(4):

@@ -1,19 +1,17 @@
 """The batched round engine vs the sequential loop engine: identical
 training math, identical deterministic TPD, and the eq. 6/7 composition
 contract against the cost model (heterogeneous mdatasize)."""
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.core.cost_model import CostModel
 from repro.core.hierarchy import ClientPool, Hierarchy
 from repro.core.placement import make_strategy
 from repro.data.synthetic import make_federated_dataset
-from repro.fl.aggregation import (batched_hierarchical_fedavg,
-                                  hierarchical_fedavg)
+from repro.fl.aggregation import batched_hierarchical_fedavg, hierarchical_fedavg
 from repro.fl.orchestrator import FederatedOrchestrator, FederatedRunResult
 from repro.models import get_model
 
@@ -43,7 +41,7 @@ def test_batched_engine_matches_loop_trace(mlp_setup):
     the per-level segment sums is the only permitted delta)."""
     a = _run(mlp_setup, "loop")
     b = _run(mlp_setup, "batched")
-    for ra, rb in zip(a.rounds, b.rounds):
+    for ra, rb in zip(a.rounds, b.rounds, strict=True):
         assert ra.placement == rb.placement
         assert ra.tpd == rb.tpd                 # deterministic: exact
         assert ra.accuracy == rb.accuracy
@@ -88,7 +86,7 @@ def test_batched_fedavg_matches_sequential_reference():
     """segment-sum levels == the per-cluster sequential reference for
     random placements and weights."""
     rng = np.random.default_rng(0)
-    for trial in range(5):
+    for _ in range(5):
         depth = int(rng.integers(1, 4))
         width = int(rng.integers(1, 4)) if depth > 1 else 2
         h = Hierarchy(depth=depth, width=width, trainers_per_leaf=2)
@@ -102,7 +100,8 @@ def test_batched_fedavg_matches_sequential_reference():
         ref = hierarchical_fedavg(updates, list(w), h, placement)
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *updates)
         got = batched_hierarchical_fedavg(stacked, w, h, placement)
-        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got),
+                        strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=2e-5, atol=2e-6)
 
@@ -116,7 +115,7 @@ def test_round_plan_shapes_placement_independent():
     p2 = rng.permutation(20)[: h.dimensions]
     plan1, plan2 = h.round_plan(p1), h.round_plan(p2)
     assert len(plan1.levels) == h.depth
-    for l1, l2 in zip(plan1.levels, plan2.levels):
+    for l1, l2 in zip(plan1.levels, plan2.levels, strict=True):
         assert l1.src.shape == l2.src.shape
         np.testing.assert_array_equal(l1.seg, l2.seg)  # static segments
         np.testing.assert_array_equal(l1.n_parts, l2.n_parts)

@@ -15,8 +15,7 @@ engine pinned against its sequential reference.
 import numpy as np
 import pytest
 
-from repro.core.cost_model import CostModel, PooledTPDEvaluator, \
-    TwoTierCostModel
+from repro.core.cost_model import CostModel, PooledTPDEvaluator, TwoTierCostModel
 from repro.core.hierarchy import ClientPool, Hierarchy
 from repro.core.pso import FlagSwapPSO
 from repro.experiments import get_scenario, run_experiment
@@ -89,7 +88,7 @@ def test_exact_path_tracks_mid_run_pool_mutation():
     rng = np.random.default_rng(9)
     pool.pspeed[:] = rng.uniform(5, 15, len(pool))
     pool.touch()
-    for p, old in zip(ps, before):
+    for p, old in zip(ps, before, strict=True):
         now = cm.tpd_fast(p)
         assert now == cm.tpd(p)
         assert now != old
@@ -260,7 +259,8 @@ def test_vectorized_pso_run_bit_identical_50_iters():
     assert vec.history.worst == ref.history.worst
     assert vec.history.mean == ref.history.mean
     assert all(np.array_equal(a, b) for a, b in
-               zip(vec.history.per_particle, ref.history.per_particle))
+               zip(vec.history.per_particle, ref.history.per_particle,
+                   strict=True))
 
 
 def test_vectorized_pso_scalar_fitness_route():

@@ -1,12 +1,18 @@
 """ScenarioSpec presets, overrides, and event schedules."""
-import dataclasses
 
 import numpy as np
 import pytest
 
-from repro.experiments import (ClientChurn, LatencyNoise, PoolProfile,
-                               PSpeedDrift, ScenarioSpec, StragglerSpike,
-                               get_scenario, list_scenarios)
+from repro.experiments import (
+    ClientChurn,
+    LatencyNoise,
+    PoolProfile,
+    PSpeedDrift,
+    ScenarioSpec,
+    StragglerSpike,
+    get_scenario,
+    list_scenarios,
+)
 from repro.experiments.scenarios import event_from_dict
 
 

@@ -1,11 +1,10 @@
 """Wave scheduler: batching must be a throughput decision, never a
 semantic one — every request's greedy output equals its batch-size-1
 serial decode."""
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import get_model

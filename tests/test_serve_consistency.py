@@ -2,13 +2,12 @@
 ``prefill(t[:n]) + decode(t[n])`` must produce the same next-token
 logits as ``prefill(t[:n+1])`` — the KV-cache / recurrent-state decode
 step is exactly one step of the full forward."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import ASSIGNED, get_config
+from repro.configs import get_config
 from repro.models import get_model
 
 # one representative per family (the full matrix runs in test_arch_smoke)

@@ -6,11 +6,22 @@ import numpy as np
 import pytest
 
 import repro.core as core
-from repro.core import (AdaptivePSOPlacement, CEMPlacement, ClientPool,
-                        CostModel, GreedySpeedPlacement, Hierarchy,
-                        PSOPlacement, SimulatedAnnealingPlacement,
-                        build_config, create_strategy, list_strategies,
-                        make_strategy, resolve_strategy, strategy_names)
+from repro.core import (
+    AdaptivePSOPlacement,
+    CEMPlacement,
+    ClientPool,
+    CostModel,
+    GreedySpeedPlacement,
+    Hierarchy,
+    PSOPlacement,
+    SimulatedAnnealingPlacement,
+    build_config,
+    create_strategy,
+    list_strategies,
+    make_strategy,
+    resolve_strategy,
+    strategy_names,
+)
 from repro.core.placement import PSOConfig
 
 

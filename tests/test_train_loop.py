@@ -1,10 +1,9 @@
 """Trainer loop: learning, checkpointing, and crash-safe resume
 (the resumed run must be byte-identical to an uninterrupted one)."""
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.data.synthetic import SyntheticLMDataset
@@ -18,8 +17,8 @@ def setup():
     cfg = get_config("stablelm-1.6b").reduced().replace(n_layers=1)
     model = get_model(cfg)
     ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=16, seed=0)
-    batch_fn = lambda step: {k: jnp.asarray(v) for k, v in
-                             ds.batch(8, step).items()}
+    def batch_fn(step):
+        return {k: jnp.asarray(v) for k, v in ds.batch(8, step).items()}
     return model, batch_fn
 
 
@@ -41,7 +40,7 @@ def test_resume_is_bitwise_identical(setup, tmp_path):
     ck_b = tmp_path / "b"
     cfg_once = TrainLoopConfig(total_steps=30, save_every=30, log_every=30,
                                checkpoint_dir=str(ck_a))
-    res_once = TrainLoop(model, adamw(3e-3), batch_fn, cfg_once).run()
+    TrainLoop(model, adamw(3e-3), batch_fn, cfg_once).run()
 
     # interrupted run: 15 steps, checkpoint, then a FRESH loop resumes
     cfg_half = TrainLoopConfig(total_steps=15, save_every=15, log_every=30,
@@ -51,13 +50,13 @@ def test_resume_is_bitwise_identical(setup, tmp_path):
                                checkpoint_dir=str(ck_b))
     resumed = TrainLoop(model, adamw(3e-3), batch_fn, cfg_rest)
     assert resumed.start_step == 15
-    res_resumed = resumed.run()
+    resumed.run()
 
     from repro.checkpoint.store import restore_checkpoint
     like = {"params": resumed.params, "opt": resumed.opt_state}
     a, _ = restore_checkpoint(str(ck_a), like)
     b, _ = restore_checkpoint(str(ck_b), like)
-    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True):
         np.testing.assert_allclose(np.asarray(x, np.float32),
                                    np.asarray(y, np.float32),
                                    rtol=1e-6, atol=1e-7)
