@@ -10,7 +10,7 @@ BENCH_TOLERANCE ?= 0.25
 
 .PHONY: verify test lint analyze bench-round bench-fig4 bench-scale \
 	bench-scale-smoke bench-baseline experiments-smoke \
-	elastic-emulated-smoke
+	elastic-emulated-smoke online-smoke
 
 verify test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -102,3 +102,30 @@ elastic-emulated-smoke:
 	PYTHONPATH=src $(PY) -m repro.experiments validate \
 		artifacts/experiments/flash_crowd_emulated_smoke.json \
 		artifacts/experiments/ebb_and_flow_emulated_smoke.json
+
+# the asynchronous online track end-to-end: the jittered async preset,
+# the delay-triggered re-optimization preset, and the degenerate
+# lockstep twin — small model, <=5 rounds, schema-validated artifacts,
+# plus the BENCH_online.json smoke (overlap/staleness/rounds-per-sec +
+# the degenerate==emulated parity claim)
+online-smoke:
+	PYTHONPATH=src $(PY) -m repro.experiments run online-fig4 \
+		--rounds 5 --seeds 0 --strategies pso,random \
+		--set model=mlp-smoke \
+		--out artifacts/experiments/online_fig4_smoke.json
+	PYTHONPATH=src $(PY) -m repro.experiments run online-straggler \
+		--rounds 5 --seeds 0 --strategies pso,random \
+		--set model=mlp-smoke \
+		--out artifacts/experiments/online_straggler_smoke.json
+	PYTHONPATH=src $(PY) -m repro.experiments run online-sync \
+		--rounds 3 --seeds 0 --strategies pso \
+		--set model=mlp-smoke \
+		--out artifacts/experiments/online_sync_smoke.json
+	PYTHONPATH=src $(PY) -m repro.experiments validate \
+		artifacts/experiments/online_fig4_smoke.json \
+		artifacts/experiments/online_straggler_smoke.json \
+		artifacts/experiments/online_sync_smoke.json
+	PYTHONPATH=src $(PY) benchmarks/bench_online.py --smoke \
+		--out artifacts/benchmarks/BENCH_online.json
+	PYTHONPATH=src $(PY) benchmarks/bench_online.py \
+		--validate artifacts/benchmarks/BENCH_online.json

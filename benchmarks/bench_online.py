@@ -1,0 +1,202 @@
+"""Online track benchmark: asynchronous event-driven rounds vs. the
+lockstep emulated baseline.
+
+Two measurements per scenario row, both through ``run_experiment``:
+
+* the ASYNC run (jittered arrivals, partial flushes, staleness-weighted
+  merges) — reporting the realized overlap factor (mean fraction of
+  clients still in flight at each dispatch), the staleness profile of
+  what actually merged, and wall-clock rounds/sec;
+* the LOCKSTEP reference — the same world driven synchronously through
+  ``EmulatedEnvironment`` — whose rounds/sec anchors the async engine's
+  event-queue overhead.
+
+The artifact also carries the track's correctness claim: the degenerate
+online config (zero jitter, full-cohort flushes, no deadline) replayed
+against the emulated environment must produce bit-identical tpd and
+accuracy trajectories (``degenerate_matches_emulated``) — the same pin
+``tests/test_environments_parity.py`` enforces, measured here on the
+benchmark workload.
+
+Writes the schema-versioned ``BENCH_online.json`` (CI's ``online-smoke``
+job runs ``--smoke`` and schema-validates the upload).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.experiments import get_scenario, run_experiment
+
+OUT = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
+BENCH_SCHEMA = "repro.benchmarks/online"
+BENCH_SCHEMA_VERSION = 1
+
+_ROW_KEYS = ("scenario", "clients", "slots", "rounds", "seeds",
+             "strategies", "async_s", "lockstep_s",
+             "rounds_per_sec_async", "rounds_per_sec_lockstep",
+             "overlap_mean", "staleness_mean", "staleness_max",
+             "merged_mean", "reopt_swaps")
+
+
+def bench_scenario(name, strategies, seeds, *, rounds=None,
+                   overrides=None) -> dict:
+    spec = get_scenario(name)
+    if overrides:
+        spec = spec.with_overrides(**overrides)
+    rounds = rounds if rounds is not None else spec.rounds
+    h = spec.make_hierarchy()
+    print(f"== {name}: {h.total_clients} clients, {h.dimensions} slots, "
+          f"{rounds} rounds x {list(seeds)} seeds x {strategies} ==")
+
+    t0 = time.perf_counter()
+    res_async = run_experiment(spec, strategies, rounds=rounds,
+                               seeds=seeds, progress=False)
+    t_async = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    run_experiment(spec.for_env("emulated"), strategies, rounds=rounds,
+                   seeds=seeds, progress=False)
+    t_lock = time.perf_counter() - t0
+
+    def series_mean(key):
+        return float(np.mean([v for r in res_async.runs
+                              for v in r.metrics[key]]))
+
+    row = {
+        "scenario": name, "clients": h.total_clients,
+        "slots": h.dimensions, "rounds": rounds, "seeds": list(seeds),
+        "strategies": list(strategies),
+        "async_s": t_async, "lockstep_s": t_lock,
+        "rounds_per_sec_async": rounds * len(seeds) * len(strategies)
+        / t_async,
+        "rounds_per_sec_lockstep": rounds * len(seeds) * len(strategies)
+        / t_lock,
+        "overlap_mean": series_mean("overlap"),
+        "staleness_mean": series_mean("staleness_mean"),
+        "staleness_max": float(max(v for r in res_async.runs
+                                   for v in r.metrics["staleness_max"])),
+        "merged_mean": series_mean("merged"),
+        "reopt_swaps": float(max(v for r in res_async.runs
+                                 for v in r.metrics["reopt_swaps"])),
+    }
+    print(f"   async {t_async:6.2f}s "
+          f"({row['rounds_per_sec_async']:6.1f} rounds/s) | lockstep "
+          f"{t_lock:6.2f}s ({row['rounds_per_sec_lockstep']:6.1f} "
+          f"rounds/s) | overlap {row['overlap_mean']:.2f} | staleness "
+          f"mean {row['staleness_mean']:.2f} max "
+          f"{row['staleness_max']:.0f} | reopt {row['reopt_swaps']:.0f}")
+    return row
+
+
+def degenerate_parity_claim(rounds, seeds, overrides=None) -> bool:
+    """online-sync (degenerate lockstep online) vs. the emulated track:
+    tpd + accuracy trajectories must be bit-identical."""
+    spec = get_scenario("online-sync")
+    if overrides:
+        spec = spec.with_overrides(**overrides)
+    res_o = run_experiment(spec, ["pso"], rounds=rounds, seeds=seeds,
+                           progress=False)
+    res_e = run_experiment(spec.for_env("emulated"), ["pso"],
+                           rounds=rounds, seeds=seeds, progress=False)
+    same = all(
+        ro.tpds == re.tpds
+        and ro.metrics["accuracy"] == re.metrics["accuracy"]
+        and ro.metrics["loss"] == re.metrics["loss"]
+        for ro, re in zip(res_o.runs, res_e.runs, strict=True))
+    print(f"   degenerate online == emulated: {same}")
+    return same
+
+
+def validate_bench_dict(d) -> list:
+    """Schema gate for BENCH_online.json; returns problems (empty = ok)."""
+    errors = []
+    if not isinstance(d, dict):
+        return ["artifact is not a JSON object"]
+    if d.get("schema") != BENCH_SCHEMA:
+        errors.append(f"schema != {BENCH_SCHEMA!r}")
+    if d.get("schema_version") != BENCH_SCHEMA_VERSION:
+        errors.append(f"schema_version != {BENCH_SCHEMA_VERSION}")
+    rows = d.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errors.append("rows missing/empty")
+        return errors
+    for i, row in enumerate(rows):
+        for k in _ROW_KEYS:
+            if k not in row:
+                errors.append(f"rows[{i}] missing {k!r}")
+        if row.get("overlap_mean", -1) < 0 or \
+                row.get("overlap_mean", 2) > 1:
+            errors.append(f"rows[{i}] overlap_mean out of [0, 1]")
+    if d.get("degenerate_matches_emulated") is not True:
+        errors.append("degenerate_matches_emulated is not true "
+                      "(the lockstep parity pin failed)")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: mlp-smoke model, 5 rounds")
+    ap.add_argument("--out", default=str(OUT / "BENCH_online.json"))
+    ap.add_argument("--validate", metavar="PATH",
+                    help="schema-check an existing artifact and exit")
+    args = ap.parse_args(argv)
+
+    if args.validate:
+        d = json.loads(Path(args.validate).read_text())
+        errors = validate_bench_dict(d)
+        if errors:
+            print(f"{args.validate}: INVALID")
+            for e in errors:
+                print(f"  - {e}")
+            return 1
+        print(f"{args.validate}: OK ({len(d['rows'])} rows)")
+        for row in d["rows"]:
+            print(f"  {row['scenario']:16s} overlap "
+                  f"{row['overlap_mean']:.2f}, staleness mean "
+                  f"{row['staleness_mean']:.2f}, "
+                  f"{row['rounds_per_sec_async']:6.1f} rounds/s async "
+                  f"vs {row['rounds_per_sec_lockstep']:6.1f} lockstep")
+        return 0
+
+    results = {"schema": BENCH_SCHEMA,
+               "schema_version": BENCH_SCHEMA_VERSION,
+               "smoke": bool(args.smoke), "rows": []}
+    if args.smoke:
+        overrides = {"model": "mlp-smoke"}
+        results["rows"].append(bench_scenario(
+            "online-fig4", ["pso"], (0,), rounds=5, overrides=overrides))
+        results["rows"].append(bench_scenario(
+            "online-straggler", ["pso"], (0,), rounds=5,
+            overrides=overrides))
+        results["degenerate_matches_emulated"] = degenerate_parity_claim(
+            3, (0,), overrides=overrides)
+    else:
+        results["rows"].append(bench_scenario(
+            "online-fig4", ["pso", "random"], (0, 1), rounds=25))
+        results["rows"].append(bench_scenario(
+            "online-straggler", ["pso", "random"], (0, 1), rounds=25))
+        results["degenerate_matches_emulated"] = degenerate_parity_claim(
+            10, (0, 1))
+
+    errors = validate_bench_dict(results)
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=1))
+    print(f"-> wrote {out}")
+    if errors:
+        print("INVALID artifact:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

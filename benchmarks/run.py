@@ -59,8 +59,8 @@ def build_suite(args):
     """[(name, thunk, checker)] — the single source of the banner."""
     from benchmarks import (bench_drift, bench_fig3_simulation,
                             bench_fig4_cluster, bench_kernels,
-                            bench_optimizers, bench_roofline,
-                            bench_two_tier)
+                            bench_online, bench_optimizers,
+                            bench_roofline, bench_two_tier)
 
     def roofline():
         for mesh in ("16x16", "2x16x16"):
@@ -84,6 +84,9 @@ def build_suite(args):
          _check_two_tier),
         ("event scenarios via experiments API", _run_scenarios,
          lambda r: r[1]),
+        ("online track (async vs lockstep)",
+         lambda: bench_online.main(["--smoke"] if not args.full else []),
+         lambda rc: "bench_online failed" if rc != 0 else None),
         ("roofline", roofline, None),
     ]
     return suite

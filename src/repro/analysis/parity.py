@@ -35,6 +35,7 @@ SCAN_PREFIXES = (
     "src/repro/fl/",
     "src/repro/kernels/",
     "src/repro/experiments/",
+    "src/repro/online/",
 )
 _BATCH_NAME = re.compile(r"^batch(ed)?_|_batched$")
 
@@ -97,6 +98,17 @@ REGISTRY: Tuple[OraclePair, ...] = (
         fast="repro.experiments.runner:run_batched",
         oracle="repro.experiments.runner:run_single",
         tests=("tests/test_analysis_sanitize.py",),
+    ),
+    # --- online track: staleness-weighted async merge vs. scalar loop ---
+    OraclePair(
+        fast="repro.online.async_fedavg:staleness_weights",
+        oracle="repro.online.async_fedavg:_staleness_weights_ref",
+        tests=("tests/test_online.py",),
+    ),
+    OraclePair(
+        fast="repro.online.async_fedavg:async_merge_batched",
+        oracle="repro.online.async_fedavg:_async_merge_ref",
+        tests=("tests/test_online.py",),
     ),
     # --- Pallas kernels: each entry point vs. its jnp oracle ---
     OraclePair(

@@ -9,8 +9,10 @@ Three concepts:
   scenarios.
 * ``Environment`` — one propose/observe protocol;
   :class:`SimulatedEnvironment` wraps the analytical CostModel (Fig. 3),
-  :class:`EmulatedEnvironment` wraps the FederatedOrchestrator (Fig. 4).
-  Every PlacementStrategy runs identically in both worlds.
+  :class:`EmulatedEnvironment` wraps the FederatedOrchestrator (Fig. 4),
+  :class:`OnlineEnvironment` drives the same orchestrator through the
+  asynchronous discrete-event track (``repro.online``). Every
+  PlacementStrategy runs identically in all three worlds.
 * :func:`run_experiment` — the multi-seed sweep runner producing one
   versioned :class:`ExperimentResult` JSON artifact, also exposed as a
   CLI: ``python -m repro.experiments run paper-fig4 --strategies
@@ -20,6 +22,7 @@ from repro.core.hierarchy import TopologyUpdate
 from repro.experiments.environments import (
     EmulatedEnvironment,
     Environment,
+    OnlineEnvironment,
     RoundObservation,
     SimulatedEnvironment,
     build_environment,
@@ -50,7 +53,8 @@ from repro.experiments.scenarios import (
 
 __all__ = [
     "Environment", "SimulatedEnvironment", "EmulatedEnvironment",
-    "RoundObservation", "TopologyUpdate", "build_environment",
+    "OnlineEnvironment", "RoundObservation", "TopologyUpdate",
+    "build_environment",
     "ExperimentResult", "StrategyRun", "aggregate_runs",
     "validate_result_dict", "RESULT_SCHEMA", "RESULT_SCHEMA_VERSION",
     "run_experiment", "run_single", "run_batched",

@@ -131,7 +131,7 @@ def build_parser() -> argparse.ArgumentParser:
     run_p.add_argument("--set", action="append", metavar="KEY=VALUE",
                        help="override a ScenarioSpec field (repeatable)")
     run_p.add_argument("--env", default=None,
-                       choices=("simulated", "emulated"),
+                       choices=("simulated", "emulated", "online"),
                        help="run the scenario on the given track "
                             "regardless of its registered kind (e.g. "
                             "the elastic presets on the emulated "

@@ -21,14 +21,31 @@ is driven through the identical loop in both worlds:
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Protocol, runtime_checkable
+from typing import Dict, List, Optional, Protocol, runtime_checkable
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cost_model import CostModel, TwoTierCostModel
 from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, slot_remap
 from repro.fl.distributed import elastic_rehierarchize
+from repro.online import (
+    AggregatorBuffer,
+    ArrivalProcess,
+    AsyncConfig,
+    BufferDeadline,
+    BufferedPart,
+    BufferEntry,
+    PartialArrival,
+    RootComplete,
+    UpdateArrival,
+    VirtualClock,
+    async_merge_batched,
+    flush_count,
+)
 
 
 @dataclass
@@ -39,6 +56,7 @@ class RoundObservation:
     tpd: float                              # the black-box signal
     metrics: Dict[str, float] = field(default_factory=dict)
     topology_version: int = 0               # elastic re-hierarchizations
+    log: List[str] = field(default_factory=list)  # env trace (online)
 
 
 @runtime_checkable
@@ -221,6 +239,473 @@ class EmulatedEnvironment:
             topology_version=self.topology_version)
 
 
+class OnlineEnvironment:
+    """The asynchronous world: a discrete-event queue over the live
+    ``FederatedOrchestrator``.
+
+    Each ``step`` dispatches every *idle* client's local training from
+    the current global model and schedules one ``UpdateArrival`` per
+    client at ``now + train_delay * jitter`` on the virtual clock
+    (:class:`~repro.online.clock.VirtualClock`; seeded per-client
+    jitter, no wall-clock anywhere). Arrivals route to the client's
+    aggregator slot under the CURRENT placement, where count-or-deadline
+    :class:`~repro.online.async_fedavg.AggregatorBuffer`\\ s flush
+    partials up the tree, each flush charging the same eq. 6 cluster
+    delay the synchronous engines charge. The round concludes at the
+    first ROOT flush: its entries merge into the global model via
+    staleness-weighted async FedAvg
+    (:func:`~repro.online.async_fedavg.async_merge_batched`), and the
+    observed TPD is the virtual time from dispatch to merge. Clients
+    still in flight simply stay in flight — rounds OVERLAP, and their
+    updates land with positive staleness.
+
+    Two extra mechanisms:
+
+    * **Degenerate lockstep** — a config with zero jitter, full-cohort
+      flushes and no deadline (``AsyncConfig.degenerate``) routes the
+      model transition through the orchestrator's own
+      ``train_cohort``/``aggregate_cohort`` executables, making the run
+      bit-identical to ``EmulatedEnvironment`` (the parity pin).
+    * **Delay-triggered re-optimization** — per-slot EWMAs track
+      observed flush latency; a flush exceeding ``reopt_threshold`` x
+      its slot's EWMA swaps that slot's host for the
+      fastest-by-observed-delay unplaced client MID-ROUND (placement
+      changes off the round boundary), and the next ``sync_topology``
+      surfaces an identity :class:`TopologyUpdate` pulse through the
+      elastic machinery so strategies' ``migrate`` hooks see the epoch.
+
+    The elastic track composes: pool resizes flow through
+    ``sync_population`` exactly as in ``EmulatedEnvironment``, with
+    in-flight updates re-keyed across the id remap (departed clients'
+    updates are dropped; survivors' stay in transit).
+    """
+    kind = "online"
+
+    def __init__(self, orchestrator, config: Optional[AsyncConfig] = None,
+                 seed: int = 0):
+        if orchestrator.engine != "batched":
+            raise ValueError("OnlineEnvironment needs the batched round "
+                             f"engine, got {orchestrator.engine!r}")
+        self.orchestrator = orchestrator
+        self.clients = orchestrator.clients
+        self.cfg = config if config is not None else AsyncConfig()
+        self.clock = VirtualClock()
+        self._arrival = ArrivalProcess(seed, self.cfg.jitter)
+        self._cost_model: Optional[CostModel] = None
+
+        # routing + buffers are (re)built lazily from the placement each
+        # step; see _set_placement
+        self._placement: Optional[np.ndarray] = None
+        self._client_slot: Optional[np.ndarray] = None
+        self._buffers: List[AggregatorBuffer] = []
+
+        # in-flight bookkeeping
+        self._in_flight: set = set()          # clients with a pending arrival
+        self._sent: Dict[tuple, float] = {}   # (client, version) -> t_dispatch
+        self._store: Dict[tuple, object] = {}  # (client, version) -> update
+        self._round = 0
+        self._merge_stats: Optional[Dict[str, float]] = None
+
+        # observed-delay state driving the re-optimization trigger
+        self._slot_ewma: Optional[np.ndarray] = None
+        self._slot_obs: Optional[np.ndarray] = None
+        self._client_delay: Dict[int, float] = {}
+        self._reopt_swaps = 0
+
+        self._trace: List[str] = []
+        self._pending_pulse = False
+        self._topology_version = 0
+
+    # -- protocol surface --------------------------------------------------
+    @property
+    def hierarchy(self) -> Hierarchy:
+        return self.orchestrator.hierarchy
+
+    @property
+    def topology_version(self) -> int:
+        return self._topology_version
+
+    @property
+    def cost_model(self) -> CostModel:
+        """Analytic construction-time context for strategies (exhaustive
+        oracle etc.) — observed TPD always comes from the event queue."""
+        if self._cost_model is None:
+            self._cost_model = CostModel(self.hierarchy, self.clients)
+        return self._cost_model
+
+    def begin(self) -> None:
+        self.orchestrator.warmup()
+
+    # -- placement routing -------------------------------------------------
+    def _set_placement(self, placement: np.ndarray) -> None:
+        """Adopt ``placement``: rebuild the client->slot routing table,
+        per-slot expected-part counts and buffer thresholds. Buffered
+        parts survive a placement change in place (they are in transit
+        at their old slot); a topology change (different D) rebuilds the
+        buffers from scratch — migration already re-injected their
+        entries as arrivals."""
+        h = self.hierarchy
+        if (self._placement is not None
+                and len(self._buffers) == h.dimensions
+                and np.array_equal(self._placement, placement)):
+            return
+        self._placement = placement.copy()
+        C = h.total_clients
+        trainers = h.trainer_assignment(self._placement)
+        leaf_start = h.level_starts[h.depth - 1]
+        cs = np.full(C, -1, np.int64)
+        for li, t_list in enumerate(trainers):
+            for c in t_list:
+                cs[c] = leaf_start + li
+        for s in range(h.dimensions):
+            cs[int(self._placement[s])] = s
+        self._client_slot = cs
+
+        rebuilt = len(self._buffers) != h.dimensions
+        new_buffers: List[AggregatorBuffer] = []
+        for s in range(h.dimensions):
+            kids = h.children_slots(s)
+            expected = (len(kids) if kids
+                        else len(trainers[s - leaf_start])) + 1
+            threshold = flush_count(expected, self.cfg.flush_fraction)
+            if rebuilt:
+                new_buffers.append(AggregatorBuffer(
+                    slot=s, expected=expected, threshold=threshold))
+            else:
+                self._buffers[s].expected = expected
+                self._buffers[s].threshold = threshold
+        if rebuilt:
+            self._buffers = new_buffers
+            self._slot_ewma = np.zeros(h.dimensions, np.float64)
+            self._slot_obs = np.zeros(h.dimensions, np.int64)
+
+    # -- elastic topology --------------------------------------------------
+    def sync_topology(self) -> Optional[TopologyUpdate]:
+        """Pool resizes reconcile through ``sync_population`` (same
+        elastic machinery as the emulated track) with the event engine
+        migrated across the id remap; additionally, a mid-round
+        re-optimization swap raises a PULSE — an identity update with a
+        bumped version — so strategies' ``migrate`` hooks observe the
+        new placement epoch even though no client ids moved."""
+        update = self.orchestrator.sync_population()
+        if update is not None:
+            if self._cost_model is not None:
+                self._cost_model.retarget(update.new_hierarchy)
+            self._migrate_engine(update)
+            self._pending_pulse = False
+            self._topology_version += 1
+            return dataclasses.replace(update,
+                                       version=self._topology_version)
+        if self._pending_pulse:
+            self._pending_pulse = False
+            self._topology_version += 1
+            h = self.hierarchy
+            return TopologyUpdate(
+                version=self._topology_version,
+                old_hierarchy=h, new_hierarchy=h,
+                slot_remap=slot_remap(h, h), client_remap=None)
+        return None
+
+    def _migrate_engine(self, update: TopologyUpdate) -> None:
+        """Re-key every client-id-indexed piece of event state across a
+        pool renumbering; in-flight and buffered updates of departed
+        clients are dropped, survivors' are conservatively re-injected
+        as arrivals at their original virtual times (buffered ones at
+        ``now``) so they re-route under the NEW topology."""
+        remap = update.client_remap
+
+        def alive(c: int) -> int:
+            if remap is None:
+                return c
+            return int(remap[c]) if c < len(remap) and remap[c] >= 0 else -1
+
+        self._arrival.migrate(remap)
+        self._client_delay = {
+            alive(c): v for c, v in sorted(self._client_delay.items())
+            if alive(c) >= 0}
+        self._in_flight = {alive(c) for c in self._in_flight
+                           if alive(c) >= 0}
+        self._sent = {(alive(c), v): t
+                      for (c, v), t in sorted(self._sent.items())
+                      if alive(c) >= 0}
+        self._store = {
+            (alive(c), v): u
+            for (c, v), u in sorted(self._store.items(),
+                                    key=lambda kv: kv[0])
+            if alive(c) >= 0}
+
+        pend = self.clock.pending()
+        self.clock.replace([])
+        for t, _seq, ev in pend:
+            if isinstance(ev, UpdateArrival):
+                nc = alive(ev.client)
+                if nc >= 0:
+                    self.clock.schedule(t, UpdateArrival(nc, ev.version))
+            elif isinstance(ev, (PartialArrival, RootComplete)):
+                for e in ev.entries:
+                    nc = alive(e.client)
+                    if nc >= 0:
+                        self.clock.schedule(
+                            t, UpdateArrival(nc, e.version))
+            # BufferDeadline: dropped — the buffers rebuild empty
+        for buf in self._buffers:
+            for part in buf.take():
+                for e in part.entries:
+                    nc = alive(e.client)
+                    if nc >= 0:
+                        self.clock.schedule(
+                            self.clock.now, UpdateArrival(nc, e.version))
+
+        # force a full routing/buffer rebuild at the next step (the
+        # strategy proposes a placement for the NEW hierarchy then)
+        self._placement = None
+        self._buffers = []
+
+    # -- the step ----------------------------------------------------------
+    def step(self, round_idx: int, placement) -> RoundObservation:
+        orch = self.orchestrator
+        placement = np.asarray(placement, np.int64)
+        self.hierarchy.validate_placement(placement)
+        self._set_placement(placement)
+        self._round = round_idx
+        t_r = self.clock.now
+
+        C = self.hierarchy.total_clients
+        cohort = np.asarray([c for c in range(C)
+                             if c not in self._in_flight], np.int64)
+        overlap = 1.0 - cohort.size / C
+        stacked, train_times = orch.train_cohort(cohort, round_idx)
+        if cohort.size:
+            for j, c in enumerate(cohort):
+                c = int(c)
+                key = (c, round_idx)
+                self._sent[key] = t_r
+                if not self.cfg.degenerate:
+                    self._store[key] = jax.tree.map(
+                        lambda x, j=j: x[j], stacked)
+                delay = float(train_times[j]) * self._arrival.factor(c)
+                self.clock.schedule(t_r + delay,
+                                    UpdateArrival(c, round_idx))
+                self._in_flight.add(c)
+            self._trace.append(
+                f"t={t_r:.4f} r{round_idx}: dispatched {cohort.size}/{C} "
+                f"clients ({len(self._in_flight)} now in flight)")
+
+        if self.cfg.degenerate:
+            tpd, extra = self._step_degenerate(round_idx, placement,
+                                               cohort, stacked,
+                                               train_times, t_r)
+        else:
+            tpd, extra = self._step_async(round_idx, t_r)
+
+        loss, acc = orch.evaluate_global()
+        metrics = {"loss": loss, "accuracy": acc, "overlap": overlap,
+                   "reopt_swaps": float(self._reopt_swaps), **extra}
+        log, self._trace = self._trace, []
+        return RoundObservation(
+            round_idx=round_idx, placement=self._placement.copy(),
+            tpd=tpd, metrics=metrics,
+            topology_version=self._topology_version, log=log)
+
+    # -- degenerate lockstep path -------------------------------------------
+    def _step_degenerate(self, r: int, placement, cohort, stacked,
+                         train_times, t_r: float):
+        """Zero jitter + full-cohort flush + no deadline: the round IS
+        synchronous. The model transition runs through the orchestrator's
+        own executables (``train_cohort`` full-cohort fast path +
+        ``aggregate_cohort``), so tpd/loss/accuracy match
+        ``EmulatedEnvironment.step`` bit for bit — while the arrival
+        events still stream through the virtual clock, keeping the
+        trace real."""
+        orch = self.orchestrator
+        if cohort.size != self.hierarchy.total_clients:
+            raise RuntimeError("degenerate online round with clients in "
+                               "flight — the lockstep invariant broke")
+        while self.clock:
+            t, ev = self.clock.pop()
+            self._in_flight.discard(ev.client)
+            sent = self._sent.pop((ev.client, ev.version), None)
+            if sent is not None:
+                self._observe_delay(ev.client, t - sent)
+        train_time = float(np.max(train_times))
+        new_params, agg_time = orch.aggregate_cohort(stacked, placement)
+        orch.set_global(new_params)
+        t_done = t_r + train_time + agg_time
+        self.clock.advance_to(t_done)
+        self._trace.append(
+            f"t={t_done:.4f} r{r}: lockstep merge of {cohort.size} "
+            f"updates (train={train_time:.4f} agg={agg_time:.4f})")
+        tpd = (train_time + agg_time) * orch.time_scale
+        extra = {"train_time": train_time, "agg_time": agg_time,
+                 "merged": float(cohort.size),
+                 "staleness_mean": 0.0, "staleness_max": 0.0}
+        return tpd, extra
+
+    # -- event-driven async path ---------------------------------------------
+    def _step_async(self, r: int, t_r: float):
+        """Drive the event queue until the first root merge; the TPD is
+        the virtual dispatch->merge latency."""
+        h = self.hierarchy
+        self._merge_stats = None
+        forced = 0
+        force_limit = h.total_clients * h.depth + h.dimensions + 8
+        while self._merge_stats is None:
+            if not self.clock:
+                slot = self._deepest_nonempty_slot()
+                if slot is None:
+                    # nothing in flight at all: the model is unchanged
+                    self._merge_stats = {"merged": 0.0,
+                                         "staleness_mean": 0.0,
+                                         "staleness_max": 0.0}
+                    break
+                forced += 1
+                if forced > force_limit:
+                    raise RuntimeError("online event loop stalled "
+                                       "(forced-flush runaway)")
+                self._flush(slot, self.clock.now, why="drain")
+                continue
+            t, ev = self.clock.pop()
+            if isinstance(ev, UpdateArrival):
+                self._on_arrival(t, ev)
+            elif isinstance(ev, PartialArrival):
+                self._deposit(ev.slot,
+                              BufferedPart(src=ev.src, entries=ev.entries),
+                              t)
+            elif isinstance(ev, BufferDeadline):
+                buf = self._buffers[ev.slot]
+                if buf.epoch == ev.epoch and not buf.empty:
+                    self._flush(ev.slot, t, why="deadline")
+            elif isinstance(ev, RootComplete):
+                self._merge(t, ev.entries, r)
+            else:
+                raise TypeError(f"unknown online event {ev!r}")
+        tpd = (self.clock.now - t_r) * self.orchestrator.time_scale
+        return tpd, dict(self._merge_stats)
+
+    def _on_arrival(self, t: float, ev: UpdateArrival) -> None:
+        self._in_flight.discard(ev.client)
+        sent = self._sent.pop((ev.client, ev.version), None)
+        if sent is not None:
+            self._observe_delay(ev.client, t - sent)
+        slot = int(self._client_slot[ev.client])
+        self._deposit(slot, BufferedPart(
+            src=ev.client,
+            entries=(BufferEntry(ev.client, ev.version),)), t)
+
+    def _deposit(self, slot: int, part: BufferedPart, t: float) -> None:
+        buf = self._buffers[slot]
+        was_empty = buf.empty
+        if buf.deposit(part):
+            self._flush(slot, t, why="count")
+        elif was_empty and self.cfg.flush_timeout > 0:
+            self.clock.schedule(t + self.cfg.flush_timeout,
+                                BufferDeadline(slot, buf.epoch))
+
+    def _flush(self, slot: int, t: float, why: str) -> None:
+        """Drain one buffer: charge the eq. 6 cluster delay for the
+        actual payloads, feed the latency EWMA (possibly triggering a
+        host swap), and forward the merged entry set up the tree."""
+        h = self.hierarchy
+        parts = self._buffers[slot].take()
+        host = int(self._placement[slot])
+        members = [p.src for p in parts]
+        ct = self.orchestrator.cluster_delay(host, members, len(parts))
+        self._note_flush_latency(slot, ct, t)
+        entries = tuple(e for p in parts for e in p.entries)
+        self._trace.append(
+            f"t={t:.4f} flush[{why}] slot {slot} host c{host} "
+            f"parts={len(parts)} updates={len(entries)} dt={ct:.4f}")
+        t_out = t + ct
+        if slot == 0:
+            self.clock.schedule(t_out, RootComplete(entries))
+        else:
+            self.clock.schedule(t_out, PartialArrival(
+                slot=h.parent_slot(slot), src=host, entries=entries))
+
+    def _merge(self, t: float, entries, r: int) -> None:
+        """The root flush landed: staleness-weighted merge into the
+        global model; the round concludes here."""
+        orch = self.orchestrator
+        order = sorted(entries, key=lambda e: (e.version, e.client))
+        clients = np.asarray([e.client for e in order], np.int64)
+        versions = np.asarray([e.version for e in order], np.int64)
+        staleness = (r - versions).astype(np.float64)
+        base_w = orch.weights[clients]
+        trees = [self._store.pop((e.client, e.version)) for e in order]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+        new_global = async_merge_batched(
+            orch.params, stacked, base_w, staleness,
+            self.cfg.staleness_alpha, self.cfg.server_lr)
+        orch.set_global(new_global)
+        self._trace.append(
+            f"t={t:.4f} r{r}: root merge of {len(order)} updates "
+            f"(staleness mean {staleness.mean():.2f} "
+            f"max {staleness.max():.0f})")
+        self._merge_stats = {
+            "merged": float(len(order)),
+            "staleness_mean": float(staleness.mean()),
+            "staleness_max": float(staleness.max())}
+
+    # -- observed-delay EWMAs + the re-optimization trigger ------------------
+    def _observe_delay(self, client: int, delay: float) -> None:
+        b = self.cfg.reopt_beta
+        prev = self._client_delay.get(client)
+        self._client_delay[client] = delay if prev is None \
+            else b * prev + (1.0 - b) * delay
+
+    def _note_flush_latency(self, slot: int, ct: float, t: float) -> None:
+        cfg = self.cfg
+        prior = float(self._slot_ewma[slot])
+        obs = int(self._slot_obs[slot])
+        if (cfg.reopt_threshold > 0 and obs >= 2
+                and ct > cfg.reopt_threshold * prior
+                and self._swap_host(slot, ct, prior, t)):
+            # the slot's latency history belonged to the old host
+            self._slot_ewma[slot] = 0.0
+            self._slot_obs[slot] = 0
+            return
+        b = cfg.reopt_beta
+        self._slot_ewma[slot] = ct if obs == 0 \
+            else b * prior + (1.0 - b) * ct
+        self._slot_obs[slot] = obs + 1
+
+    def _swap_host(self, slot: int, ct: float, ewma: float,
+                   t: float) -> bool:
+        """Delay-triggered mid-round re-optimization: replace the slot's
+        host with the fastest unplaced client by OBSERVED train-delay
+        EWMA (the environment only ever acts on observed signals — the
+        pool's pspeed stays black-box). Takes effect immediately: the
+        very next flush of this slot charges the new host."""
+        placed = {int(c) for c in self._placement}
+        old = int(self._placement[slot])
+        best, best_delay = -1, np.inf
+        for c in range(self.hierarchy.total_clients):
+            if c in placed:
+                continue
+            d = self._client_delay.get(c)
+            if d is not None and d < best_delay:
+                best, best_delay = c, d
+        old_delay = self._client_delay.get(old)
+        if best < 0 or (old_delay is not None and best_delay >= old_delay):
+            return False
+        placement = self._placement.copy()
+        placement[slot] = best
+        self._set_placement(placement)
+        self._reopt_swaps += 1
+        self._pending_pulse = True
+        self._trace.append(
+            f"t={t:.4f} REOPT slot {slot}: host c{old} -> c{best} "
+            f"(flush {ct:.4f} > {self.cfg.reopt_threshold:g}x "
+            f"ewma {ewma:.4f})")
+        return True
+
+    def _deepest_nonempty_slot(self) -> Optional[int]:
+        for s in range(self.hierarchy.dimensions - 1, -1, -1):
+            if not self._buffers[s].empty:
+                return s
+        return None
+
+
 def build_environment(spec, seed: int = 0) -> Environment:
     """Materialize a ScenarioSpec into a fresh environment for one run."""
     hierarchy = spec.make_hierarchy()
@@ -238,7 +723,7 @@ def build_environment(spec, seed: int = 0) -> Environment:
                            memory_penalty=spec.memory_penalty)
         return SimulatedEnvironment(hierarchy, pool, cm)
 
-    # emulated: build model + data + orchestrator
+    # emulated/online: build model + data + orchestrator
     from repro.configs import get_config
     from repro.data.synthetic import make_federated_dataset
     from repro.fl.orchestrator import FederatedOrchestrator
@@ -252,4 +737,12 @@ def build_environment(spec, seed: int = 0) -> Environment:
         local_steps=spec.local_steps, batch_size=spec.batch_size,
         seed=seed, comm_latency=spec.comm_latency, timing=spec.timing,
         engine=spec.engine)
+    if spec.kind == "online":
+        async_cfg = AsyncConfig(
+            jitter=spec.jitter, staleness_alpha=spec.staleness_alpha,
+            flush_fraction=spec.flush_fraction,
+            flush_timeout=spec.flush_timeout, server_lr=spec.server_lr,
+            reopt_threshold=spec.reopt_threshold,
+            reopt_beta=spec.reopt_beta)
+        return OnlineEnvironment(orch, async_cfg, seed=seed)
     return EmulatedEnvironment(orch)

@@ -174,6 +174,8 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
                 float(len(env.clients)))
         for k, v in obs.metrics.items():
             run.metrics.setdefault(k, []).append(float(v))
+        for line in obs.log:
+            run.event_log.append(f"r{r}: {line}")
         if verbose:
             extra = "".join(f" {k}={v:.3f}" for k, v in obs.metrics.items()
                             if k in ("loss", "accuracy"))

@@ -4,7 +4,9 @@ A :class:`ScenarioSpec` is everything needed to reconstruct one
 evaluation world: the aggregation hierarchy, the client-pool profile,
 the environment kind (``simulated`` = the paper's Fig. 3 analytical
 `CostModel`; ``emulated`` = the Fig. 4 docker-cluster emulation via
-`FederatedOrchestrator`), and a per-round *event schedule* (pspeed
+`FederatedOrchestrator`; ``online`` = the same orchestrator under the
+asynchronous discrete-event track of ``repro.online``), and a per-round
+*event schedule* (pspeed
 drift, client churn, straggler spikes, latency noise) that turns the
 stationary paper setups into the adaptive scenarios the roadmap asks
 for.
@@ -28,6 +30,9 @@ name            kind        what it reproduces / probes
 ``flash-crowd``     simulated  population ramps mid-run; tree re-grows
 ``composite-storm`` simulated  joins+leaves+churn+stragglers+noise at once
 ``ebb-and-flow``    simulated  periodic join/leave waves across capacity
+``online-fig4``     online     Fig. 4 cluster asynchronously (jitter + buffers)
+``online-straggler`` online    delay-triggered mid-round host re-optimization
+``online-sync``     online     degenerate lockstep twin of paper-fig4 (parity)
 ==============  ==========  ====================================================
 
 The last three are ELASTIC: ``ClientJoin``/``ClientLeave`` events
@@ -362,7 +367,7 @@ class ScenarioSpec:
     ici_cost: float = 0.005
     dcn_cost: float = 0.05
 
-    # emulated-only knobs
+    # emulated/online knobs (online runs the same orchestrator)
     model: str = "paper-mlp-1m8"
     local_steps: int = 2
     batch_size: int = 32
@@ -370,8 +375,17 @@ class ScenarioSpec:
     timing: str = "deterministic"
     engine: str = "auto"
 
+    # online-only knobs (see repro.online.async_fedavg.AsyncConfig)
+    jitter: float = 0.0                  # lognormal sigma on train delays
+    staleness_alpha: float = 0.5         # (1 + s)^(-alpha) decay
+    flush_fraction: float = 1.0          # buffer count-flush fraction
+    flush_timeout: float = 0.0           # virtual-time deadline (0 = off)
+    server_lr: float = 1.0               # eta at the root merge
+    reopt_threshold: float = 0.0         # flush-latency trigger (0 = off)
+    reopt_beta: float = 0.5              # EWMA decay for observed delays
+
     def __post_init__(self):
-        if self.kind not in ("simulated", "emulated"):
+        if self.kind not in ("simulated", "emulated", "online"):
             raise ValueError(f"unknown scenario kind {self.kind!r}")
 
     # -- construction ------------------------------------------------------
@@ -408,10 +422,14 @@ class ScenarioSpec:
         preset on the Fig. 4 world — real local training via
         ``FederatedOrchestrator``, with the track-specific knobs
         (``model``, ``local_steps``, ``timing``, ...) taking their
-        spec'd values; ``for_env('simulated')`` goes the other way. The
+        spec'd values; ``for_env('simulated')`` goes the other way;
+        ``for_env('online')`` lifts any preset onto the asynchronous
+        event-driven track (with its ``jitter``/``flush_*``/``reopt_*``
+        knobs at their spec'd values — a preset that never set them runs
+        the degenerate lockstep config, bit-identical to emulated). The
         CLI's ``--env`` flag routes through here.
         """
-        if kind not in ("simulated", "emulated"):
+        if kind not in ("simulated", "emulated", "online"):
             raise ValueError(f"unknown environment kind {kind!r}")
         if kind == self.kind:
             return self
@@ -638,3 +656,45 @@ register_scenario(ScenarioSpec(
                 "slots): the paper's 'many clients as candidates' "
                 "regime — a 50-round PSO run completes in seconds on "
                 "CPU."))
+
+register_scenario(ScenarioSpec(
+    name="online-fig4", kind="online", depth=2, width=2,
+    trainers_per_leaf=1, n_clients=10,
+    pool=PoolProfile(kind="explicit", mdatasize=30.0,
+                     memcap=_FIG4_MEMCAP, pspeed=_FIG4_PSPEED),
+    rounds=50, model="paper-mlp-1m8", local_steps=2, batch_size=32,
+    comm_latency=0.002, timing="deterministic",
+    jitter=0.35, staleness_alpha=0.5, flush_fraction=0.75,
+    flush_timeout=0.5, server_lr=0.7,
+    description="The Fig. 4 cluster asynchronously: jittered arrivals, "
+                "75%-count-or-deadline buffer flushes, staleness-"
+                "weighted merges — rounds overlap, stragglers land "
+                "late with decayed weight."))
+
+register_scenario(ScenarioSpec(
+    name="online-straggler", kind="online", depth=3, width=2,
+    trainers_per_leaf=2, n_clients=24,
+    events=(StragglerSpike(every=15, duration=5, fraction=0.3,
+                           slowdown=8.0),),
+    rounds=60, comm_latency=0.002,
+    jitter=0.25, staleness_alpha=0.5, flush_fraction=0.75,
+    flush_timeout=0.5, server_lr=0.7,
+    reopt_threshold=2.0, reopt_beta=0.5,
+    description="The delay-triggered re-optimization demo: recurring "
+                "8x straggler spikes blow a host's flush latency past "
+                "2x its EWMA, and the environment swaps the host for "
+                "the fastest observed unplaced client MID-ROUND "
+                "(placement changes off the round boundary; the next "
+                "sync_topology pulses strategies' migrate hooks)."))
+
+register_scenario(ScenarioSpec(
+    name="online-sync", kind="online", depth=2, width=2,
+    trainers_per_leaf=1, n_clients=10,
+    pool=PoolProfile(kind="explicit", mdatasize=30.0,
+                     memcap=_FIG4_MEMCAP, pspeed=_FIG4_PSPEED),
+    rounds=50, model="paper-mlp-1m8", local_steps=2, batch_size=32,
+    comm_latency=0.002, timing="deterministic",
+    description="paper-fig4's degenerate online twin: zero jitter, "
+                "full-cohort flushes, no deadline — the event queue "
+                "runs but every round is lockstep, bit-identical to "
+                "the emulated track (the parity pin)."))

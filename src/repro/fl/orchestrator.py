@@ -251,16 +251,20 @@ class FederatedOrchestrator:
     # ==================================================================
     # batched engine: vmap'd local steps + per-level segment sums
     # ==================================================================
-    def _collect_batches(self, round_idx: int):
+    def _collect_batches(self, round_idx: int, ids=None):
         """Per-client step batches, bucketed by batch shape.
 
         Returns [(client_ids, stacked)] where stacked leaves are
         (C_bucket, local_steps, batch, ...) — identical values to what
-        the loop engine would feed step-by-step.
+        the loop engine would feed step-by-step. ``ids`` restricts the
+        cohort (the online track trains partial cohorts); ``None``
+        means every client, in id order.
         """
-        C = self.hierarchy.total_clients
+        if ids is None:
+            ids = range(self.hierarchy.total_clients)
         buckets: Dict[tuple, list] = {}
-        for c in range(C):
+        for c in ids:
+            c = int(c)
             steps = [self.data.client_batch(
                 c, self.batch_size, round_idx * self.local_steps + s)
                 for s in range(self.local_steps)]
@@ -388,6 +392,89 @@ class FederatedOrchestrator:
         stacked_updates, train_times = self._train_all_batched(r)
         new_params, agg_time = self._agg_batched(stacked_updates, placement)
         return new_params, float(np.max(train_times)), agg_time
+
+    # ==================================================================
+    # partial-cohort hooks (the online track's building blocks)
+    # ==================================================================
+    def train_cohort(self, ids, round_idx: int):
+        """Local training for a client subset, from the CURRENT global.
+
+        ``ids`` must be strictly increasing. Returns ``(stacked_updates,
+        train_times)`` row-aligned to ``ids``. A full-population cohort
+        routes through ``_train_all_batched`` — the exact executable
+        ``run_round`` uses — so a full-cohort call is bit-identical to
+        the synchronous round's training half (the degenerate parity
+        pin rides on this). Partial cohorts share the same per-bucket
+        jit'd fns; only the leading client axis differs.
+        """
+        ids = np.asarray(ids, np.int64)
+        self._check_population()
+        C = self.hierarchy.total_clients
+        if ids.size and np.any(np.diff(ids) <= 0):
+            raise ValueError("train_cohort ids must be strictly increasing")
+        if ids.size == C:
+            return self._train_all_batched(round_idx)
+        if ids.size == 0:
+            return None, np.zeros(0, np.float64)
+        t0 = time.perf_counter()
+        pieces: List[Tuple[np.ndarray, object]] = []
+        for bucket_ids, stacked in self._collect_batches(round_idx, ids):
+            sig = tuple(sorted((k, v.shape[2:], str(v.dtype))
+                               for k, v in stacked.items()))
+            new_p, _ = self._local_fn_for(sig)(self.params, stacked)
+            pieces.append((bucket_ids, new_p))
+        jax.block_until_ready(jax.tree.leaves(pieces[-1][1])[0])
+        wall = time.perf_counter() - t0
+
+        order = np.concatenate([b for b, _ in pieces])
+        if len(pieces) == 1 and np.array_equal(order, ids):
+            stacked_updates = pieces[0][1]
+        else:
+            # rows land in bucket order; argsort restores ascending id
+            # order == the ids order (ids are strictly increasing)
+            perm = jnp.asarray(np.argsort(order))
+            stacked_updates = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0)[perm],
+                *[p for _, p in pieces])
+
+        if self.timing == "deterministic":
+            per_client_dt = float(self.local_steps)
+        else:
+            per_client_dt = wall / ids.size
+        train_times = per_client_dt / self.clients.pspeed[ids]
+        return stacked_updates, train_times
+
+    def aggregate_cohort(self, stacked_updates, placement):
+        """Full-population hierarchical aggregation: the batched
+        engine's fused segment-sum path, returning ``(new_global,
+        agg_time)`` WITHOUT committing the params (callers decide —
+        the online track's degenerate rounds commit via
+        :meth:`set_global`). Bit-identical to ``run_round``'s
+        aggregation half."""
+        placement = np.asarray(placement, np.int64)
+        self.hierarchy.validate_placement(placement)
+        if self._agg is None:
+            self._agg = SegmentAggregator(self.hierarchy)
+        return self._agg_batched(stacked_updates, placement)
+
+    def cluster_delay(self, host: int, member_clients, n_parts: int
+                      ) -> float:
+        """The eq. 6 delay one aggregation flush charges: payload work
+        over the ACTUAL members' model sizes, scaled by the host's
+        pspeed plus per-part comm latency — the same composition the
+        synchronous engines charge per cluster, exposed for the online
+        track's per-flush timing."""
+        dt = self._det_cluster_work(member_clients)
+        return self._cluster_time(int(host), dt, int(n_parts))
+
+    def evaluate_global(self) -> tuple:
+        """(loss, accuracy) of the current global params — the same
+        eval batch/executable ``run_round`` scores with."""
+        return self._evaluate()
+
+    def set_global(self, params) -> None:
+        """Commit a new global model (the online root merge's result)."""
+        self.params = params
 
     # ==================================================================
     def _evaluate(self, n: int = 512) -> tuple:

@@ -1,0 +1,47 @@
+"""repro.online — the deterministic discrete-event online track.
+
+The paper's real deployment is asynchronous (MQTT + docker): client
+updates arrive whenever they arrive, rounds overlap, and Flag-Swap
+re-optimizes placement from *observed* processing delay. This package
+is that execution model behind the same propose/observe Environment
+protocol as the synchronous tracks:
+
+* :mod:`repro.online.clock` — a virtual clock over a deterministic
+  event heap (no wall-clock, total event order, replayable);
+* :mod:`repro.online.events` — the event vocabulary plus the seeded
+  per-client :class:`~repro.online.events.ArrivalProcess`;
+* :mod:`repro.online.async_fedavg` — buffered staleness-weighted async
+  FedAvg: count-or-deadline :class:`~repro.online.async_fedavg
+  .AggregatorBuffer` per slot, the ``(1+s)^(-alpha)`` weighting and the
+  root :func:`~repro.online.async_fedavg.async_merge_batched` (scalar
+  oracles registered in ``repro.analysis.parity``).
+
+``OnlineEnvironment`` — the wiring of all three over
+``FederatedOrchestrator`` — lives in
+:mod:`repro.experiments.environments` next to its siblings.
+"""
+from repro.online.async_fedavg import (
+    AggregatorBuffer,
+    AsyncConfig,
+    async_merge_batched,
+    flush_count,
+    staleness_weights,
+)
+from repro.online.clock import VirtualClock
+from repro.online.events import (
+    ArrivalProcess,
+    BufferDeadline,
+    BufferedPart,
+    BufferEntry,
+    PartialArrival,
+    RootComplete,
+    UpdateArrival,
+)
+
+__all__ = [
+    "VirtualClock", "ArrivalProcess",
+    "BufferEntry", "BufferedPart", "UpdateArrival", "PartialArrival",
+    "BufferDeadline", "RootComplete",
+    "AsyncConfig", "AggregatorBuffer", "flush_count",
+    "staleness_weights", "async_merge_batched",
+]

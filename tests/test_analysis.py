@@ -84,6 +84,17 @@ def test_rpl001_unregistering_a_kernel_fails_the_pass():
                for v in violations)
 
 
+def test_rpl001_unregistering_the_async_merge_fails_the_pass():
+    """The online track's root merge is a *_batched entry point under a
+    scanned prefix: deleting its oracle pair must trip the gate."""
+    contexts = engine.load_tree(REPO)
+    reg = tuple(p for p in REGISTRY
+                if p.fast != "repro.online.async_fedavg:async_merge_batched")
+    violations = parity.check(contexts, registry=reg, root=REPO)
+    assert any(v.code == "RPL001" and "async_merge_batched" in v.message
+               for v in violations)
+
+
 def test_rpl001_missing_test_file_fails_the_pass():
     contexts = engine.load_tree(REPO)
     reg = (OraclePair(fast="repro.kernels.tpd:batch_tpd_pallas",

@@ -161,6 +161,43 @@ def test_fig4_experiment_matches_seed_era_bench(emu_setup):
         pytest.approx(ref["pso"].total_processing_time)
 
 
+def test_degenerate_online_env_matches_emulated_bit_for_bit(emu_setup):
+    """The online track's parity pin: zero jitter + full-cohort flushes
+    + no deadline routes every round through the orchestrator's own
+    train/aggregate executables — the asynchronous world degenerates to
+    lockstep and reproduces EmulatedEnvironment exactly (tpd, losses,
+    accuracies, train/agg split), while the virtual clock still streams
+    the arrival events underneath."""
+    from repro.experiments import OnlineEnvironment
+    from repro.online import AsyncConfig
+    cfg, h = emu_setup
+    rounds = 3
+
+    env_ref = EmulatedEnvironment(_fresh_orchestrator(cfg, h))
+    env_onl = OnlineEnvironment(_fresh_orchestrator(cfg, h),
+                                AsyncConfig(), seed=0)
+    assert AsyncConfig().degenerate
+    obs_ref, obs_onl = [], []
+    for env, out in ((env_ref, obs_ref), (env_onl, obs_onl)):
+        strat = create_strategy("pso", h, seed=0)
+        env.begin()
+        for r in range(rounds):
+            p = np.asarray(strat.propose(r), np.int64)
+            obs = env.step(r, p)
+            strat.observe(p, obs.tpd)
+            out.append(obs)
+
+    for ref, onl in zip(obs_ref, obs_onl, strict=True):
+        assert onl.tpd == ref.tpd                      # bit-for-bit
+        assert onl.placement.tolist() == ref.placement.tolist()
+        for k in ("loss", "accuracy", "train_time", "agg_time"):
+            assert onl.metrics[k] == ref.metrics[k]
+        # the degenerate rounds are genuinely synchronous
+        assert onl.metrics["overlap"] == 0.0
+        assert onl.metrics["staleness_max"] == 0.0
+        assert onl.metrics["merged"] == float(h.total_clients)
+
+
 def test_same_strategy_instance_protocol_both_worlds(emu_setup):
     """One PlacementStrategy class runs unmodified in both environments
     through the identical propose/observe protocol (the API contract)."""
