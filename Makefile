@@ -10,7 +10,7 @@ BENCH_TOLERANCE ?= 0.25
 
 .PHONY: verify test lint analyze bench-round bench-fig4 bench-scale \
 	bench-scale-smoke bench-baseline experiments-smoke \
-	elastic-emulated-smoke online-smoke
+	elastic-emulated-smoke online-smoke faults-smoke
 
 verify test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -129,3 +129,25 @@ online-smoke:
 		--out artifacts/benchmarks/BENCH_online.json
 	PYTHONPATH=src $(PY) benchmarks/bench_online.py \
 		--validate artifacts/benchmarks/BENCH_online.json
+
+# the fault track end-to-end: both fault presets (seeded crashes,
+# drops+retries, link degradation, partitions, aggregator failovers,
+# quorum-gated merges) — small model, <=5 rounds, schema-v3-validated
+# artifacts, plus the BENCH_faults.json smoke (survivability /
+# recovery-overhead rows + the zero-fault bit-identity claim)
+faults-smoke:
+	PYTHONPATH=src $(PY) -m repro.experiments run online-faulty \
+		--rounds 5 --seeds 0 --strategies pso,random \
+		--set model=mlp-smoke \
+		--out artifacts/experiments/online_faulty_smoke.json
+	PYTHONPATH=src $(PY) -m repro.experiments run chaos \
+		--rounds 5 --seeds 0 --strategies pso,random \
+		--set model=mlp-smoke \
+		--out artifacts/experiments/chaos_smoke.json
+	PYTHONPATH=src $(PY) -m repro.experiments validate \
+		artifacts/experiments/online_faulty_smoke.json \
+		artifacts/experiments/chaos_smoke.json
+	PYTHONPATH=src $(PY) benchmarks/bench_faults.py --smoke \
+		--out artifacts/benchmarks/BENCH_faults.json
+	PYTHONPATH=src $(PY) benchmarks/bench_faults.py \
+		--validate artifacts/benchmarks/BENCH_faults.json

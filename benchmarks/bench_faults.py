@@ -1,0 +1,215 @@
+"""Fault track benchmark: survivability + recovery overhead under the
+seeded fault schedules (``repro.faults``).
+
+Two measurements per scenario row, both through ``run_experiment``:
+
+* the FAULTY run (the preset's seeded :class:`FaultProfile`: crashes,
+  transit drops with retry, link degradation, partitions, cadenced
+  aggregator failovers) — reporting SURVIVABILITY (the fraction of
+  rounds that still committed a merge) and the fault/retry/failover
+  totals the schedule realized;
+* the CLEAN TWIN — the same spec with the fault track stripped
+  (``faults=()``, no profile, no quorum gate, no retries) — whose total
+  TPD anchors RECOVERY OVERHEAD (faulty total TPD / clean total TPD:
+  what riding out the schedule cost in virtual time).
+
+The artifact also carries the track's correctness claim
+(``zero_fault_parity``): a schedule that is ARMED but never fires (one
+crash pinned far past the horizon) must replay the plain spec's tpd,
+loss and accuracy trajectories bit for bit — the fault machinery is on,
+the code path is exercised, and nothing changes. This is the same pin
+``tests/test_faults.py`` enforces, measured here on the benchmark
+workload.
+
+Writes the schema-versioned ``BENCH_faults.json`` (CI's ``faults-smoke``
+job runs ``--smoke`` and schema-validates the upload).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.experiments import get_scenario, run_experiment
+
+OUT = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
+BENCH_SCHEMA = "repro.benchmarks/faults"
+BENCH_SCHEMA_VERSION = 1
+
+_ROW_KEYS = ("scenario", "clients", "slots", "rounds", "seeds",
+             "strategies", "faulty_s", "clean_s", "survivability",
+             "recovery_overhead", "faults_total", "dropped_total",
+             "degraded_flushes", "failovers", "merged_mean")
+
+# strips the fault track off a preset: the clean twin every faulty run
+# is measured against
+_CLEAN = {"faults": (), "fault_profile": None, "quorum_frac": 0.0,
+          "retry_limit": 0}
+
+
+def bench_scenario(name, strategies, seeds, *, rounds=None,
+                   overrides=None) -> dict:
+    spec = get_scenario(name)
+    if overrides:
+        spec = spec.with_overrides(**overrides)
+    rounds = rounds if rounds is not None else spec.rounds
+    h = spec.make_hierarchy()
+    print(f"== {name}: {h.total_clients} clients, {h.dimensions} slots, "
+          f"{rounds} rounds x {list(seeds)} seeds x {strategies} ==")
+
+    t0 = time.perf_counter()
+    res_faulty = run_experiment(spec, strategies, rounds=rounds,
+                                seeds=seeds, progress=False)
+    t_faulty = time.perf_counter() - t0
+
+    clean = spec.with_overrides(**_CLEAN)
+    t0 = time.perf_counter()
+    res_clean = run_experiment(clean, strategies, rounds=rounds,
+                               seeds=seeds, progress=False)
+    t_clean = time.perf_counter() - t0
+
+    merged = [v for r in res_faulty.runs for v in r.metrics["merged"]]
+
+    # cumulative counters: the per-run final value is the run's total
+    def final_total(key):
+        return float(sum(r.metrics[key][-1] for r in res_faulty.runs))
+
+    faulty_tpd = float(np.mean([r.total_tpd for r in res_faulty.runs]))
+    clean_tpd = float(np.mean([r.total_tpd for r in res_clean.runs]))
+    row = {
+        "scenario": name, "clients": h.total_clients,
+        "slots": h.dimensions, "rounds": rounds, "seeds": list(seeds),
+        "strategies": list(strategies),
+        "faulty_s": t_faulty, "clean_s": t_clean,
+        "survivability": float(np.mean([v > 0 for v in merged])),
+        "recovery_overhead": faulty_tpd / clean_tpd,
+        "faults_total": final_total("faults"),
+        "dropped_total": final_total("dropped_updates"),
+        "degraded_flushes": final_total("degraded_flushes"),
+        "failovers": final_total("failovers"),
+        "merged_mean": float(np.mean(merged)),
+    }
+    print(f"   faulty {t_faulty:6.2f}s | clean {t_clean:6.2f}s | "
+          f"survivability {row['survivability']:.2f} | overhead "
+          f"{row['recovery_overhead']:.2f}x | {row['faults_total']:.0f} "
+          f"faults, {row['dropped_total']:.0f} dropped, "
+          f"{row['failovers']:.0f} failovers")
+    return row
+
+
+def zero_fault_parity_claim(rounds, seeds, overrides=None) -> bool:
+    """An armed-but-never-firing schedule (the fault machinery is ON)
+    must replay the plain spec bit for bit."""
+    spec = get_scenario("online-fig4")
+    if overrides:
+        spec = spec.with_overrides(**overrides)
+    armed = spec.with_overrides(faults=json.dumps(
+        [{"fault": "ClientCrash", "client": 0, "at_round": 10 ** 6}]))
+    res_p = run_experiment(spec, ["pso"], rounds=rounds, seeds=seeds,
+                           progress=False)
+    res_a = run_experiment(armed, ["pso"], rounds=rounds, seeds=seeds,
+                           progress=False)
+    same = all(
+        rp.tpds == ra.tpds
+        and rp.metrics["accuracy"] == ra.metrics["accuracy"]
+        and rp.metrics["loss"] == ra.metrics["loss"]
+        for rp, ra in zip(res_p.runs, res_a.runs, strict=True))
+    print(f"   armed-but-silent schedule == plain run: {same}")
+    return same
+
+
+def validate_bench_dict(d) -> list:
+    """Schema gate for BENCH_faults.json; returns problems (empty = ok)."""
+    errors = []
+    if not isinstance(d, dict):
+        return ["artifact is not a JSON object"]
+    if d.get("schema") != BENCH_SCHEMA:
+        errors.append(f"schema != {BENCH_SCHEMA!r}")
+    if d.get("schema_version") != BENCH_SCHEMA_VERSION:
+        errors.append(f"schema_version != {BENCH_SCHEMA_VERSION}")
+    rows = d.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errors.append("rows missing/empty")
+        return errors
+    for i, row in enumerate(rows):
+        for k in _ROW_KEYS:
+            if k not in row:
+                errors.append(f"rows[{i}] missing {k!r}")
+        if not 0 < row.get("survivability", 0) <= 1:
+            errors.append(f"rows[{i}] survivability out of (0, 1] — "
+                          "no round committed a merge")
+        if row.get("recovery_overhead", 0) <= 0:
+            errors.append(f"rows[{i}] recovery_overhead not positive")
+        if row.get("faults_total", 0) <= 0:
+            errors.append(f"rows[{i}] schedule injected no faults")
+    if d.get("zero_fault_parity") is not True:
+        errors.append("zero_fault_parity is not true "
+                      "(the armed-but-silent parity pin failed)")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: mlp-smoke model, 5 rounds")
+    ap.add_argument("--out", default=str(OUT / "BENCH_faults.json"))
+    ap.add_argument("--validate", metavar="PATH",
+                    help="schema-check an existing artifact and exit")
+    args = ap.parse_args(argv)
+
+    if args.validate:
+        d = json.loads(Path(args.validate).read_text())
+        errors = validate_bench_dict(d)
+        if errors:
+            print(f"{args.validate}: INVALID")
+            for e in errors:
+                print(f"  - {e}")
+            return 1
+        print(f"{args.validate}: OK ({len(d['rows'])} rows)")
+        for row in d["rows"]:
+            print(f"  {row['scenario']:16s} survivability "
+                  f"{row['survivability']:.2f}, overhead "
+                  f"{row['recovery_overhead']:.2f}x, "
+                  f"{row['faults_total']:.0f} faults / "
+                  f"{row['failovers']:.0f} failovers")
+        return 0
+
+    results = {"schema": BENCH_SCHEMA,
+               "schema_version": BENCH_SCHEMA_VERSION,
+               "smoke": bool(args.smoke), "rows": []}
+    if args.smoke:
+        overrides = {"model": "mlp-smoke"}
+        results["rows"].append(bench_scenario(
+            "online-faulty", ["pso"], (0,), rounds=5,
+            overrides=overrides))
+        results["rows"].append(bench_scenario(
+            "chaos", ["pso"], (0,), rounds=5, overrides=overrides))
+        results["zero_fault_parity"] = zero_fault_parity_claim(
+            3, (0,), overrides=overrides)
+    else:
+        results["rows"].append(bench_scenario(
+            "online-faulty", ["pso", "random"], (0, 1), rounds=25))
+        results["rows"].append(bench_scenario(
+            "chaos", ["pso", "random"], (0, 1), rounds=25))
+        results["zero_fault_parity"] = zero_fault_parity_claim(
+            10, (0, 1))
+
+    errors = validate_bench_dict(results)
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=1))
+    print(f"-> wrote {out}")
+    if errors:
+        print("INVALID artifact:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -57,10 +57,11 @@ def _run_scenarios():
 
 def build_suite(args):
     """[(name, thunk, checker)] — the single source of the banner."""
-    from benchmarks import (bench_drift, bench_fig3_simulation,
-                            bench_fig4_cluster, bench_kernels,
-                            bench_online, bench_optimizers,
-                            bench_roofline, bench_two_tier)
+    from benchmarks import (bench_drift, bench_faults,
+                            bench_fig3_simulation, bench_fig4_cluster,
+                            bench_kernels, bench_online,
+                            bench_optimizers, bench_roofline,
+                            bench_two_tier)
 
     def roofline():
         for mesh in ("16x16", "2x16x16"):
@@ -87,6 +88,9 @@ def build_suite(args):
         ("online track (async vs lockstep)",
          lambda: bench_online.main(["--smoke"] if not args.full else []),
          lambda rc: "bench_online failed" if rc != 0 else None),
+        ("fault track (survivability + recovery overhead)",
+         lambda: bench_faults.main(["--smoke"] if not args.full else []),
+         lambda rc: "bench_faults failed" if rc != 0 else None),
         ("roofline", roofline, None),
     ]
     return suite

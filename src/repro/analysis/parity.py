@@ -36,6 +36,7 @@ SCAN_PREFIXES = (
     "src/repro/kernels/",
     "src/repro/experiments/",
     "src/repro/online/",
+    "src/repro/faults/",
 )
 _BATCH_NAME = re.compile(r"^batch(ed)?_|_batched$")
 
@@ -109,6 +110,12 @@ REGISTRY: Tuple[OraclePair, ...] = (
         fast="repro.online.async_fedavg:async_merge_batched",
         oracle="repro.online.async_fedavg:_async_merge_ref",
         tests=("tests/test_online.py",),
+    ),
+    # --- fault track: quorum-gated participation-damped merge ---
+    OraclePair(
+        fast="repro.faults.tolerance:quorum_merge_batched",
+        oracle="repro.faults.tolerance:_quorum_merge_ref",
+        tests=("tests/test_faults.py",),
     ),
     # --- Pallas kernels: each entry point vs. its jnp oracle ---
     OraclePair(

@@ -31,6 +31,20 @@ import numpy as np
 
 from repro.core.cost_model import CostModel, TwoTierCostModel
 from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, slot_remap
+from repro.faults import (
+    AggregatorFailure,
+    ClientCrash,
+    ClientRecover,
+    FaultAt,
+    FaultSchedule,
+    LinkDegrade,
+    NetworkPartition,
+    RetryPolicy,
+    UpdateDrop,
+    fault_from_dict,
+    quorum_count,
+    quorum_merge_batched,
+)
 from repro.fl.distributed import elastic_rehierarchize
 from repro.online import (
     AggregatorBuffer,
@@ -165,6 +179,16 @@ class SimulatedEnvironment:
                                 tpd=tpd,
                                 topology_version=self.topology_version)
 
+    # -- checkpoint/restore --------------------------------------------------
+    def checkpoint_state(self) -> dict:
+        return {"kind": self.kind,
+                "topology_version": int(self.topology_version),
+                "capacity": int(self._capacity)}
+
+    def restore_state(self, state: dict, store=None) -> None:
+        self.topology_version = int(state["topology_version"])
+        self._capacity = int(state["capacity"])
+
 
 class EmulatedEnvironment:
     """The Fig. 4 world: rounds cost what the federated run measures.
@@ -183,13 +207,35 @@ class EmulatedEnvironment:
     re-hierarchization rule is the SAME capacity-window logic, so one
     event schedule replays the identical hierarchy/``topology_version``
     sequence on both tracks.
+
+    **Fault injection** (``repro.faults``): faults apply at ROUND
+    granularity — this track has no intra-round clock — with the same
+    round-boundary window expiry the online track uses, so one
+    schedule means the same thing on both tracks. A round with active
+    faults routes through ``FederatedOrchestrator.run_round_faulty``
+    (down/partitioned clients sit out, dropped updates are excluded
+    from the quorum-gated merge, down hosts fail over); a fault-free
+    round delegates to plain ``run_round``, keeping zero-fault runs
+    bit-identical to today's (the parity pin).
     """
     kind = "emulated"
 
-    def __init__(self, orchestrator):
+    def __init__(self, orchestrator, faults: Optional[FaultSchedule] = None,
+                 quorum_frac: float = 0.0):
         self.orchestrator = orchestrator
         self.clients = orchestrator.clients
         self._cost_model: Optional[CostModel] = None
+
+        self.faults = faults if faults is not None else FaultSchedule()
+        self.quorum_frac = float(quorum_frac)
+        self._fault_mode = (not self.faults.empty) or self.quorum_frac > 0
+        self._down: set = set()
+        self._down_until: Dict[int, int] = {}
+        self._degraded: Dict[int, tuple] = {}   # c -> (factor, until)
+        self._partitioned: Dict[int, int] = {}  # c -> until_round
+        self._fault_stats: Dict[str, float] = {
+            "faults": 0.0, "dropped_updates": 0.0,
+            "degraded_flushes": 0.0, "failovers": 0.0}
 
     @property
     def hierarchy(self) -> Hierarchy:
@@ -228,15 +274,169 @@ class EmulatedEnvironment:
         return update
 
     def step(self, round_idx: int, placement) -> RoundObservation:
-        rec = self.orchestrator.run_round(round_idx, placement)
+        if not self._fault_mode:
+            rec = self.orchestrator.run_round(round_idx, placement)
+            return RoundObservation(
+                round_idx=round_idx,
+                placement=np.asarray(rec.placement, np.int64),
+                tpd=float(rec.tpd),
+                metrics={"loss": rec.loss, "accuracy": rec.accuracy,
+                         "train_time": rec.train_time,
+                         "agg_time": rec.agg_time},
+                topology_version=self.topology_version)
+
+        dropped = self._apply_round_faults(round_idx,
+                                           np.asarray(placement, np.int64))
+        absent = self._down | set(sorted(self._partitioned))
+        rec, extra = self.orchestrator.run_round_faulty(
+            round_idx, placement, down=absent, dropped=dropped,
+            degraded={c: f for c, (f, _u)
+                      in sorted(self._degraded.items())},
+            quorum_frac=self.quorum_frac)
+        self._fault_stats["dropped_updates"] += extra["dropped_updates"]
+        self._fault_stats["degraded_flushes"] += extra["degraded_flushes"]
+        self._fault_stats["failovers"] += extra["failovers"]
+        metrics = {"loss": rec.loss, "accuracy": rec.accuracy,
+                   "train_time": rec.train_time,
+                   "agg_time": rec.agg_time,
+                   "merged": extra["merged"],
+                   "down": float(len(self._down)),
+                   "partitioned": float(len(self._partitioned))}
+        for k in sorted(self._fault_stats):
+            metrics[k] = float(self._fault_stats[k])
         return RoundObservation(
             round_idx=round_idx,
             placement=np.asarray(rec.placement, np.int64),
-            tpd=float(rec.tpd),
-            metrics={"loss": rec.loss, "accuracy": rec.accuracy,
-                     "train_time": rec.train_time,
-                     "agg_time": rec.agg_time},
+            tpd=float(rec.tpd), metrics=metrics,
             topology_version=self.topology_version)
+
+    def _apply_round_faults(self, r: int, placement: np.ndarray) -> set:
+        """Round-granular fault semantics: expire timed windows at the
+        round boundary, then apply this round's faults in the
+        schedule's canonical order. Returns the set of clients whose
+        updates are dropped THIS round (drops are instantaneous here —
+        the retry backoff is sub-round, which this track cannot
+        resolve, so an emulated drop is a lost update)."""
+        C = self.orchestrator.hierarchy.total_clients
+        for c in [c for c in sorted(self._down_until)
+                  if self._down_until[c] <= r]:
+            self._down_until.pop(c)
+            self._down.discard(c)
+        for c in [c for c in sorted(self._degraded)
+                  if self._degraded[c][1] <= r]:
+            self._degraded.pop(c)
+        for c in [c for c in sorted(self._partitioned)
+                  if self._partitioned[c] <= r]:
+            self._partitioned.pop(c)
+
+        dropped: set = set()
+        for f in self.faults.for_round(r):
+            self._fault_stats["faults"] += 1.0
+            if isinstance(f, ClientCrash):
+                if f.client < C:
+                    self._down.add(f.client)
+                    if f.down_rounds > 0:
+                        self._down_until[f.client] = \
+                            f.at_round + f.down_rounds
+            elif isinstance(f, ClientRecover):
+                self._down.discard(f.client)
+                self._down_until.pop(f.client, None)
+            elif isinstance(f, UpdateDrop):
+                if f.client < C:
+                    dropped.add(f.client)
+            elif isinstance(f, LinkDegrade):
+                if f.client < C:
+                    self._degraded[f.client] = (
+                        float(f.factor), f.at_round + f.for_rounds)
+            elif isinstance(f, AggregatorFailure):
+                if f.slot < len(placement):
+                    host = int(placement[f.slot])
+                    self._down.add(host)
+                    if f.down_rounds > 0:
+                        self._down_until[host] = max(
+                            self._down_until.get(host, 0),
+                            f.at_round + f.down_rounds)
+            elif isinstance(f, NetworkPartition):
+                for c in f.clients:
+                    if c < C:
+                        self._partitioned[c] = max(
+                            self._partitioned.get(c, 0),
+                            f.at_round + f.for_rounds)
+            else:
+                raise TypeError(f"unknown fault event {f!r}")
+        return dropped
+
+    # -- checkpoint/restore --------------------------------------------------
+    def checkpoint_state(self) -> dict:
+        return {
+            "kind": self.kind,
+            "down": sorted(int(c) for c in self._down),
+            "down_until": [[int(c), int(r)] for c, r
+                           in sorted(self._down_until.items())],
+            "degraded": [[int(c), float(f), int(u)] for c, (f, u)
+                         in sorted(self._degraded.items())],
+            "partitioned": [[int(c), int(u)] for c, u
+                            in sorted(self._partitioned.items())],
+            "fault_stats": {k: float(v) for k, v
+                            in sorted(self._fault_stats.items())},
+            "orchestrator": self.orchestrator.runtime_state(),
+        }
+
+    def restore_state(self, state: dict, store=None) -> None:
+        self._down = {int(c) for c in state["down"]}
+        self._down_until = {int(c): int(r)
+                            for c, r in state["down_until"]}
+        self._degraded = {int(c): (float(f), int(u))
+                          for c, f, u in state["degraded"]}
+        self._partitioned = {int(c): int(u)
+                             for c, u in state["partitioned"]}
+        self._fault_stats = {str(k): float(v) for k, v
+                             in sorted(state["fault_stats"].items())}
+        self.orchestrator.load_runtime_state(state["orchestrator"])
+
+
+# ---------------------------------------------------------------------------
+# event codec for checkpointing: the online event vocabulary <-> JSON
+# ---------------------------------------------------------------------------
+def _encode_entries(entries) -> list:
+    return [[int(e.client), int(e.version)] for e in entries]
+
+
+def _decode_entries(entries) -> tuple:
+    return tuple(BufferEntry(int(c), int(v)) for c, v in entries)
+
+
+def _encode_event(ev) -> dict:
+    if isinstance(ev, UpdateArrival):
+        return {"t": "arrival", "client": int(ev.client),
+                "version": int(ev.version)}
+    if isinstance(ev, PartialArrival):
+        return {"t": "partial", "slot": int(ev.slot), "src": int(ev.src),
+                "entries": _encode_entries(ev.entries)}
+    if isinstance(ev, BufferDeadline):
+        return {"t": "deadline", "slot": int(ev.slot),
+                "epoch": int(ev.epoch)}
+    if isinstance(ev, RootComplete):
+        return {"t": "root", "entries": _encode_entries(ev.entries)}
+    if isinstance(ev, FaultAt):
+        return {"t": "fault", "fault": ev.fault.to_dict()}
+    raise TypeError(f"cannot checkpoint online event {ev!r}")
+
+
+def _decode_event(d: dict):
+    kind = d["t"]
+    if kind == "arrival":
+        return UpdateArrival(int(d["client"]), int(d["version"]))
+    if kind == "partial":
+        return PartialArrival(slot=int(d["slot"]), src=int(d["src"]),
+                              entries=_decode_entries(d["entries"]))
+    if kind == "deadline":
+        return BufferDeadline(int(d["slot"]), int(d["epoch"]))
+    if kind == "root":
+        return RootComplete(_decode_entries(d["entries"]))
+    if kind == "fault":
+        return FaultAt(fault_from_dict(d["fault"]))
+    raise ValueError(f"unknown checkpointed event kind {kind!r}")
 
 
 class OnlineEnvironment:
@@ -278,11 +478,31 @@ class OnlineEnvironment:
     ``sync_population`` exactly as in ``EmulatedEnvironment``, with
     in-flight updates re-keyed across the id remap (departed clients'
     updates are dropped; survivors' stay in transit).
+
+    **Fault injection** (``repro.faults``): a non-empty
+    :class:`FaultSchedule` wraps each of a round's faults in a
+    :class:`FaultAt` event at ``t_round + offset`` on the SAME virtual
+    clock, so faulty runs replay bit-identically. Crashed/partitioned
+    clients leave the dispatch cohort (window expiry at round
+    boundaries); a crash voids the client's undelivered update and, if
+    it hosted a slot, fails the slot over to a live unplaced client
+    (buffer contents re-home under the new host, and the swap raises
+    the same identity-``TopologyUpdate`` pulse as a re-optimization);
+    dropped updates re-deliver under the :class:`RetryPolicy`'s
+    virtual-time exponential backoff; a partition holds in-flight
+    arrivals and re-injects them when it heals. ``quorum_frac > 0``
+    gates root merges on live-population quorum and damps committed
+    merges by the arrived fraction (:func:`quorum_merge_batched`).
+    With an empty schedule and ``quorum_frac == 0`` every fault hook
+    is dormant and the run is bit-identical to the fault-free
+    environment (the zero-fault parity pin).
     """
     kind = "online"
 
     def __init__(self, orchestrator, config: Optional[AsyncConfig] = None,
-                 seed: int = 0):
+                 seed: int = 0, faults: Optional[FaultSchedule] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 quorum_frac: float = 0.0):
         if orchestrator.engine != "batched":
             raise ValueError("OnlineEnvironment needs the batched round "
                              f"engine, got {orchestrator.engine!r}")
@@ -292,6 +512,24 @@ class OnlineEnvironment:
         self.clock = VirtualClock()
         self._arrival = ArrivalProcess(seed, self.cfg.jitter)
         self._cost_model: Optional[CostModel] = None
+
+        # fault injection + tolerance (dormant when the schedule is
+        # empty and no quorum is configured — the zero-fault parity pin)
+        self.faults = faults if faults is not None else FaultSchedule()
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.quorum_frac = float(quorum_frac)
+        self._fault_mode = (not self.faults.empty) or self.quorum_frac > 0
+        self._down: set = set()               # crashed clients
+        self._down_until: Dict[int, int] = {}  # auto-revival round
+        self._degraded: Dict[int, tuple] = {}  # c -> (factor, until_round)
+        self._partitioned: Dict[int, int] = {}  # c -> until_round
+        self._void: set = set()               # (c, v) voided by a crash
+        self._drop_pending: set = set()       # (c, v) marked lost in transit
+        self._retry_count: Dict[tuple, int] = {}
+        self._held: List[tuple] = []          # partition-held arrivals
+        self._fault_stats: Dict[str, float] = {
+            "faults": 0.0, "dropped_updates": 0.0, "retries": 0.0,
+            "degraded_flushes": 0.0, "failovers": 0.0}
 
         # routing + buffers are (re)built lazily from the placement each
         # step; see _set_placement
@@ -417,7 +655,16 @@ class OnlineEnvironment:
         def alive(c: int) -> int:
             if remap is None:
                 return c
-            return int(remap[c]) if c < len(remap) and remap[c] >= 0 else -1
+            if c >= len(remap):
+                # a client id the resize log never saw: the engine held
+                # state for a client that was already renumbered away —
+                # silent corruption, so fail loudly (see the post-rebuild
+                # queue validation for the arrival-event twin)
+                raise RuntimeError(
+                    f"online event engine holds state for client {c} "
+                    f"outside the remap domain [0, {len(remap)}) — "
+                    "stale state for a retired/renumbered client")
+            return int(remap[c]) if remap[c] >= 0 else -1
 
         self._arrival.migrate(remap)
         self._client_delay = {
@@ -434,6 +681,31 @@ class OnlineEnvironment:
                                     key=lambda kv: kv[0])
             if alive(c) >= 0}
 
+        # fault state rides the same remap: survivors keep their fault
+        # windows, departed clients' entries are dropped with their ids
+        self._down = {alive(c) for c in sorted(self._down)
+                      if alive(c) >= 0}
+        self._down_until = {
+            alive(c): r for c, r in sorted(self._down_until.items())
+            if alive(c) >= 0}
+        self._degraded = {
+            alive(c): v for c, v in sorted(self._degraded.items())
+            if alive(c) >= 0}
+        self._partitioned = {
+            alive(c): r for c, r in sorted(self._partitioned.items())
+            if alive(c) >= 0}
+        self._void = {(alive(c), v) for (c, v) in sorted(self._void)
+                      if alive(c) >= 0}
+        self._drop_pending = {
+            (alive(c), v) for (c, v) in sorted(self._drop_pending)
+            if alive(c) >= 0}
+        self._retry_count = {
+            (alive(c), v): n
+            for (c, v), n in sorted(self._retry_count.items())
+            if alive(c) >= 0}
+        self._held = [(alive(c), v) for (c, v) in self._held
+                      if alive(c) >= 0]
+
         pend = self.clock.pending()
         self.clock.replace([])
         for t, _seq, ev in pend:
@@ -447,6 +719,10 @@ class OnlineEnvironment:
                     if nc >= 0:
                         self.clock.schedule(
                             t, UpdateArrival(nc, e.version))
+            elif isinstance(ev, FaultAt):
+                # fault events carry round indices, not client routes;
+                # they survive the migration verbatim
+                self.clock.schedule(t, ev)
             # BufferDeadline: dropped — the buffers rebuild empty
         for buf in self._buffers:
             for part in buf.take():
@@ -455,6 +731,21 @@ class OnlineEnvironment:
                     if nc >= 0:
                         self.clock.schedule(
                             self.clock.now, UpdateArrival(nc, e.version))
+
+        # the post-rebuild invariant the elastic track rests on: every
+        # arrival still queued routes to a LIVE client id. A violation
+        # means a ClientLeave retired a client whose events survived —
+        # a silent correctness hazard, so fail loudly instead of letting
+        # the arrival index out of the new routing table
+        C = len(self.clients)
+        stale = sorted({ev.client for _t, _s, ev in self.clock.pending()
+                        if isinstance(ev, UpdateArrival)
+                        and not 0 <= ev.client < C})
+        if stale:
+            raise RuntimeError(
+                f"sync_topology left queued arrivals for retired "
+                f"clients {stale} (pool now has {C} clients) — the "
+                "event engine migration is corrupt")
 
         # force a full routing/buffer rebuild at the next step (the
         # strategy proposes a placement for the NEW hierarchy then)
@@ -470,9 +761,20 @@ class OnlineEnvironment:
         self._round = round_idx
         t_r = self.clock.now
 
+        # a degenerate config stays on the lockstep fast path ONLY while
+        # the fault layer is dormant — any fault/quorum config must flow
+        # through the event queue where faults can actually bite
+        lockstep = self.cfg.degenerate and not self._fault_mode
+        if self._fault_mode:
+            self._expire_faults(round_idx, t_r)
+            for f in self.faults.for_round(round_idx):
+                self.clock.schedule(t_r + f.offset, FaultAt(f))
+
         C = self.hierarchy.total_clients
         cohort = np.asarray([c for c in range(C)
-                             if c not in self._in_flight], np.int64)
+                             if c not in self._in_flight
+                             and c not in self._down
+                             and c not in self._partitioned], np.int64)
         overlap = 1.0 - cohort.size / C
         stacked, train_times = orch.train_cohort(cohort, round_idx)
         if cohort.size:
@@ -480,10 +782,14 @@ class OnlineEnvironment:
                 c = int(c)
                 key = (c, round_idx)
                 self._sent[key] = t_r
-                if not self.cfg.degenerate:
+                if not lockstep:
                     self._store[key] = jax.tree.map(
                         lambda x, j=j: x[j], stacked)
                 delay = float(train_times[j]) * self._arrival.factor(c)
+                if self._degraded:
+                    dg = self._degraded.get(c)
+                    if dg is not None:
+                        delay *= dg[0]
                 self.clock.schedule(t_r + delay,
                                     UpdateArrival(c, round_idx))
                 self._in_flight.add(c)
@@ -491,7 +797,7 @@ class OnlineEnvironment:
                 f"t={t_r:.4f} r{round_idx}: dispatched {cohort.size}/{C} "
                 f"clients ({len(self._in_flight)} now in flight)")
 
-        if self.cfg.degenerate:
+        if lockstep:
             tpd, extra = self._step_degenerate(round_idx, placement,
                                                cohort, stacked,
                                                train_times, t_r)
@@ -501,6 +807,11 @@ class OnlineEnvironment:
         loss, acc = orch.evaluate_global()
         metrics = {"loss": loss, "accuracy": acc, "overlap": overlap,
                    "reopt_swaps": float(self._reopt_swaps), **extra}
+        if self._fault_mode:
+            metrics["down"] = float(len(self._down))
+            metrics["partitioned"] = float(len(self._partitioned))
+            for k in sorted(self._fault_stats):
+                metrics[k] = float(self._fault_stats[k])
         log, self._trace = self._trace, []
         return RoundObservation(
             round_idx=round_idx, placement=self._placement.copy(),
@@ -577,14 +888,59 @@ class OnlineEnvironment:
                     self._flush(ev.slot, t, why="deadline")
             elif isinstance(ev, RootComplete):
                 self._merge(t, ev.entries, r)
+            elif isinstance(ev, FaultAt):
+                self._apply_fault(t, ev.fault, r)
             else:
                 raise TypeError(f"unknown online event {ev!r}")
         tpd = (self.clock.now - t_r) * self.orchestrator.time_scale
         return tpd, dict(self._merge_stats)
 
     def _on_arrival(self, t: float, ev: UpdateArrival) -> None:
+        key = (ev.client, ev.version)
+        if self._fault_mode:
+            if key in self._void:
+                # the sender crashed while this update was in transit
+                self._void.discard(key)
+                self._trace.append(
+                    f"t={t:.4f} arrival c{ev.client} v{ev.version} "
+                    "voided (sender crashed)")
+                return
+            if ev.client in self._partitioned:
+                # hold the delivery; the partition's round-boundary
+                # expiry re-injects it at the healing instant
+                self._held.append(key)
+                self._trace.append(
+                    f"t={t:.4f} arrival c{ev.client} v{ev.version} "
+                    "held (network partition)")
+                return
+            if key in self._drop_pending:
+                self._drop_pending.discard(key)
+                attempt = self._retry_count.get(key, 0)
+                if attempt < self.retry.max_retries:
+                    self._retry_count[key] = attempt + 1
+                    self._fault_stats["retries"] += 1.0
+                    backoff = self.retry.delay(attempt)
+                    self.clock.schedule(
+                        t + backoff, UpdateArrival(ev.client, ev.version))
+                    self._trace.append(
+                        f"t={t:.4f} DROP c{ev.client} v{ev.version}: "
+                        f"retry {attempt + 1}/{self.retry.max_retries} "
+                        f"after {backoff:.4f}")
+                    return
+                # retries exhausted: the update is permanently lost and
+                # the client re-enters the next dispatch cohort
+                self._sent.pop(key, None)
+                self._store.pop(key, None)
+                self._retry_count.pop(key, None)
+                self._in_flight.discard(ev.client)
+                self._fault_stats["dropped_updates"] += 1.0
+                self._trace.append(
+                    f"t={t:.4f} DROP c{ev.client} v{ev.version}: "
+                    "retries exhausted, update lost")
+                return
+            self._retry_count.pop(key, None)
         self._in_flight.discard(ev.client)
-        sent = self._sent.pop((ev.client, ev.version), None)
+        sent = self._sent.pop(key, None)
         if sent is not None:
             self._observe_delay(ev.client, t - sent)
         slot = int(self._client_slot[ev.client])
@@ -624,18 +980,43 @@ class OnlineEnvironment:
 
     def _merge(self, t: float, entries, r: int) -> None:
         """The root flush landed: staleness-weighted merge into the
-        global model; the round concludes here."""
+        global model; the round concludes here. With ``quorum_frac``
+        configured the merge is gated on live-population quorum
+        (refused = a degraded flush, the model holds) and committed
+        merges are damped by the arrived fraction."""
         orch = self.orchestrator
         order = sorted(entries, key=lambda e: (e.version, e.client))
+        if self.quorum_frac > 0.0:
+            C = self.hierarchy.total_clients
+            live = C - len(self._down) - len(self._partitioned)
+            need = quorum_count(max(1, live), self.quorum_frac)
+            if len(order) < need:
+                for e in order:
+                    self._store.pop((e.client, e.version), None)
+                self._fault_stats["degraded_flushes"] += 1.0
+                self._trace.append(
+                    f"t={t:.4f} r{r}: DEGRADED flush — {len(order)} "
+                    f"updates < quorum {need} (live {live}), merge "
+                    "refused, model holds")
+                self._merge_stats = {"merged": 0.0,
+                                     "staleness_mean": 0.0,
+                                     "staleness_max": 0.0}
+                return
         clients = np.asarray([e.client for e in order], np.int64)
         versions = np.asarray([e.version for e in order], np.int64)
         staleness = (r - versions).astype(np.float64)
         base_w = orch.weights[clients]
         trees = [self._store.pop((e.client, e.version)) for e in order]
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
-        new_global = async_merge_batched(
-            orch.params, stacked, base_w, staleness,
-            self.cfg.staleness_alpha, self.cfg.server_lr)
+        if self.quorum_frac > 0.0:
+            arrived = len(order) / self.hierarchy.total_clients
+            new_global = quorum_merge_batched(
+                orch.params, stacked, base_w, staleness,
+                self.cfg.staleness_alpha, self.cfg.server_lr, arrived)
+        else:
+            new_global = async_merge_batched(
+                orch.params, stacked, base_w, staleness,
+                self.cfg.staleness_alpha, self.cfg.server_lr)
         orch.set_global(new_global)
         self._trace.append(
             f"t={t:.4f} r{r}: root merge of {len(order)} updates "
@@ -705,12 +1086,265 @@ class OnlineEnvironment:
                 return s
         return None
 
+    # -- fault injection + tolerance -----------------------------------------
+    def _expire_faults(self, r: int, t_r: float) -> None:
+        """Round-boundary expiry of every timed fault window, then
+        re-injection of arrivals a healed partition was holding."""
+        for c in [c for c in sorted(self._down_until)
+                  if self._down_until[c] <= r]:
+            self._down_until.pop(c)
+            self._down.discard(c)
+            self._trace.append(f"t={t_r:.4f} r{r}: c{c} back up")
+        for c in [c for c in sorted(self._degraded)
+                  if self._degraded[c][1] <= r]:
+            self._degraded.pop(c)
+            self._trace.append(f"t={t_r:.4f} r{r}: c{c} link restored")
+        for c in [c for c in sorted(self._partitioned)
+                  if self._partitioned[c] <= r]:
+            self._partitioned.pop(c)
+            self._trace.append(f"t={t_r:.4f} r{r}: c{c} partition healed")
+        if self._held:
+            still: List[tuple] = []
+            for (c, v) in self._held:
+                if c in self._partitioned:
+                    still.append((c, v))
+                else:
+                    self.clock.schedule(t_r, UpdateArrival(c, v))
+                    self._trace.append(
+                        f"t={t_r:.4f} r{r}: held update c{c} v{v} "
+                        "re-injected")
+            self._held = still
+
+    def _apply_fault(self, t: float, f, r: int) -> None:
+        """One FaultAt popped off the virtual clock."""
+        self._fault_stats["faults"] += 1.0
+        C = self.hierarchy.total_clients
+        if isinstance(f, ClientCrash):
+            until = f.at_round + f.down_rounds if f.down_rounds > 0 \
+                else None
+            self._crash_client(t, f.client, until)
+        elif isinstance(f, ClientRecover):
+            self._down.discard(f.client)
+            self._down_until.pop(f.client, None)
+            self._trace.append(f"t={t:.4f} FAULT recover c{f.client}")
+        elif isinstance(f, UpdateDrop):
+            self._drop_update(t, f.client)
+        elif isinstance(f, LinkDegrade):
+            if f.client < C:
+                self._degraded[f.client] = (float(f.factor),
+                                            f.at_round + f.for_rounds)
+                self._trace.append(
+                    f"t={t:.4f} FAULT degrade c{f.client} "
+                    f"x{f.factor:g} until r{f.at_round + f.for_rounds}")
+        elif isinstance(f, AggregatorFailure):
+            if self._placement is None or f.slot >= len(self._placement):
+                self._trace.append(
+                    f"t={t:.4f} FAULT aggregator slot {f.slot} "
+                    "out of range — skipped")
+                return
+            host = int(self._placement[f.slot])
+            until = f.at_round + f.down_rounds if f.down_rounds > 0 \
+                else None
+            self._trace.append(
+                f"t={t:.4f} FAULT aggregator slot {f.slot} "
+                f"(host c{host}) failed")
+            self._crash_client(t, host, until)
+        elif isinstance(f, NetworkPartition):
+            hit = [c for c in f.clients if c < C]
+            for c in hit:
+                cur = self._partitioned.get(c, 0)
+                self._partitioned[c] = max(cur, f.at_round + f.for_rounds)
+            self._trace.append(
+                f"t={t:.4f} FAULT partition {hit} until "
+                f"r{f.at_round + f.for_rounds}")
+        else:
+            raise TypeError(f"unknown fault event {f!r}")
+
+    def _crash_client(self, t: float, c: int, until: Optional[int]) -> None:
+        """Take client ``c`` down: void its undelivered update and, if
+        it hosts a slot, fail the slot over to a live replacement."""
+        if c >= self.hierarchy.total_clients:
+            self._trace.append(
+                f"t={t:.4f} FAULT crash c{c} out of range — skipped")
+            return
+        if c in self._down:
+            if until is not None:
+                self._down_until[c] = max(self._down_until.get(c, 0),
+                                          until)
+            return
+        self._down.add(c)
+        if until is not None:
+            self._down_until[c] = until
+        for key in [k for k in sorted(self._sent) if k[0] == c]:
+            self._sent.pop(key)
+            self._store.pop(key, None)
+            self._void.add(key)
+            self._fault_stats["dropped_updates"] += 1.0
+        self._in_flight.discard(c)
+        self._trace.append(
+            f"t={t:.4f} FAULT crash c{c}"
+            + (f" (down until r{until})" if until is not None else ""))
+        if self._placement is not None:
+            for s in range(len(self._placement)):
+                if int(self._placement[s]) == c:
+                    self._fail_host(s, t)
+                    break
+
+    def _drop_update(self, t: float, c: int) -> None:
+        """Mark the client's pending in-flight update lost in transit;
+        the retry policy decides what happens when it would arrive."""
+        keys = [k for k in sorted(self._sent) if k[0] == c]
+        if not keys:
+            self._trace.append(
+                f"t={t:.4f} FAULT drop c{c}: nothing in flight — no-op")
+            return
+        self._drop_pending.add(keys[-1])
+        self._trace.append(
+            f"t={t:.4f} FAULT drop c{c} v{keys[-1][1]}")
+
+    def _fail_host(self, slot: int, t: float) -> None:
+        """Aggregator failover: re-home the slot (and its in-transit
+        buffer contents, which stay in place) on the fastest live
+        unplaced client by observed delay — lowest-id live client when
+        no delay has been observed yet. Raises the same identity
+        ``TopologyUpdate`` pulse as a mid-round re-optimization so
+        strategies' ``migrate`` hooks see the new placement epoch."""
+        C = self.hierarchy.total_clients
+        old = int(self._placement[slot])
+        placed = {int(c) for c in self._placement}
+        best, best_delay = -1, np.inf
+        for c in range(C):
+            if (c in placed or c in self._down
+                    or c in self._partitioned):
+                continue
+            d = self._client_delay.get(c)
+            if d is not None and d < best_delay:
+                best, best_delay = c, d
+        if best < 0:
+            for c in range(C):
+                if (c not in placed and c not in self._down
+                        and c not in self._partitioned):
+                    best = c
+                    break
+        if best < 0:
+            raise RuntimeError(
+                f"aggregator failover for slot {slot}: no live "
+                "unplaced client left to re-home it on")
+        placement = self._placement.copy()
+        placement[slot] = best
+        self._set_placement(placement)
+        self._pending_pulse = True
+        self._fault_stats["failovers"] += 1.0
+        self._trace.append(
+            f"t={t:.4f} FAILOVER slot {slot}: host c{old} -> c{best}")
+
+    # -- checkpoint/restore --------------------------------------------------
+    def checkpoint_state(self) -> dict:
+        """JSON-safe snapshot of every piece of event-engine state the
+        update trees don't carry (those go through the npz tree under
+        ``store_*`` keys — see the runner). Floats survive JSON's repr
+        round-trip exactly, so a restored run replays bit-identically."""
+        return {
+            "kind": self.kind,
+            "clock": self.clock.state_dict(_encode_event),
+            "placement": None if self._placement is None
+            else [int(c) for c in self._placement],
+            "buffers": [
+                {"slot": b.slot, "epoch": b.epoch,
+                 "parts": [[int(p.src), _encode_entries(p.entries)]
+                           for p in b.parts]}
+                for b in self._buffers],
+            "in_flight": sorted(int(c) for c in self._in_flight),
+            "sent": [[int(c), int(v), t]
+                     for (c, v), t in sorted(self._sent.items())],
+            "round": int(self._round),
+            "slot_ewma": None if self._slot_ewma is None
+            else [float(x) for x in self._slot_ewma],
+            "slot_obs": None if self._slot_obs is None
+            else [int(x) for x in self._slot_obs],
+            "client_delay": [[int(c), float(d)] for c, d
+                             in sorted(self._client_delay.items())],
+            "reopt_swaps": int(self._reopt_swaps),
+            "pending_pulse": bool(self._pending_pulse),
+            "topology_version": int(self._topology_version),
+            "arrival": self._arrival.state_dict(),
+            "down": sorted(int(c) for c in self._down),
+            "down_until": [[int(c), int(r)] for c, r
+                           in sorted(self._down_until.items())],
+            "degraded": [[int(c), float(f), int(u)] for c, (f, u)
+                         in sorted(self._degraded.items())],
+            "partitioned": [[int(c), int(u)] for c, u
+                            in sorted(self._partitioned.items())],
+            "void": [[int(c), int(v)] for (c, v) in sorted(self._void)],
+            "drop_pending": [[int(c), int(v)] for (c, v)
+                             in sorted(self._drop_pending)],
+            "retry_count": [[int(c), int(v), int(n)] for (c, v), n
+                            in sorted(self._retry_count.items())],
+            "held": [[int(c), int(v)] for (c, v) in self._held],
+            "fault_stats": {k: float(v) for k, v
+                            in sorted(self._fault_stats.items())},
+            "orchestrator": self.orchestrator.runtime_state(),
+        }
+
+    def restore_state(self, state: dict, store: Dict[tuple, object]) -> None:
+        """Inverse of :meth:`checkpoint_state`; ``store`` carries the
+        in-flight update trees restored from the npz payload."""
+        self.clock = VirtualClock()
+        self.clock.load_state(state["clock"], _decode_event)
+        self._placement = None
+        self._buffers = []
+        if state["placement"] is not None:
+            self._set_placement(np.asarray(state["placement"], np.int64))
+            for b, bs in zip(self._buffers, state["buffers"],
+                             strict=True):
+                b.epoch = int(bs["epoch"])
+                b.parts = [
+                    BufferedPart(src=int(src),
+                                 entries=_decode_entries(ents))
+                    for src, ents in bs["parts"]]
+        self._in_flight = {int(c) for c in state["in_flight"]}
+        self._sent = {(int(c), int(v)): float(t)
+                      for c, v, t in state["sent"]}
+        self._store = dict(store)
+        self._round = int(state["round"])
+        if state["slot_ewma"] is not None:
+            self._slot_ewma = np.asarray(state["slot_ewma"], np.float64)
+            self._slot_obs = np.asarray(state["slot_obs"], np.int64)
+        self._client_delay = {int(c): float(d)
+                              for c, d in state["client_delay"]}
+        self._reopt_swaps = int(state["reopt_swaps"])
+        self._pending_pulse = bool(state["pending_pulse"])
+        self._topology_version = int(state["topology_version"])
+        self._arrival.load_state(state["arrival"])
+        self._down = {int(c) for c in state["down"]}
+        self._down_until = {int(c): int(r)
+                            for c, r in state["down_until"]}
+        self._degraded = {int(c): (float(f), int(u))
+                          for c, f, u in state["degraded"]}
+        self._partitioned = {int(c): int(u)
+                             for c, u in state["partitioned"]}
+        self._void = {(int(c), int(v)) for c, v in state["void"]}
+        self._drop_pending = {(int(c), int(v))
+                              for c, v in state["drop_pending"]}
+        self._retry_count = {(int(c), int(v)): int(n)
+                             for c, v, n in state["retry_count"]}
+        self._held = [(int(c), int(v)) for c, v in state["held"]]
+        self._fault_stats = {str(k): float(v)
+                             for k, v in state["fault_stats"].items()}
+        self.orchestrator.load_runtime_state(state["orchestrator"])
+
 
 def build_environment(spec, seed: int = 0) -> Environment:
     """Materialize a ScenarioSpec into a fresh environment for one run."""
     hierarchy = spec.make_hierarchy()
     pool = spec.make_pool(seed)
+    faults = spec.make_faults(seed)
     if spec.kind == "simulated":
+        if not faults.empty or spec.quorum_frac > 0:
+            raise ValueError(
+                "fault schedules need a track that executes rounds — "
+                "the simulated (analytic) track has no clients to "
+                "crash; use kind='emulated' or 'online'")
         if spec.pods:
             n = hierarchy.total_clients
             pod_of = np.arange(n) * spec.pods // n
@@ -744,5 +1378,10 @@ def build_environment(spec, seed: int = 0) -> Environment:
             flush_timeout=spec.flush_timeout, server_lr=spec.server_lr,
             reopt_threshold=spec.reopt_threshold,
             reopt_beta=spec.reopt_beta)
-        return OnlineEnvironment(orch, async_cfg, seed=seed)
-    return EmulatedEnvironment(orch)
+        retry = RetryPolicy(max_retries=spec.retry_limit,
+                            backoff_base=spec.retry_backoff)
+        return OnlineEnvironment(orch, async_cfg, seed=seed,
+                                 faults=faults, retry=retry,
+                                 quorum_frac=spec.quorum_frac)
+    return EmulatedEnvironment(orch, faults=faults,
+                               quorum_frac=spec.quorum_frac)

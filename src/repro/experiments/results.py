@@ -33,6 +33,17 @@ apart from the version stamp):
   ``StrategyRun.save_state`` (swarm positions/velocities/pbest, rng
   stream, history), restorable with ``load_state`` for sweep resume.
 
+v3 additions (the fault track; again optional per run, so fault-free
+artifacts only change their version stamp):
+
+* the scenario dict may carry ``faults`` (tagged fault-event dicts),
+  ``fault_profile``, ``quorum_frac``, ``retry_limit`` and
+  ``retry_backoff`` — v1/v2 artifacts without them load as fault-free;
+* faulty runs carry per-round metric series: ``faults`` (cumulative
+  injected events), ``dropped_updates``, ``retries`` (online only),
+  ``degraded_flushes`` (quorum-refused merges), ``failovers``
+  (aggregator re-homings), plus ``down``/``partitioned`` gauges.
+
 ``validate_result_dict`` is the schema gate the CLI (and CI smoke job)
 run before an artifact is written or consumed.
 """
@@ -46,9 +57,9 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 RESULT_SCHEMA = "repro.experiments/result"
-RESULT_SCHEMA_VERSION = 2
+RESULT_SCHEMA_VERSION = 3
 # older artifact versions that still validate and load
-RESULT_SCHEMA_COMPAT = (1, 2)
+RESULT_SCHEMA_COMPAT = (1, 2, 3)
 
 
 @dataclass

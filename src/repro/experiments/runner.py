@@ -48,6 +48,7 @@ import numpy as np
 from repro.core.cost_model import PooledTPDEvaluator
 from repro.core.hierarchy import rows_with_duplicates
 from repro.core.registry import build_config, create_strategy, resolve_strategy
+from repro.checkpoint.store import latest_step, restore_checkpoint, save_checkpoint
 from repro.experiments.results import ExperimentResult, StrategyRun
 from repro.experiments.scenarios import ScenarioSpec, ScheduledEvent, get_scenario
 
@@ -119,10 +120,84 @@ def _has_observer_noise(events) -> bool:
         for ev in events)
 
 
+def _save_run_state(directory: str, step: int, env, strategy, events,
+                    erng, run: StrategyRun) -> None:
+    """Snapshot EVERYTHING one (strategy, seed) run holds at a round
+    boundary: model params + in-flight update trees go through the
+    atomic npz store; env/event/strategy/rng bookkeeping rides in the
+    JSON ``extra`` sidecar. The snapshot is read-only — taking it never
+    perturbs the run (the no-perturbation and resume bit-identity
+    tests pin both)."""
+    orch = getattr(env, "orchestrator", None)
+    tree = {}
+    if orch is not None:
+        tree["params"] = orch.params
+    store = getattr(env, "_store", None) or {}
+    store_keys = []
+    for c, v in sorted(store):
+        tree[f"store_{c}_{v}"] = store[(c, v)]
+        store_keys.append([int(c), int(v)])
+    pool = env.clients
+    extra = {
+        "round_next": int(step),
+        "env": env.checkpoint_state(),
+        "store_keys": store_keys,
+        "pool": {"memcap": [float(x) for x in pool.memcap],
+                 "pspeed": [float(x) for x in pool.pspeed],
+                 "mdatasize": [float(x) for x in pool.mdatasize]},
+        "events": [ev.state_dict() for ev in events],
+        "erng": erng.bit_generator.state,
+        "strategy": strategy.save_state(),
+        "run": run.to_dict(),
+    }
+    save_checkpoint(directory, step, tree, extra)
+
+
+def _restore_run_state(directory: str, env, strategy, events, erng):
+    """Inverse of :func:`_save_run_state` into freshly constructed run
+    objects (call after ``env.begin()``; warmup consumes no rng, so the
+    restored streams continue exactly where the snapshot left them).
+    Returns ``(round_next, run)``."""
+    import json as _json
+    from pathlib import Path as _Path
+    step = latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    meta = _json.loads(
+        (_Path(directory) / f"step_{step:08d}" / "meta.json").read_text())
+    extra = meta["extra"]
+    orch = getattr(env, "orchestrator", None)
+    template = {}
+    if orch is not None:
+        template["params"] = orch.params
+    for c, v in extra["store_keys"]:
+        template[f"store_{c}_{v}"] = orch.params
+    tree, _ = restore_checkpoint(directory, template, step)
+    pool = env.clients
+    pool.memcap[:] = np.asarray(extra["pool"]["memcap"], np.float64)
+    pool.pspeed[:] = np.asarray(extra["pool"]["pspeed"], np.float64)
+    pool.mdatasize[:] = np.asarray(extra["pool"]["mdatasize"], np.float64)
+    pool.touch()
+    if orch is not None:
+        orch.set_global(tree["params"])
+    store = {(int(c), int(v)): tree[f"store_{c}_{v}"]
+             for c, v in extra["store_keys"]}
+    env.restore_state(extra["env"], store)
+    for ev, st in zip(events, extra["events"], strict=True):
+        ev.load_state(st)
+    erng.bit_generator.state = extra["erng"]
+    strategy.load_state(extra["strategy"])
+    run = StrategyRun.from_dict(extra["run"])
+    return int(extra["round_next"]), run
+
+
 def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
                rounds: Optional[int] = None, config=None,
                verbose: bool = False,
-               capture_state: bool = False) -> StrategyRun:
+               capture_state: bool = False,
+               checkpoint_dir: Optional[str] = None,
+               checkpoint_every: int = 1,
+               resume: bool = False) -> StrategyRun:
     """One (strategy, seed) trajectory through a fresh environment.
 
     This is THE sequential loop — both paper tracks and every event
@@ -133,8 +208,28 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
     update before proposing. ``capture_state=True`` snapshots the
     strategy's full checkpoint into ``run.strategy_state`` at the end
     (sweep resume).
+
+    ``checkpoint_dir`` turns on periodic FULL-run checkpointing (every
+    ``checkpoint_every`` round boundaries, through the atomic
+    ``repro.checkpoint`` store): model params, in-flight update trees,
+    the environment's event queue/buffers/fault state, event + rng +
+    strategy state. ``resume=True`` restores the latest snapshot and
+    continues — a run killed at round r resumes bit-identically to the
+    uninterrupted run (the fault-track acceptance pin). Elastic
+    scenarios are refused: a resize swaps the hierarchy out from under
+    the snapshot.
     """
     rounds = rounds if rounds is not None else spec.rounds
+    if checkpoint_dir is not None or resume:
+        if spec.is_elastic:
+            raise ValueError(
+                f"checkpointing does not support elastic scenarios "
+                f"(scenario {spec.name!r} schedules pool resizes)")
+        if resume and checkpoint_dir is None:
+            raise ValueError("resume=True needs a checkpoint_dir")
+        if checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got {checkpoint_every}")
     env = spec.make_environment(seed)
     kw = {"config": config} if config is not None else {}
     strategy = create_strategy(strategy_name, env.hierarchy, seed=seed,
@@ -147,7 +242,11 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
     run = StrategyRun(strategy=strategy.name, seed=seed)
 
     env.begin()
-    for r in range(rounds):
+    start_round = 0
+    if resume:
+        start_round, run = _restore_run_state(checkpoint_dir, env,
+                                              strategy, events, erng)
+    for r in range(start_round, rounds):
         for ev in events:
             msg = ev.on_round(r, env.clients, erng)
             if msg:
@@ -181,6 +280,9 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
                             if k in ("loss", "accuracy"))
             print(f"    [{strategy.name}] r{r:3d} "
                   f"tpd={obs.tpd:8.4f}{extra}")
+        if checkpoint_dir is not None and (r + 1) % checkpoint_every == 0:
+            _save_run_state(checkpoint_dir, r + 1, env, strategy,
+                            events, erng, run)
 
     _finalize_run(run, strategy)
     if capture_state:

@@ -33,7 +33,18 @@ name            kind        what it reproduces / probes
 ``online-fig4``     online     Fig. 4 cluster asynchronously (jitter + buffers)
 ``online-straggler`` online    delay-triggered mid-round host re-optimization
 ``online-sync``     online     degenerate lockstep twin of paper-fig4 (parity)
+``online-faulty``   online     online-fig4 under crashes/drops/degrades + retry
+``chaos``           online     every fault kind at once, quorum-gated merges
 ==============  ==========  ====================================================
+
+The last two carry a FAULT track (``repro.faults``): a seeded
+:class:`~repro.faults.schedule.FaultProfile` draws a randomized-but-
+replayable :class:`~repro.faults.schedule.FaultSchedule` per run
+(``spec.make_faults(seed)``), and the tolerance knobs
+(``retry_limit``/``retry_backoff``/``quorum_frac``) configure bounded
+virtual-time retries and the quorum-gated degraded merge. A spec with
+no profile and an empty ``faults`` tuple runs the exact pre-fault code
+paths — bit-identical to the fault-free tracks (the parity pin).
 
 The last three are ELASTIC: ``ClientJoin``/``ClientLeave`` events
 genuinely resize the pool, and the environments re-hierarchize (new
@@ -65,6 +76,12 @@ from typing import Any, Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.hierarchy import ClientPool, Hierarchy
+from repro.faults.schedule import (
+    FaultEvent,
+    FaultProfile,
+    FaultSchedule,
+    fault_from_dict,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -148,6 +165,16 @@ class ScheduledEvent:
     def transform_tpd(self, round_idx: int, tpd: float,
                       rng: np.random.Generator) -> float:
         return tpd
+
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-safe mutable run state for checkpointing. Stateless
+        events (most of them — the rng lives in the runner) return
+        ``{}``; events carrying cross-round state (StragglerSpike's
+        saved speeds) override both hooks."""
+        return {}
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        return None
 
     def to_dict(self) -> Dict[str, Any]:
         d = {"event": type(self).__name__}
@@ -262,6 +289,17 @@ class StragglerSpike(ScheduledEvent):
         d.pop("_saved", None)
         d.pop("_until", None)
         return d
+
+    def state_dict(self):
+        return {"saved": [[int(c), float(slowed), float(orig)]
+                          for c, (slowed, orig)
+                          in sorted(self._saved.items())],
+                "until": int(self._until)}
+
+    def load_state(self, state):
+        self._saved = {int(c): (float(slowed), float(orig))
+                       for c, slowed, orig in state["saved"]}
+        self._until = int(state["until"])
 
 
 @dataclass
@@ -384,6 +422,13 @@ class ScenarioSpec:
     reopt_threshold: float = 0.0         # flush-latency trigger (0 = off)
     reopt_beta: float = 0.5              # EWMA decay for observed delays
 
+    # fault track (repro.faults; emulated + online kinds)
+    faults: Tuple[FaultEvent, ...] = ()  # explicit pinned fault events
+    fault_profile: Optional[FaultProfile] = None   # seeded generation
+    quorum_frac: float = 0.0             # 0 = merge whatever arrived
+    retry_limit: int = 0                 # retries per dropped update
+    retry_backoff: float = 0.25          # virtual-time backoff base
+
     def __post_init__(self):
         if self.kind not in ("simulated", "emulated", "online"):
             raise ValueError(f"unknown scenario kind {self.kind!r}")
@@ -401,6 +446,21 @@ class ScenarioSpec:
         """Build a fresh Environment for one (strategy, seed) run."""
         from repro.experiments.environments import build_environment
         return build_environment(self, seed)
+
+    def make_faults(self, seed: int) -> FaultSchedule:
+        """The run's fault schedule: the spec's explicit pinned events
+        plus (when a :class:`FaultProfile` is set) the randomized-but-
+        seeded events drawn from the dedicated fault stream — a pure
+        function of (spec, seed), so every faulty run replays."""
+        events = tuple(self.faults)
+        if self.fault_profile is not None:
+            hier = self.make_hierarchy()
+            gen = FaultSchedule.generate(
+                self.fault_profile, seed=seed,
+                n_clients=hier.total_clients, n_slots=hier.dimensions,
+                rounds=self.rounds)
+            events = events + gen.events
+        return FaultSchedule(events)
 
     def make_events(self) -> Tuple[ScheduledEvent, ...]:
         """Fresh per-run event copies in the CANONICAL application
@@ -446,7 +506,10 @@ class ScenarioSpec:
                 raise TypeError(f"scenario {self.name!r} has no field "
                                 f"{k!r}; fields: {accepted}")
             try:
-                coerced[k] = _coerce(v, getattr(self, k))
+                if k == "fault_profile":
+                    coerced[k] = _coerce_profile(v)
+                else:
+                    coerced[k] = _coerce(v, getattr(self, k))
             except ValueError:
                 raise TypeError(
                     f"cannot parse {k}={v!r} for scenario "
@@ -459,6 +522,9 @@ class ScenarioSpec:
         d = dataclasses.asdict(self)
         d["pool"] = dataclasses.asdict(self.pool)
         d["events"] = [e.to_dict() for e in self.events]
+        d["faults"] = [f.to_dict() for f in self.faults]
+        d["fault_profile"] = (None if self.fault_profile is None
+                              else self.fault_profile.to_dict())
         return d
 
     @classmethod
@@ -466,6 +532,11 @@ class ScenarioSpec:
         d = dict(d)
         d["pool"] = PoolProfile(**d.get("pool", {}))
         d["events"] = tuple(event_from_dict(e) for e in d.get("events", ()))
+        # schema v1/v2 artifacts predate the fault track: absent keys
+        # mean the fault-free defaults
+        d["faults"] = tuple(fault_from_dict(f) for f in d.get("faults", ()))
+        fp = d.get("fault_profile")
+        d["fault_profile"] = None if fp is None else FaultProfile.from_dict(fp)
         return cls(**d)
 
 
@@ -509,8 +580,30 @@ def _coerce_sequence(value: str) -> tuple:
     if not isinstance(parsed, list):
         raise ValueError(f"expected a JSON list, got {type(parsed).__name__}")
     if parsed and all(isinstance(e, dict) for e in parsed):
-        return tuple(event_from_dict(e) for e in parsed)
+        # tagged dicts: {"fault": ...} -> FaultEvent, {"event": ...}
+        # -> ScheduledEvent (so --set 'faults=[{"fault":"ClientCrash",
+        # "client":3,"at_round":5}]' works from the command line)
+        return tuple(fault_from_dict(e) if "fault" in e
+                     else event_from_dict(e) for e in parsed)
     return tuple(parsed)
+
+
+def _coerce_profile(value) -> Optional[FaultProfile]:
+    """Coerce a ``fault_profile`` override: passthrough for None /
+    FaultProfile, a JSON object string from the CLI (``""``/``none``
+    clears it), or a plain dict."""
+    if value is None or isinstance(value, FaultProfile):
+        return value
+    if isinstance(value, dict):
+        return FaultProfile.from_dict(value)
+    v = str(value).strip()
+    if v.lower() in ("", "none", "{}"):
+        return None
+    parsed = json.loads(v)  # JSONDecodeError is a ValueError
+    if not isinstance(parsed, dict):
+        raise ValueError(
+            f"expected a JSON object, got {type(parsed).__name__}")
+    return FaultProfile.from_dict(parsed)
 
 
 # ---------------------------------------------------------------------------
@@ -698,3 +791,53 @@ register_scenario(ScenarioSpec(
                 "full-cohort flushes, no deadline — the event queue "
                 "runs but every round is lockstep, bit-identical to "
                 "the emulated track (the parity pin)."))
+
+register_scenario(ScenarioSpec(
+    name="online-faulty", kind="online", depth=2, width=2,
+    trainers_per_leaf=1, n_clients=10,
+    pool=PoolProfile(kind="explicit", mdatasize=30.0,
+                     memcap=_FIG4_MEMCAP, pspeed=_FIG4_PSPEED),
+    rounds=50, model="paper-mlp-1m8", local_steps=2, batch_size=32,
+    comm_latency=0.002, timing="deterministic",
+    jitter=0.35, staleness_alpha=0.5, flush_fraction=0.75,
+    flush_timeout=0.5, server_lr=0.7,
+    fault_profile=FaultProfile(crash_rate=0.15, crash_down_rounds=2,
+                               drop_rate=0.25, degrade_rate=0.2,
+                               degrade_factor=4.0, degrade_rounds=2,
+                               agg_fail_every=10, agg_down_rounds=1,
+                               first_round=2),
+    retry_limit=3, retry_backoff=0.25, quorum_frac=0.2,
+    description="online-fig4 under a seeded fault profile: client "
+                "crashes void in-flight updates, transit drops retry "
+                "with bounded virtual-time backoff, degraded links "
+                "multiply delivery latency, and every 10th round the "
+                "host of a random slot fails over mid-round; root "
+                "flushes below the 20% quorum are refused (degraded "
+                "flush, the model holds), at-or-above quorum they "
+                "commit with a participation-damped server step."))
+
+register_scenario(ScenarioSpec(
+    name="chaos", kind="online", depth=2, width=2,
+    trainers_per_leaf=1, n_clients=10,
+    pool=PoolProfile(kind="explicit", mdatasize=30.0,
+                     memcap=_FIG4_MEMCAP, pspeed=_FIG4_PSPEED),
+    rounds=40, model="paper-mlp-1m8", local_steps=2, batch_size=32,
+    comm_latency=0.002, timing="deterministic",
+    jitter=0.3, staleness_alpha=0.5, flush_fraction=0.75,
+    flush_timeout=0.5, server_lr=0.7,
+    events=(StragglerSpike(every=12, duration=3, fraction=0.2,
+                           slowdown=5.0, first_round=6),),
+    fault_profile=FaultProfile(crash_rate=0.2, crash_down_rounds=2,
+                               drop_rate=0.3, degrade_rate=0.25,
+                               degrade_factor=5.0, degrade_rounds=2,
+                               partition_rate=0.15, partition_frac=0.3,
+                               partition_rounds=1, agg_fail_every=8,
+                               agg_down_rounds=1, first_round=2),
+    retry_limit=2, retry_backoff=0.25, quorum_frac=0.2,
+    description="Every fault kind at once on the tiny Fig. 4 topology "
+                "(so even exhaustive search completes): crashes, "
+                "drops, link degradation, timed network partitions "
+                "that hold in-flight updates until they heal, cadenced "
+                "aggregator failovers, plus straggler spikes — the "
+                "survivability stress all registered strategies must "
+                "ride out with a valid placement every round."))

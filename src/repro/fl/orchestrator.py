@@ -42,6 +42,7 @@ import numpy as np
 from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, slot_remap
 from repro.core.placement import PlacementStrategy
 from repro.data.synthetic import FederatedDataset
+from repro.faults.tolerance import quorum_count, quorum_merge_batched
 from repro.fl.aggregation import SegmentAggregator
 from repro.fl.distributed import elastic_rehierarchize
 from repro.models.api import Model
@@ -642,6 +643,173 @@ class FederatedOrchestrator:
             round_idx=r, placement=placement.tolist(), tpd=tpd,
             train_time=train_time, agg_time=agg_time,
             loss=loss, accuracy=acc)
+
+    def run_round_faulty(self, r: int, placement, *, down=(), dropped=(),
+                         degraded=None, quorum_frac: float = 0.0
+                         ) -> Tuple[RoundRecord, Dict[str, float]]:
+        """One federated round under faults (the emulated track's fault
+        path; ``repro.faults``).
+
+        ``down`` clients (crashed or partitioned this round) neither
+        train nor deliver; ``dropped`` clients train but their updates
+        are lost in transit; ``degraded`` maps clients to train-delay
+        multipliers. Down aggregator HOSTS fail over to the lowest-id
+        live unplaced client (black-box: no pspeed peeking). Surviving
+        updates merge FLAT at the root — hierarchical FedAvg over the
+        tree equals flat weighted FedAvg (the segment-sum invariant) —
+        through :func:`quorum_merge_batched`, gated on
+        live-population quorum and damped by the arrived fraction; a
+        refused merge leaves the model untouched (a degraded flush).
+        Aggregation time charges the eq. 6 per-cluster walk over the
+        payloads actually present.
+
+        A round with NO faults delegates to :meth:`run_round` verbatim,
+        so a zero-fault schedule stays bit-identical to the fault-free
+        track (the parity pin). Returns ``(record, extra)`` where
+        ``extra`` carries the fault series (merged / degraded_flushes /
+        failovers / dropped_updates / down).
+        """
+        placement = np.asarray(placement, np.int64)
+        self._check_population()
+        self.hierarchy.validate_placement(placement)
+        down = {int(c) for c in down}
+        dropped = {int(c) for c in dropped}
+        degraded = {int(c): float(f)
+                    for c, f in sorted((degraded or {}).items())}
+        C = self.hierarchy.total_clients
+        if not down and not dropped and not degraded:
+            rec = self.run_round(r, placement)
+            return rec, {"merged": float(C), "degraded_flushes": 0.0,
+                         "failovers": 0.0, "dropped_updates": 0.0,
+                         "down": 0.0}
+        if self.timing != "deterministic":
+            raise ValueError(
+                "run_round_faulty composes per-cluster delays "
+                "analytically and needs timing='deterministic', got "
+                f"{self.timing!r}")
+        if self.engine != "batched":
+            raise ValueError("run_round_faulty needs the batched round "
+                             f"engine, got {self.engine!r}")
+
+        cohort = np.asarray([c for c in range(C) if c not in down],
+                            np.int64)
+        if cohort.size == 0:
+            raise RuntimeError(f"round {r}: every client is down")
+
+        # aggregator failover: repair down hosts before anything runs
+        eff = placement.copy()
+        placed = {int(c) for c in eff}
+        failovers = 0
+        for s in range(len(eff)):
+            if int(eff[s]) in down:
+                repl = -1
+                for c in range(C):
+                    if c not in down and c not in placed:
+                        repl = c
+                        break
+                if repl < 0:
+                    raise RuntimeError(
+                        f"aggregator failover for slot {s}: no live "
+                        "unplaced client left")
+                eff[s] = repl
+                placed.add(repl)
+                failovers += 1
+        self.hierarchy.validate_placement(eff)
+
+        stacked, train_times = self.train_cohort(cohort, r)
+        train_times = np.asarray(train_times, np.float64).copy()
+        for j in range(cohort.size):
+            factor = degraded.get(int(cohort[j]))
+            if factor is not None:
+                train_times[j] *= factor
+        train_time = float(train_times.max())
+
+        merged_ids = np.asarray(
+            [c for c in cohort.tolist() if c not in dropped], np.int64)
+        need = quorum_count(max(1, C - len(down)), quorum_frac)
+        if merged_ids.size < need:
+            agg_time = 0.0
+            merged = 0
+            degraded_flush = 1.0
+        else:
+            rows = np.searchsorted(cohort, merged_ids)
+            sub = jax.tree.map(lambda x: x[jnp.asarray(rows)], stacked)
+            base_w = self.weights[merged_ids]
+            stal = np.zeros(merged_ids.size, np.float64)
+            self.params = quorum_merge_batched(
+                self.params, sub, base_w, stal, 0.0, 1.0,
+                merged_ids.size / C)
+            agg_time = self._faulty_agg_time(
+                eff, {int(c) for c in merged_ids})
+            merged = int(merged_ids.size)
+            degraded_flush = 0.0
+
+        tpd = (train_time + agg_time) * self.time_scale
+        loss, acc = self._evaluate()
+        rec = RoundRecord(
+            round_idx=r, placement=eff.tolist(), tpd=tpd,
+            train_time=train_time, agg_time=agg_time,
+            loss=loss, accuracy=acc)
+        extra = {
+            "merged": float(merged),
+            "degraded_flushes": degraded_flush,
+            "failovers": float(failovers),
+            "dropped_updates": float(
+                len(dropped & {int(c) for c in cohort})),
+            "down": float(len(down))}
+        return rec, extra
+
+    def _faulty_agg_time(self, placement: np.ndarray, merged: set
+                         ) -> float:
+        """eq. 7 composition of eq. 6 per-cluster delays over the
+        payloads PRESENT under faults: a leaf cluster charges its
+        merged trainers (plus the host's own update if it merged), an
+        inner cluster charges its child hosts' forwarded partials.
+        Reduces to the full ``_aggregate`` walk when everything merged."""
+        h = self.hierarchy
+        trainers = h.trainer_assignment(placement)
+        leaf_start = h.level_starts[h.depth - 1]
+        total = 0.0
+        for level in range(h.depth - 1, -1, -1):
+            level_max = 0.0
+            for s in range(h.level_starts[level],
+                           h.level_starts[level + 1]):
+                host = int(placement[s])
+                kids = h.children_slots(s)
+                if kids:
+                    present = [int(placement[k]) for k in kids]
+                else:
+                    li = s - leaf_start
+                    present = [t for t in trainers[li] if t in merged]
+                if host in merged:
+                    present = [host] + present
+                if not present:
+                    continue
+                dt = self._det_cluster_work(present)
+                level_max = max(
+                    level_max,
+                    self._cluster_time(host, dt, len(present)))
+            total += level_max
+        return total
+
+    # ==================================================================
+    # checkpoint support: the non-pytree runtime state
+    # ==================================================================
+    def runtime_state(self) -> dict:
+        """JSON-safe snapshot of the orchestrator state that is NOT the
+        params pytree (which checkpoints through the npz payload): the
+        rng stream positions and the elastic bookkeeping. Restoring
+        both makes a resumed run replay bit-identically."""
+        return {"rng": self.rng.bit_generator.state,
+                "elastic_rng": self._elastic_rng.bit_generator.state,
+                "topology_version": int(self.topology_version),
+                "capacity": int(self._capacity)}
+
+    def load_runtime_state(self, state: dict) -> None:
+        self.rng.bit_generator.state = state["rng"]
+        self._elastic_rng.bit_generator.state = state["elastic_rng"]
+        self.topology_version = int(state["topology_version"])
+        self._capacity = int(state["capacity"])
 
     def run(self, strategy: PlacementStrategy, rounds: int,
             verbose: bool = False) -> FederatedRunResult:

@@ -75,3 +75,21 @@ class VirtualClock:
         (time, seq) keys so relative order is preserved exactly."""
         self._heap = list(items)
         heapq.heapify(self._heap)
+
+    def state_dict(self, encode) -> dict:
+        """JSON-safe snapshot for checkpointing; ``encode`` maps each
+        event payload to a JSON-safe value. (time, seq) keys are kept
+        verbatim so a restored queue pops in the identical order —
+        floats round-trip exactly through JSON's repr serialization."""
+        return {"now": self.now, "seq": self._seq,
+                "events": [[t, s, encode(ev)]
+                           for t, s, ev in self.pending()]}
+
+    def load_state(self, state: dict, decode) -> None:
+        """Inverse of :meth:`state_dict` (``decode`` rebuilds each
+        event payload). The sequence counter resumes past every stored
+        event, so post-restore scheduling keeps the FIFO tie-break."""
+        self.now = float(state["now"])
+        self._seq = int(state["seq"])
+        self.replace([(float(t), int(s), decode(ev))
+                      for t, s, ev in state["events"]])

@@ -110,3 +110,18 @@ class ArrivalProcess:
             if c < len(client_remap) and client_remap[c] >= 0:
                 remapped[int(client_remap[c])] = self._rngs[c]
         self._rngs = remapped
+
+    def state_dict(self) -> dict:
+        """JSON-safe per-client stream states (checkpointing)."""
+        return {"streams": [[c, self._rngs[c].bit_generator.state]
+                            for c in sorted(self._rngs)]}
+
+    def load_state(self, state: dict) -> None:
+        """Rebuild each client's stream on its canonical key and fast-
+        forward it by restoring the saved bit-generator state."""
+        self._rngs = {}
+        for c, st in state["streams"]:
+            rng = np.random.default_rng(
+                (self.seed, _ARRIVAL_STREAM, int(c)))
+            rng.bit_generator.state = st
+            self._rngs[int(c)] = rng

@@ -95,6 +95,18 @@ def test_rpl001_unregistering_the_async_merge_fails_the_pass():
                for v in violations)
 
 
+def test_rpl001_unregistering_the_quorum_merge_fails_the_pass():
+    """The fault track's degraded merge is a *_batched entry point under
+    the scanned src/repro/faults/ prefix: dropping its oracle pair must
+    trip the gate."""
+    contexts = engine.load_tree(REPO)
+    reg = tuple(p for p in REGISTRY
+                if p.fast != "repro.faults.tolerance:quorum_merge_batched")
+    violations = parity.check(contexts, registry=reg, root=REPO)
+    assert any(v.code == "RPL001" and "quorum_merge_batched" in v.message
+               for v in violations)
+
+
 def test_rpl001_missing_test_file_fails_the_pass():
     contexts = engine.load_tree(REPO)
     reg = (OraclePair(fast="repro.kernels.tpd:batch_tpd_pallas",

@@ -605,12 +605,13 @@ def test_schema_v2_validates_and_v1_stays_loadable():
     res = run_experiment("flash-crowd", ["pso"], rounds=20, seeds=(0,),
                          progress=False)
     d = res.to_dict()
-    assert d["schema_version"] == 2
+    assert d["schema_version"] == 3
     assert validate_result_dict(d) == []
     legacy = json.loads(json.dumps(d))
-    legacy["schema_version"] = 1
-    assert validate_result_dict(legacy) == []     # compat window
-    legacy["schema_version"] = 3
+    for version in (1, 2):                        # compat window
+        legacy["schema_version"] = version
+        assert validate_result_dict(legacy) == []
+    legacy["schema_version"] = 4
     assert any("schema_version" in e for e in validate_result_dict(legacy))
     # elastic scenario round-trips (ClientJoin in the scenario dict)
     loaded = ExperimentResult.from_dict(json.loads(json.dumps(d)))

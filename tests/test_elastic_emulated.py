@@ -321,7 +321,7 @@ def test_flash_crowd_emulated_end_to_end(tmp_path):
                          progress=False)
     out = res.save(tmp_path / "flash_crowd_emu.json")
     d = res.to_dict()
-    assert d["schema_version"] == 2
+    assert d["schema_version"] == 3
     assert validate_result_dict(d) == []
     for run in res.runs:
         tv = run.metrics["topology_version"]

@@ -1,0 +1,412 @@
+"""The deterministic fault track (``repro.faults``): seeded schedules,
+retry/quorum tolerance (the registered parity pair
+``quorum_merge_batched`` / ``_quorum_merge_ref``), zero-fault
+bit-identity on both tracks, strategy survivability under the
+``online-faulty``/``chaos`` presets, and resume-from-checkpoint
+bit-identity."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.experiments import get_scenario, run_experiment
+from repro.experiments.results import validate_result_dict
+from repro.experiments.runner import run_single
+from repro.experiments.scenarios import ScenarioSpec
+from repro.faults import (
+    AggregatorFailure,
+    ClientCrash,
+    ClientRecover,
+    FaultProfile,
+    FaultSchedule,
+    LinkDegrade,
+    NetworkPartition,
+    RetryPolicy,
+    UpdateDrop,
+    fault_from_dict,
+    quorum_count,
+    quorum_merge_batched,
+)
+from repro.faults.tolerance import _quorum_merge_ref
+from repro.online import UpdateArrival, async_merge_batched
+
+SMOKE = {"model": "mlp-smoke"}
+
+# one crash pinned far past any test horizon: the fault machinery is
+# armed (every fault branch live) but nothing ever fires
+NEVER = json.dumps(
+    [{"fault": "ClientCrash", "client": 0, "at_round": 10 ** 6}])
+
+
+def _tree(rng, k=None):
+    def leaf(*shape):
+        return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+    if k is None:
+        return {"w": leaf(4, 3), "b": leaf(3)}
+    return {"w": leaf(k, 4, 3), "b": leaf(k, 3)}
+
+
+# ---------------------------------------------------------------------------
+# schedule vocabulary
+# ---------------------------------------------------------------------------
+def test_fault_event_dict_round_trip():
+    events = (ClientCrash(at_round=3, offset=0.25, client=2,
+                          down_rounds=2),
+              ClientRecover(at_round=5, client=2),
+              UpdateDrop(at_round=4, client=7),
+              LinkDegrade(at_round=2, client=1, factor=5.0, for_rounds=3),
+              AggregatorFailure(at_round=6, offset=0.1, slot=1,
+                                down_rounds=2),
+              NetworkPartition(at_round=7, clients=(1, 4), for_rounds=2))
+    sched = FaultSchedule(events)
+    rt = FaultSchedule.from_dicts(sched.to_dicts())
+    assert rt == sched
+
+
+def test_fault_from_dict_rejects_unknown_type_and_fields():
+    with pytest.raises(ValueError, match="unknown fault type"):
+        fault_from_dict({"fault": "Meteor"})
+    with pytest.raises(ValueError, match="unknown fields"):
+        fault_from_dict({"fault": "ClientCrash", "blast_radius": 3})
+
+
+def test_for_round_orders_by_offset_then_type_then_position():
+    sched = FaultSchedule((
+        UpdateDrop(at_round=2, offset=0.4, client=1),
+        ClientCrash(at_round=2, offset=0.1, client=2),
+        UpdateDrop(at_round=2, offset=0.1, client=3),
+        LinkDegrade(at_round=1, client=0),
+    ))
+    hits = sched.for_round(2)
+    # offset first; same-offset ties break by class name, then position
+    assert [type(h).__name__ for h in hits] == \
+        ["ClientCrash", "UpdateDrop", "UpdateDrop"]
+    assert hits[1].client == 3 and hits[2].client == 1
+
+
+def test_generate_is_a_pure_function_of_seed_and_profile():
+    prof = FaultProfile(crash_rate=0.3, drop_rate=0.3, degrade_rate=0.2,
+                        partition_rate=0.2, agg_fail_every=5)
+    a = FaultSchedule.generate(prof, seed=7, n_clients=10, n_slots=3,
+                               rounds=30)
+    b = FaultSchedule.generate(prof, seed=7, n_clients=10, n_slots=3,
+                               rounds=30)
+    c = FaultSchedule.generate(prof, seed=8, n_clients=10, n_slots=3,
+                               rounds=30)
+    assert a == b and a != c and not a.empty
+    # the cadence fires exactly every agg_fail_every rounds
+    fails = [e for e in a.events if isinstance(e, AggregatorFailure)]
+    assert [e.at_round for e in fails] == [5, 10, 15, 20, 25]
+
+
+def test_generated_schedule_survives_serialization():
+    prof = FaultProfile(crash_rate=0.4, partition_rate=0.3)
+    sched = FaultSchedule.generate(prof, seed=3, n_clients=8, n_slots=3,
+                                   rounds=20)
+    rt = FaultSchedule.from_dicts(
+        json.loads(json.dumps(sched.to_dicts())))
+    assert rt == sched
+
+
+# ---------------------------------------------------------------------------
+# tolerance primitives
+# ---------------------------------------------------------------------------
+def test_retry_policy_backoff_is_bounded_and_deterministic():
+    rp = RetryPolicy(max_retries=3, backoff_base=0.25, backoff_mult=2.0)
+    assert rp.enabled
+    assert [rp.delay(a) for a in range(3)] == [0.25, 0.5, 1.0]
+    assert not RetryPolicy().enabled
+    with pytest.raises(ValueError):
+        rp.delay(-1)
+
+
+def test_quorum_count():
+    assert quorum_count(10, 0.0) == 1
+    assert quorum_count(10, 0.2) == 2
+    assert quorum_count(10, 0.5) == 5
+    assert quorum_count(3, 1.0) == 3
+    assert quorum_count(1, 0.5) == 1  # never below one
+    with pytest.raises(ValueError):
+        quorum_count(0, 0.5)
+
+
+def test_quorum_merge_matches_scalar_reference():
+    rng = np.random.default_rng(11)
+    k = 5
+    g = _tree(rng)
+    stacked = _tree(rng, k)
+    updates = [jax.tree.map(lambda x, i=i: x[i], stacked)
+               for i in range(k)]
+    base = rng.uniform(0.5, 1.5, k)
+    stale = np.array([0.0, 2.0, 0.0, 5.0, 1.0])
+    for alpha, eta, frac in ((0.5, 1.0, 0.4), (1.0, 0.6, 0.75),
+                             (0.5, 0.7, 1.0)):
+        fast = quorum_merge_batched(g, stacked, base, stale, alpha,
+                                    eta, frac)
+        ref = _quorum_merge_ref(g, updates, base, stale, alpha, eta,
+                                frac)
+        for lf, lr in zip(jax.tree.leaves(fast), jax.tree.leaves(ref),
+                          strict=True):
+            assert np.allclose(lf, lr, rtol=1e-5, atol=1e-6)
+
+
+def test_quorum_merge_full_participation_is_async_merge_bitwise():
+    # arrived_frac >= 1 must recover the plain async merge EXACTLY —
+    # the algebraic half of the zero-fault parity pin
+    rng = np.random.default_rng(12)
+    k = 4
+    g = _tree(rng)
+    stacked = _tree(rng, k)
+    base = rng.uniform(0.5, 1.5, k)
+    stale = np.array([0.0, 1.0, 3.0, 0.0])
+    q = quorum_merge_batched(g, stacked, base, stale, 0.5, 0.8, 1.0)
+    a = async_merge_batched(g, stacked, base, stale, 0.5, 0.8)
+    for lq, la in zip(jax.tree.leaves(q), jax.tree.leaves(a),
+                      strict=True):
+        assert np.array_equal(np.asarray(lq), np.asarray(la))
+
+
+def test_quorum_merge_damps_the_step_by_participation():
+    rng = np.random.default_rng(13)
+    k = 4
+    g = _tree(rng)
+    stacked = _tree(rng, k)
+    base = np.ones(k)
+    stale = np.zeros(k)
+    full = quorum_merge_batched(g, stacked, base, stale, 0.5, 1.0, 1.0)
+    half = quorum_merge_batched(g, stacked, base, stale, 0.5, 1.0, 0.5)
+    # half participation moves the model half as far from g
+    for lg, lf, lh in zip(jax.tree.leaves(g), jax.tree.leaves(full),
+                          jax.tree.leaves(half), strict=True):
+        assert np.allclose(np.asarray(lh) - np.asarray(lg),
+                           0.5 * (np.asarray(lf) - np.asarray(lg)),
+                           rtol=1e-5, atol=1e-6)
+
+
+def test_quorum_merge_refuses_nonpositive_participation():
+    rng = np.random.default_rng(14)
+    g, stacked = _tree(rng), _tree(rng, 2)
+    with pytest.raises(ValueError):
+        quorum_merge_batched(g, stacked, np.ones(2), np.zeros(2),
+                             0.5, 1.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# zero-fault bit-identity (the tentpole acceptance pin)
+# ---------------------------------------------------------------------------
+def test_armed_but_silent_schedule_is_bit_identical_online():
+    spec = get_scenario("online-fig4").with_overrides(**SMOKE)
+    armed = spec.with_overrides(faults=NEVER)
+    a = run_experiment(spec, ["pso"], rounds=4, seeds=(0,),
+                       progress=False).runs[0]
+    b = run_experiment(armed, ["pso"], rounds=4, seeds=(0,),
+                       progress=False).runs[0]
+    assert a.tpds == b.tpds
+    assert a.metrics["loss"] == b.metrics["loss"]
+    assert a.metrics["accuracy"] == b.metrics["accuracy"]
+    # the armed run additionally reports the (all-zero) fault series
+    assert b.metrics["faults"] == [0.0] * 4
+    assert b.metrics["dropped_updates"] == [0.0] * 4
+
+
+def test_armed_but_silent_schedule_is_bit_identical_emulated():
+    spec = get_scenario("paper-fig4").with_overrides(**SMOKE)
+    armed = spec.with_overrides(faults=NEVER)
+    a = run_experiment(spec, ["greedy"], rounds=3, seeds=(0,),
+                       progress=False).runs[0]
+    b = run_experiment(armed, ["greedy"], rounds=3, seeds=(0,),
+                       progress=False).runs[0]
+    assert a.tpds == b.tpds
+    assert a.metrics["loss"] == b.metrics["loss"]
+    assert b.metrics["faults"] == [0.0] * 3
+
+
+def test_simulated_track_refuses_fault_schedules():
+    spec = get_scenario("paper-fig3").with_overrides(faults=NEVER)
+    with pytest.raises(ValueError, match="fault"):
+        spec.make_environment(0)
+
+
+# ---------------------------------------------------------------------------
+# fault semantics through the environments
+# ---------------------------------------------------------------------------
+def test_online_drop_retries_then_delivers():
+    # a dropped update with retries available re-sends after backoff:
+    # the retry counter moves, nothing is permanently lost
+    spec = get_scenario("online-fig4").with_overrides(
+        **SMOKE, faults=json.dumps(
+            [{"fault": "UpdateDrop", "client": 0, "at_round": 1,
+              "offset": 0.05}]),
+        retry_limit="3")
+    run = run_single(spec, "pso", seed=0, rounds=3)
+    assert run.metrics["retries"][-1] == 1.0
+    assert run.metrics["dropped_updates"][-1] == 0.0
+
+
+def test_online_drop_without_retry_loses_the_update():
+    spec = get_scenario("online-fig4").with_overrides(
+        **SMOKE, faults=json.dumps(
+            [{"fault": "UpdateDrop", "client": 0, "at_round": 1,
+              "offset": 0.05}]))
+    run = run_single(spec, "pso", seed=0, rounds=3)
+    assert run.metrics["retries"][-1] == 0.0
+    assert run.metrics["dropped_updates"][-1] == 1.0
+
+
+def test_online_crash_voids_in_flight_and_excludes_from_cohort():
+    spec = get_scenario("online-fig4").with_overrides(
+        **SMOKE, faults=json.dumps(
+            [{"fault": "ClientCrash", "client": 3, "at_round": 1,
+              "offset": 0.01, "down_rounds": 1}]))
+    run = run_single(spec, "pso", seed=0, rounds=4)
+    assert max(run.metrics["down"]) >= 1.0
+    assert run.metrics["faults"][-1] == 1.0
+    # the crash window expires: by the last round nobody is down
+    assert run.metrics["down"][-1] == 0.0
+
+
+def test_online_aggregator_failure_fails_over_mid_round():
+    spec = get_scenario("online-fig4").with_overrides(
+        **SMOKE, faults=json.dumps(
+            [{"fault": "AggregatorFailure", "slot": 0, "at_round": 1,
+              "offset": 0.05, "down_rounds": 1}]))
+    run = run_single(spec, "pso", seed=0, rounds=4)
+    assert run.metrics["failovers"][-1] >= 1.0
+    assert any("FAILOVER" in line for line in run.event_log)
+
+
+def test_online_partition_holds_and_reinjects():
+    spec = get_scenario("online-fig4").with_overrides(
+        **SMOKE, faults=json.dumps(
+            [{"fault": "NetworkPartition", "clients": [2, 5],
+              "at_round": 1, "for_rounds": 1}]))
+    run = run_single(spec, "pso", seed=0, rounds=4)
+    assert max(run.metrics["partitioned"]) == 2.0
+    assert run.metrics["partitioned"][-1] == 0.0  # healed
+
+
+def test_online_quorum_refusal_holds_the_model():
+    # an impossible quorum refuses every merge: degraded flushes pile
+    # up, nothing commits, the run still completes with finite metrics
+    spec = get_scenario("online-fig4").with_overrides(
+        **SMOKE, quorum_frac="0.99")
+    run = run_single(spec, "pso", seed=0, rounds=3)
+    assert run.metrics["degraded_flushes"][-1] > 0
+    assert all(m == 0.0 for m in run.metrics["merged"])
+    assert all(np.isfinite(v) for v in run.metrics["loss"])
+
+
+def test_emulated_faults_shrink_cohort_and_recover():
+    spec = get_scenario("paper-fig4").with_overrides(
+        **SMOKE, faults=json.dumps([
+            {"fault": "ClientCrash", "client": 3, "at_round": 1,
+             "down_rounds": 1},
+            {"fault": "UpdateDrop", "client": 5, "at_round": 2},
+            {"fault": "AggregatorFailure", "slot": 0, "at_round": 3,
+             "down_rounds": 1}]))
+    run = run_single(spec, "greedy", seed=0, rounds=5)
+    merged = run.metrics["merged"]
+    assert merged[0] == 10.0          # clean round: full cohort
+    assert merged[1] == 9.0           # crash: one client down
+    assert merged[2] == 9.0           # drop: trained but not merged
+    assert run.metrics["failovers"][-1] == 1.0
+    assert merged[-1] == 10.0         # everything healed
+
+
+def test_stale_queued_arrival_for_retired_client_fails_loudly():
+    # satellite: the event engine must refuse to migrate a queue that
+    # still routes arrivals to a client the resize retired
+    spec = get_scenario("online-fig4").with_overrides(**SMOKE)
+    env = spec.make_environment(0)
+    env.begin()
+    strategy_placement = np.array([0, 1, 2], np.int64)
+    env.step(0, strategy_placement)
+    # smuggle in an arrival for a client id the pool has never minted
+    env.clock.schedule(env.clock.now + 0.1, UpdateArrival(999, 0))
+    env.clients.leave([9])
+    with pytest.raises(RuntimeError, match="outside the remap domain"):
+        env.sync_topology()
+
+
+# ---------------------------------------------------------------------------
+# every strategy survives the fault presets
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("preset", ["online-faulty", "chaos"])
+def test_every_registered_strategy_survives_the_preset(preset):
+    from repro.core.registry import list_strategies
+    spec = get_scenario(preset).with_overrides(**SMOKE)
+    rounds = 4
+    strategies = []
+    for info in list_strategies():
+        cfg = {"placement": (0, 1, 2)} if info.name == "static" else None
+        strategies.append((info.name, cfg) if cfg else info.name)
+    res = run_experiment(spec, strategies, rounds=rounds, seeds=(0,),
+                         progress=False)
+    # env.step validates every proposed placement internally; a crashed
+    # host or failover never leaves a run without a full trajectory
+    for run in res.runs:
+        assert len(run.tpds) == rounds
+        assert all(np.isfinite(t) and t > 0 for t in run.tpds)
+        assert len(run.metrics["faults"]) == rounds
+    d = res.to_dict()
+    assert d["schema_version"] == 3
+    assert validate_result_dict(d) == []
+
+
+def test_v2_artifact_scenario_without_fault_keys_loads():
+    d = get_scenario("paper-fig4").to_dict()
+    for k in ("faults", "fault_profile", "quorum_frac", "retry_limit",
+              "retry_backoff"):
+        d.pop(k)
+    spec = ScenarioSpec.from_dict(d)
+    assert spec.make_faults(0).empty and spec.quorum_frac == 0.0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/resume bit-identity (the second acceptance pin)
+# ---------------------------------------------------------------------------
+def test_checkpointing_never_perturbs_the_run(tmp_path):
+    spec = get_scenario("online-faulty").with_overrides(**SMOKE)
+    plain = run_single(spec, "pso", seed=0, rounds=4)
+    ckpt = run_single(spec, "pso", seed=0, rounds=4,
+                      checkpoint_dir=str(tmp_path))
+    assert json.dumps(ckpt.to_dict(), sort_keys=True) == \
+        json.dumps(plain.to_dict(), sort_keys=True)
+
+
+def test_resume_from_checkpoint_is_bit_identical_online(tmp_path):
+    spec = get_scenario("online-faulty").with_overrides(**SMOKE)
+    full = run_single(spec, "pso", seed=0, rounds=6)
+    run_single(spec, "pso", seed=0, rounds=3,
+               checkpoint_dir=str(tmp_path))
+    resumed = run_single(spec, "pso", seed=0, rounds=6,
+                         checkpoint_dir=str(tmp_path), resume=True)
+    assert json.dumps(resumed.to_dict(), sort_keys=True) == \
+        json.dumps(full.to_dict(), sort_keys=True)
+
+
+def test_resume_from_checkpoint_is_bit_identical_emulated(tmp_path):
+    spec = get_scenario("chaos").with_overrides(**SMOKE) \
+        .for_env("emulated")
+    full = run_single(spec, "greedy", seed=1, rounds=5)
+    run_single(spec, "greedy", seed=1, rounds=2,
+               checkpoint_dir=str(tmp_path))
+    resumed = run_single(spec, "greedy", seed=1, rounds=5,
+                         checkpoint_dir=str(tmp_path), resume=True)
+    assert json.dumps(resumed.to_dict(), sort_keys=True) == \
+        json.dumps(full.to_dict(), sort_keys=True)
+
+
+def test_checkpointing_refuses_elastic_scenarios(tmp_path):
+    spec = get_scenario("flash-crowd")
+    with pytest.raises(ValueError, match="elastic"):
+        run_single(spec, "pso", seed=0, rounds=2,
+                   checkpoint_dir=str(tmp_path))
+
+
+def test_resume_without_checkpoint_dir_is_an_error():
+    spec = get_scenario("online-fig4").with_overrides(**SMOKE)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        run_single(spec, "pso", seed=0, rounds=2, resume=True)
