@@ -31,7 +31,8 @@ bench-round:
 bench-fig4:
 	PYTHONPATH=src $(PY) benchmarks/bench_fig4_cluster.py --rounds 50
 
-# swarm-scale sweep: scalar vs exact-fast vs batched, 1k -> 10k clients;
+# swarm-scale sweep: scalar vs exact-fast vs batched, 1k -> 10k
+# fully-participating clients plus the sampled 100k/1M-pool rungs;
 # writes + schema-checks $(BENCH_OUT)
 bench-scale:
 	PYTHONPATH=src $(PY) benchmarks/bench_scale.py --out $(BENCH_OUT)

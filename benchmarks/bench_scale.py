@@ -1,5 +1,6 @@
 """Swarm-scale sweep benchmark: the scalar seed-era path vs the exact
-fast path vs the batched lockstep runner, 1k -> 10k clients.
+fast path vs the batched lockstep runner, 1k clients -> a sampled
+million-client pool.
 
 Three rungs per scenario, all driving the SAME strategies over the same
 seeds (their trajectories are bit-identical — the bench asserts it):
@@ -13,6 +14,18 @@ seeds (their trajectories are bit-identical — the bench asserts it):
   float64 batch-of-1 evaluator (``CostModel.tpd_fast``).
 * ``batched``    — the lockstep runner: one exact
   ``PooledTPDEvaluator`` call per round for every (strategy, seed) run.
+
+Sampled scenarios (``large-100k``, ``pool-1m``) keep the full client
+pool resident and score a per-round cohort: their rows carry
+``pool_clients`` (the resident population) next to ``clients`` (the
+cohort the tree is built for), and every row records ``peak_rss_mb``
+(the process high-water RSS at row end — monotone across rows, so
+order scenarios smallest-pool-first; the column exists to show memory
+staying sub-linear in pool size). ``bench_scenario`` refuses a
+"sampled" spec whose tree actually spans the whole pool — a preset
+silently falling back to full participation would otherwise bench the
+wrong engine — and ``--validate`` re-checks the written rows for the
+same property (``pool_clients > clients`` whenever sampling is on).
 
 Writes the ``BENCH_scale.json`` artifact (schema-versioned; CI runs
 ``--smoke`` and ``--validate`` to fail on drift). ``--validate`` can
@@ -31,6 +44,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import resource
 import sys
 import time
 from pathlib import Path
@@ -45,11 +59,18 @@ OUT = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
 BENCH_SCHEMA = "repro.benchmarks/scale"
 BENCH_SCHEMA_VERSION = 1
 
-_ROW_KEYS = ("scenario", "clients", "slots", "rounds", "seeds",
+_ROW_KEYS = ("scenario", "clients", "pool_clients", "sampling",
+             "slots", "rounds", "seeds",
              "strategies", "batched_s", "sequential_s", "scalar_s",
              "scalar_rounds_measured", "scalar_s_full",
              "speedup_batched_vs_scalar", "speedup_sequential_vs_scalar",
-             "rounds_per_sec_batched", "identical_artifacts")
+             "rounds_per_sec_batched", "peak_rss_mb",
+             "identical_artifacts")
+
+
+def _peak_rss_mb() -> float:
+    """Process high-water RSS in MiB (Linux ru_maxrss is KiB)."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 
 
 class _SeedEraPSO(FlagSwapPSO):
@@ -104,7 +125,13 @@ def scalar_sweep(spec, strategies, seeds, rounds):
                 strat.pso.v_max = old.v_max
             env.begin()
             tpds = []
+            sync = getattr(env, "sync_topology", None)
             for r in range(rounds):
+                # sampled environments draw the round's cohort here; a
+                # static pool returns None and nothing moves
+                update = sync() if sync is not None else None
+                if update is not None:
+                    strat.migrate(update)
                 p = np.asarray(strat.propose(r), np.int64)
                 env.hierarchy.validate_placement(p)
                 t = float(env.cost_model.tpd(p))
@@ -129,7 +156,19 @@ def bench_scenario(name, strategies, seeds, *, rounds=None,
     rounds = rounds if rounds is not None else spec.rounds
     scalar_rounds = min(scalar_rounds or rounds, rounds)
     h = spec.make_hierarchy()
-    print(f"== {name}: {h.total_clients} clients, {h.dimensions} slots, "
+    sampling = getattr(spec, "sampling", "off")
+    pool_clients = int(spec.pool_size) if sampling != "off" \
+        else int(h.total_clients)
+    if sampling != "off" and h.total_clients >= pool_clients:
+        raise RuntimeError(
+            f"{name}: sampling={sampling!r} but the hierarchy spans "
+            f"{h.total_clients} clients against a pool of "
+            f"{pool_clients} — the preset silently fell back to full "
+            f"participation; fix its cohort_size/pool_size")
+    pool_note = "" if sampling == "off" else \
+        f" (cohort of a {pool_clients:,}-client pool)"
+    print(f"== {name}: {h.total_clients} clients{pool_note}, "
+          f"{h.dimensions} slots, "
           f"{rounds} rounds x {list(seeds)} seeds x {strategies} ==")
 
     tb, res_b = _best_of(
@@ -154,6 +193,7 @@ def bench_scenario(name, strategies, seeds, *, rounds=None,
 
     row = {
         "scenario": name, "clients": h.total_clients,
+        "pool_clients": pool_clients, "sampling": sampling,
         "slots": h.dimensions, "rounds": rounds, "seeds": list(seeds),
         "strategies": list(strategies),
         "batched_s": tb, "sequential_s": ts,
@@ -162,6 +202,7 @@ def bench_scenario(name, strategies, seeds, *, rounds=None,
         "speedup_batched_vs_scalar": t_scalar_full / tb,
         "speedup_sequential_vs_scalar": t_scalar_full / ts,
         "rounds_per_sec_batched": rounds / tb,
+        "peak_rss_mb": _peak_rss_mb(),
         "identical_artifacts": bool(identical),
     }
     print(f"   scalar {t_scalar_full:7.2f}s"
@@ -169,6 +210,7 @@ def bench_scenario(name, strategies, seeds, *, rounds=None,
           f" | sequential {ts:6.2f}s ({row['speedup_sequential_vs_scalar']:5.1f}x)"
           f" | batched {tb:6.2f}s ({row['speedup_batched_vs_scalar']:5.1f}x)"
           f" | {row['rounds_per_sec_batched']:7.0f} rounds/s"
+          f" | peak RSS {row['peak_rss_mb']:6.0f} MiB"
           f" | identical={identical}")
     return row
 
@@ -193,6 +235,12 @@ def validate_bench_dict(d) -> list:
         if not row.get("identical_artifacts", False):
             errors.append(f"rows[{i}] parity check failed "
                           f"(identical_artifacts is not true)")
+        if row.get("sampling", "off") != "off" and \
+                not row.get("pool_clients", 0) > row.get("clients", 0):
+            errors.append(
+                f"rows[{i}] ({row.get('scenario')}): sampling is on but "
+                f"pool_clients <= clients — the row benched full "
+                f"participation, not a sampled cohort")
     if "pso_10k_50_rounds_s" in d and \
             not isinstance(d["pso_10k_50_rounds_s"], (int, float)):
         errors.append("pso_10k_50_rounds_s mistyped")
@@ -213,7 +261,8 @@ _GATED_METRICS = ("speedup_batched_vs_scalar",
 # workload identity: rows only compare when these all match, so a bench
 # reconfiguration fails loudly ("refresh the baseline") instead of
 # comparing apples to pears
-_WORKLOAD_KEYS = ("clients", "slots", "rounds", "seeds", "strategies")
+_WORKLOAD_KEYS = ("clients", "pool_clients", "sampling", "slots",
+                  "rounds", "seeds", "strategies")
 
 
 def compare_to_baseline(d: dict, baseline: dict,
@@ -301,9 +350,11 @@ def main(argv=None) -> int:
         print(f"{args.validate}: OK ({len(d['rows'])} rows)")
         for row in d["rows"]:
             print(f"  {row['scenario']:10s} "
+                  f"pool {row['pool_clients']:>9,d} "
+                  f"cohort {row['clients']:>6d} "
                   f"batched {row['speedup_batched_vs_scalar']:6.1f}x "
                   f"vs scalar, {row['rounds_per_sec_batched']:8.0f} "
-                  f"rounds/s")
+                  f"rounds/s, peak RSS {row['peak_rss_mb']:6.0f} MiB")
         if args.compare_baseline:
             baseline = json.loads(Path(args.compare_baseline).read_text())
             problems = compare_to_baseline(d, baseline, args.tolerance)
@@ -328,6 +379,15 @@ def main(argv=None) -> int:
         results["rows"].append(bench_scenario(
             "large-1k", ["pso", "random"], (0, 1), rounds=30, reps=3,
             scalar_reps=2))
+        # the sampled rung: a 100k-client resident pool scored through
+        # 512-client cohorts — the smoke gate pins both its trajectory
+        # parity and its speedups, and `--validate` would fail loudly if
+        # the preset ever degraded to full participation. Full 60-round
+        # preset length: the per-rung times are small enough that
+        # shorter runs make the gated speedup ratios jittery.
+        results["rows"].append(bench_scenario(
+            "large-100k", ["pso", "random"], (0, 1), reps=3,
+            scalar_reps=2))
     else:
         results["rows"].append(bench_scenario(
             "large-1k", ["pso", "random"], (0, 1, 2)))
@@ -337,6 +397,15 @@ def main(argv=None) -> int:
         results["rows"].append(bench_scenario(
             "large-10k", ["pso", "random"], (0, 1, 2), scalar_rounds=10,
             scalar_reps=1))
+        # sampled pools, smallest first: peak_rss_mb is a process
+        # high-water mark, so this ordering makes the column readable
+        # as "how much the pool added"
+        results["rows"].append(bench_scenario(
+            "large-100k", ["pso", "random"], (0, 1), scalar_rounds=20,
+            scalar_reps=1))
+        results["rows"].append(bench_scenario(
+            "pool-1m", ["pso", "random"], (0,), reps=2,
+            scalar_rounds=5, scalar_reps=1))
         # the headline acceptance probe: 50-round PSO run at 10k clients
         t0 = time.perf_counter()
         run_experiment("large-10k", ["pso"], rounds=50, seeds=(0,),

@@ -84,6 +84,11 @@ REGISTRY: Tuple[OraclePair, ...] = (
         tests=("tests/test_scale_parity.py",),
     ),
     OraclePair(
+        fast="repro.core.cost_model:PooledTPDEvaluator.tpds_sharded",
+        oracle="repro.core.cost_model:CostModel.tpd_fast",
+        tests=("tests/test_scale_parity.py",),
+    ),
+    OraclePair(
         fast="repro.core.cost_model:TwoTierCostModel.cross_pod_edges",
         oracle="repro.core.cost_model:TwoTierCostModel._cross_pod_edges_ref",
         tests=("tests/test_scale_parity.py",),

@@ -355,18 +355,23 @@ class CostModel:
 
     def _pallas_ok(self) -> bool:
         """The Pallas TPD kernel covers the base eq. 6/7 model (no pod
-        edge costs) and only lowers on TPU backends."""
+        edge costs) and compiles on TPU and GPU backends (tiled per
+        backend — see ``kernels.tpd.default_block_p``)."""
         return getattr(self, "pod_of", None) is None and \
-            jax.default_backend() == "tpu"
+            jax.default_backend() in ("tpu", "gpu")
 
     def batch_tpd(self, placements, backend: Optional[str] = None
                   ) -> np.ndarray:
         """(P, D) placements -> (P,) TPDs.
 
         ``backend``: ``None`` auto-selects (numpy below the fast-path
-        threshold, the Pallas kernel on TPU for large batches, jit'd XLA
-        otherwise); ``"np"`` / ``"jit"`` / ``"pallas"`` force a path
-        (``"pallas"`` interprets off-TPU — validation only).
+        threshold, the Pallas kernel on TPU/GPU for large batches,
+        jit'd XLA otherwise); ``"np"`` / ``"jit"`` / ``"pallas"`` /
+        ``"interpret"`` force a path. ``"pallas"`` compiles the kernel
+        on TPU/GPU and interprets elsewhere; ``"interpret"`` forces the
+        Pallas INTERPRETER even on accelerator backends — the CI
+        escape hatch that exercises the kernel body on any host
+        (pinned against ``kernels.ref.tpd_ref`` by the parity suite).
         """
         placements = np.asarray(placements, np.int32)
         if backend is None:
@@ -380,29 +385,47 @@ class CostModel:
         elif backend == "jit":
             fn = self._cached("_batch_tpd_jax",
                               lambda: self._make_batch_tpd(jnp))
-        elif backend == "pallas":
+        elif backend in ("pallas", "interpret"):
             if getattr(self, "pod_of", None) is not None:
                 raise ValueError("the Pallas TPD kernel does not cover "
                                  "two-tier pod edge costs; use "
                                  "backend='jit'")
-            fn = self._cached("_batch_tpd_pl",
-                              lambda: self._make_pallas_tpd())
+            if backend == "interpret":
+                fn = self._cached(
+                    "_batch_tpd_pl_int",
+                    lambda: self._make_pallas_tpd(force_interpret=True))
+            else:
+                fn = self._cached("_batch_tpd_pl",
+                                  lambda: self._make_pallas_tpd())
         else:
             raise ValueError(f"unknown batch_tpd backend {backend!r}; "
-                             f"use None, 'np', 'jit' or 'pallas'")
+                             f"use None, 'np', 'jit', 'pallas' or "
+                             f"'interpret'")
         return fn(placements)
 
-    def _make_pallas_tpd(self):
+    def _make_pallas_tpd(self, force_interpret: bool = False):
         """Closure running the fused Pallas TPD kernel: static tables are
         baked once; per call only the (P, L) leaf loads are computed
         host-side (the trainer-split rank trick) before the kernel fuses
-        the attribute gathers and the per-level max-reduce."""
-        from repro.kernels.tpd import batch_tpd_pallas, tpd_kernel_inputs
+        the attribute gathers and the per-level max-reduce.
+
+        The particle-tile size follows the backend (wide tiles on GPU,
+        the lane-sized TPU default otherwise); ``force_interpret`` runs
+        the kernel body under the Pallas interpreter regardless of
+        backend (the ``backend="interpret"`` escape hatch).
+        """
+        from repro.kernels.tpd import (
+            batch_tpd_pallas,
+            default_block_p,
+            tpd_kernel_inputs,
+        )
         h = self.hierarchy
         tables = tpd_kernel_inputs(h)
         attrs = self._attr_stack(np.float32)        # (3, C)
         n_leaves, C = h.n_leaves, h.total_clients
-        interpret = jax.default_backend() != "tpu"
+        jax_backend = jax.default_backend()
+        interpret = force_interpret or jax_backend not in ("tpu", "gpu")
+        block_p = default_block_p(None if interpret else jax_backend)
         penalty = float(self.memory_penalty)
 
         def run(placements):
@@ -420,7 +443,7 @@ class CostModel:
             out = batch_tpd_pallas(
                 jnp.asarray(placements), jnp.asarray(attrs),
                 jnp.asarray(leaf_load.astype(np.float32)), *tables,
-                penalty=penalty, interpret=interpret)
+                penalty=penalty, block_p=block_p, interpret=interpret)
             return np.asarray(out)
 
         return run
@@ -460,11 +483,26 @@ class PooledTPDEvaluator:
     pool's mutation version changes (event schedules bump it), so
     mid-run churn/drift/straggler mutations are reflected in the very
     next call.
+
+    ``shard`` controls device parallelism: ``"auto"`` (default) keeps
+    the single-device float64 numpy path on 1 visible device — the
+    bit-identity pin — and splits each call's placement rows across
+    devices when more than one is visible (``shard_map`` row shards +
+    segment-sum merge via ``fl.distributed.shard_rows``, float64 under
+    ``jax.experimental.enable_x64``); ``"off"`` pins the numpy path
+    unconditionally; ``"on"`` forces the sharded build even on 1
+    device (tests). The sharded build re-jits whenever any pool's
+    version moves (closure-baked attribute stack), so it pays off on
+    static pools — drifting pools on 1 device stay on the numpy path
+    anyway.
     """
 
-    def __init__(self, models: Sequence[CostModel]):
+    def __init__(self, models: Sequence[CostModel], shard: str = "auto"):
         if not models:
             raise ValueError("need at least one cost model")
+        if shard not in ("auto", "on", "off"):
+            raise ValueError(f"unknown shard mode {shard!r}; use "
+                             f"'auto', 'on' or 'off'")
         m0 = models[0]
         for m in models[1:]:
             if m.hierarchy != m0.hierarchy:
@@ -487,26 +525,84 @@ class PooledTPDEvaluator:
                 raise ValueError("pooled evaluation needs one shared pod "
                                  "topology")
         self.models = list(models)
+        self.shard = shard
         self._versions: Optional[tuple] = None
         self._fn = None
+        self._shard_fn = None
+        self._shard_sig: Optional[tuple] = None
+
+    def _check_aligned(self) -> None:
+        """Elastic runs retarget models in place; a rebuild must not mix
+        topology epochs (the batched runner groups runs into
+        same-hierarchy cohorts before pooling)."""
+        for m in self.models[1:]:
+            if m.hierarchy != self.models[0].hierarchy:
+                raise ValueError("pooled evaluation needs one shared "
+                                 "hierarchy shape")
 
     def tpds(self, placements, pool_idx=None) -> np.ndarray:
         placements = np.asarray(placements, np.int32)
+        if self.shard != "off":
+            try:
+                ndev = jax.local_device_count()
+            except RuntimeError:  # pragma: no cover - no backend at all
+                ndev = 1
+            if self.shard == "on" or \
+                    (ndev > 1 and placements.shape[0] >= ndev):
+                return self._tpds_sharded(placements, pool_idx,
+                                          max(ndev, 1))
         versions = tuple(m._client_token() for m in self.models)
         if self._fn is None or versions != self._versions:
-            # elastic runs retarget models in place; a rebuild must not
-            # mix topology epochs (the batched runner groups runs into
-            # same-hierarchy cohorts before pooling)
-            for m in self.models[1:]:
-                if m.hierarchy != self.models[0].hierarchy:
-                    raise ValueError("pooled evaluation needs one shared "
-                                     "hierarchy shape")
+            self._check_aligned()
             attrs = np.stack(
                 [m._attr_stack(np.float64) for m in self.models], axis=1)
             self._fn = self.models[0]._make_batch_tpd(
                 np, dtype=np.float64, pool_attrs=attrs)
             self._versions = versions
         return self._fn(placements, pool_idx)
+
+    def tpds_sharded(self, placements, pool_idx=None,
+                     ndev: Optional[int] = None) -> np.ndarray:
+        """The device-sharded pooled call, explicitly (what ``tpds``
+        auto-dispatches to on multi-device hosts): placement rows split
+        across a 1-D ``("rows",)`` mesh via ``fl.distributed.
+        shard_rows`` — each device scores its shard through the same
+        jit'd pooled closure and the full (P,) vector is reassembled by
+        a segment-sum + psum merge. Runs in float64 under
+        ``jax.experimental.enable_x64``; numerically it is the XLA
+        build of the numpy exact path (same reduction ORDER per row —
+        sliced per-level maxima summed deepest-first — so any deltas
+        are non-associativity noise at f64, pinned ~1e-12 by the parity
+        suite against the sequential ``tpds`` oracle)."""
+        placements = np.asarray(placements, np.int32)
+        return self._tpds_sharded(
+            placements, pool_idx,
+            jax.local_device_count() if ndev is None else int(ndev))
+
+    def _tpds_sharded(self, placements, pool_idx, ndev: int) -> np.ndarray:
+        from jax.experimental import enable_x64
+
+        from repro.fl.distributed import shard_rows
+        n_rows = placements.shape[0]
+        rows = np.arange(n_rows) if pool_idx is None \
+            else np.asarray(pool_idx)
+        ndev = max(1, min(int(ndev), n_rows))
+        versions = tuple(m._client_token() for m in self.models)
+        sig = (versions, n_rows, placements.shape[1], ndev)
+        with enable_x64():
+            if self._shard_fn is None or self._shard_sig != sig:
+                self._check_aligned()
+                attrs = np.stack(
+                    [m._attr_stack(np.float64) for m in self.models],
+                    axis=1)
+                fn = self.models[0]._make_batch_tpd(
+                    jnp, dtype=np.float64, pool_attrs=attrs)
+                mesh = jax.make_mesh((ndev,), ("rows",))
+                self._shard_fn = shard_rows(fn, mesh, n_rows)
+                self._shard_sig = sig
+            out = self._shard_fn(jnp.asarray(placements),
+                                 jnp.asarray(rows))
+        return np.asarray(out, np.float64)
 
 
 @dataclass(frozen=True)

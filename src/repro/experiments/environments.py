@@ -190,6 +190,100 @@ class SimulatedEnvironment:
         self._capacity = int(state["capacity"])
 
 
+class SampledSimulatedEnvironment(SimulatedEnvironment):
+    """The simulated world at cross-device scale: a resident ``pool``
+    of ``spec.pool_size`` clients, of which only a per-round sampled
+    cohort participates.
+
+    ``self.clients`` is the COHORT VIEW — a small :class:`ClientPool`
+    whose attribute arrays are rewritten in place from the resident
+    pool at every :meth:`sync_topology` (the cost model reads the view
+    by reference, so the gather is all it takes). The hierarchy, the
+    cost model and every strategy see cohort-sized arrays only; the
+    full pool exists once, as three float64 vectors.
+
+    Event schedules mutate the RESIDENT pool (:attr:`event_pool` —
+    the runner targets it when present): churn/drift hit clients
+    whether or not they are sampled this round, and
+    ``ClientJoin``/``ClientLeave`` resize the pool itself, with the
+    sampler's ``migrate`` hook consuming the composed remap exactly
+    like ``ArrivalProcess`` does on the online track. When a shrunken
+    pool can no longer fill the cohort, the view resizes and the
+    inherited elastic machinery re-hierarchizes.
+
+    Cohort draws are counter-based (``CohortSampler.draw(round, n)``),
+    so sequential and batched sweeps — and checkpoint/resume — replay
+    the identical cohort sequence; the only sampling state a
+    checkpoint carries is the next round counter plus the resident
+    pool arrays.
+    """
+
+    def __init__(self, hierarchy: Hierarchy, cohort_view: ClientPool,
+                 cost_model: CostModel, pool: ClientPool, sampler):
+        super().__init__(hierarchy, cohort_view, cost_model)
+        self.pool = pool
+        self.sampler = sampler
+        self._round_next = 0
+
+    @property
+    def event_pool(self) -> ClientPool:
+        """Where event schedules apply: the resident pool."""
+        return self.pool
+
+    def sync_topology(self) -> Optional[TopologyUpdate]:
+        # 1) reconcile pool resizes (ClientJoin/ClientLeave acted on
+        #    the resident pool) with the sampling stream
+        drained = self.pool.drain_resizes()
+        if drained is not None:
+            self.sampler.migrate(drained[1])
+        # 2) draw this round's cohort from its counter-based stream
+        cohort = self.sampler.draw(self._round_next, len(self.pool))
+        self._round_next += 1
+        # 3) resize the cohort view if the draw size changed (pool
+        #    shrank below cohort_size, or recovered) — through the
+        #    view's own resize log, so the inherited elastic
+        #    re-hierarchization sees an ordinary population change
+        k, old_k = len(cohort), len(self.clients)
+        if k < old_k:
+            self.clients.leave(np.arange(k, old_k))
+        elif k > old_k:
+            grow = k - old_k
+            self.clients.join(memcap=np.zeros(grow),
+                              pspeed=np.ones(grow))
+        # 4) gather the cohort's attributes into the view in place
+        self.clients.memcap[:] = self.pool.memcap[cohort]
+        self.clients.pspeed[:] = self.pool.pspeed[cohort]
+        self.clients.mdatasize[:] = self.pool.mdatasize[cohort]
+        self.clients.touch()
+        return super().sync_topology()
+
+    # -- checkpoint/restore --------------------------------------------------
+    def checkpoint_state(self) -> dict:
+        d = super().checkpoint_state()
+        d["sampling"] = {
+            "round_next": int(self._round_next),
+            "sampler": self.sampler.state_dict(),
+            "pool": {"memcap": self.pool.memcap.tolist(),
+                     "pspeed": self.pool.pspeed.tolist(),
+                     "mdatasize": self.pool.mdatasize.tolist()},
+        }
+        return d
+
+    def restore_state(self, state: dict, store=None) -> None:
+        super().restore_state(state, store)
+        s = state["sampling"]
+        self._round_next = int(s["round_next"])
+        p = s["pool"]
+        if len(p["memcap"]) != len(self.pool):
+            raise RuntimeError(
+                f"checkpoint pool has {len(p['memcap'])} clients, "
+                f"environment was rebuilt with {len(self.pool)}")
+        self.pool.memcap[:] = np.asarray(p["memcap"], np.float64)
+        self.pool.pspeed[:] = np.asarray(p["pspeed"], np.float64)
+        self.pool.mdatasize[:] = np.asarray(p["mdatasize"], np.float64)
+        self.pool.touch()
+
+
 class EmulatedEnvironment:
     """The Fig. 4 world: rounds cost what the federated run measures.
 
@@ -1345,6 +1439,19 @@ def build_environment(spec, seed: int = 0) -> Environment:
                 "fault schedules need a track that executes rounds — "
                 "the simulated (analytic) track has no clients to "
                 "crash; use kind='emulated' or 'online'")
+        if getattr(spec, "sampling", "off") != "off":
+            # resident pool + round-0 cohort view; subsequent cohorts
+            # are regathered in place by sync_topology
+            sampler = spec.make_sampler(seed)
+            cohort = sampler.draw(0, len(pool))
+            view = ClientPool(
+                memcap=pool.memcap[cohort].copy(),
+                pspeed=pool.pspeed[cohort].copy(),
+                mdatasize=pool.mdatasize[cohort].copy())
+            cm = CostModel(hierarchy, view,
+                           memory_penalty=spec.memory_penalty)
+            return SampledSimulatedEnvironment(hierarchy, view, cm,
+                                               pool, sampler)
         if spec.pods:
             n = hierarchy.total_clients
             pod_of = np.arange(n) * spec.pods // n

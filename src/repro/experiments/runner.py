@@ -246,9 +246,12 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
     if resume:
         start_round, run = _restore_run_state(checkpoint_dir, env,
                                               strategy, events, erng)
+    # sampled environments expose the RESIDENT pool for events (churn /
+    # joins hit the population, not just this round's cohort)
+    event_pool = getattr(env, "event_pool", env.clients)
     for r in range(start_round, rounds):
         for ev in events:
-            msg = ev.on_round(r, env.clients, erng)
+            msg = ev.on_round(r, event_pool, erng)
             if msg:
                 run.event_log.append(f"r{r}: {msg}")
                 if verbose:
@@ -293,7 +296,8 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
 def run_batched(spec: ScenarioSpec,
                 strategies: Sequence[Tuple[str, object]], *,
                 seeds: Sequence[int], rounds: Optional[int] = None,
-                verbose: bool = False) -> List[StrategyRun]:
+                verbose: bool = False,
+                shard: str = "auto") -> List[StrategyRun]:
     """Lockstep batched sweep over a SIMULATED scenario.
 
     ``strategies`` is the normalized [(name, config-or-None), ...] list.
@@ -303,6 +307,13 @@ def run_batched(spec: ScenarioSpec,
     together, and each round's placements are evaluated in one pooled
     exact call. Returns runs ordered [strategy0 x seeds..., strategy1 x
     seeds...], matching the sequential sweep's ordering.
+
+    ``shard`` forwards to :class:`PooledTPDEvaluator`: ``"auto"``
+    splits each round's pooled call across local devices (shard_map
+    row shards + segment-sum merge) when more than one device is
+    visible, ``"off"`` pins the single-device numpy path (the two are
+    the same code on 1 device, so 1-device runs are bit-identical
+    either way).
     """
     if spec.kind != "simulated":
         raise ValueError("batched sweep mode is simulated-only; "
@@ -347,10 +358,12 @@ def run_batched(spec: ScenarioSpec,
 
     for env in envs:
         env.begin()
+    event_pools = [getattr(env, "event_pool", env.clients)
+                   for env in envs]
     for r in range(rounds):
         for i in range(n_rows):
             for ev in events[i]:
-                msg = ev.on_round(r, envs[i].clients, erngs[i])
+                msg = ev.on_round(r, event_pools[i], erngs[i])
                 if msg:
                     runs[i].event_log.append(f"r{r}: {msg}")
                     if verbose:
@@ -374,7 +387,7 @@ def run_batched(spec: ScenarioSpec,
             evaluator = evaluators.get(key)
             if evaluator is None:
                 evaluator = evaluators[key] = PooledTPDEvaluator(
-                    [envs[i].cost_model for i in idxs])
+                    [envs[i].cost_model for i in idxs], shard=shard)
             tpds[idxs] = evaluator.tpds(placements)  # ONE call per cohort
         for i in range(n_rows):
             true_tpd = float(tpds[i])
@@ -421,7 +434,8 @@ def run_experiment(scenario: Union[str, ScenarioSpec],
                    seeds: Sequence[int] = (0,), *,
                    verbose: bool = False,
                    progress: bool = True,
-                   mode: str = "auto") -> ExperimentResult:
+                   mode: str = "auto",
+                   shard: str = "auto") -> ExperimentResult:
     """Sweep ``strategies`` x ``seeds`` over one scenario.
 
     ``scenario`` is a registered preset name or a ScenarioSpec (e.g. a
@@ -449,7 +463,8 @@ def run_experiment(scenario: Union[str, ScenarioSpec],
     if batched:
         t0 = time.perf_counter()
         result.runs.extend(run_batched(spec, norm, seeds=seeds,
-                                       rounds=rounds, verbose=verbose))
+                                       rounds=rounds, verbose=verbose,
+                                       shard=shard))
         wall = time.perf_counter() - t0
         if progress:
             for name, _ in norm:

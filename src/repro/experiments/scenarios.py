@@ -27,6 +27,8 @@ name            kind        what it reproduces / probes
 ``large-1k``    simulated   1k clients, depth-6/width-3 (364 slots)
 ``large-4k``    simulated   4k clients, depth-5/width-4 (341 slots)
 ``large-10k``   simulated   10k clients, depth-6/width-4 (1365 slots)
+``large-100k``  simulated   100k pool, 512-cohort/round sampling
+``pool-1m``     simulated   1M pool, 1024-cohort/round sampling
 ``flash-crowd``     simulated  population ramps mid-run; tree re-grows
 ``composite-storm`` simulated  joins+leaves+churn+stragglers+noise at once
 ``ebb-and-flow``    simulated  periodic join/leave waves across capacity
@@ -61,6 +63,15 @@ practical through the exact vectorized evaluators
 (``CostModel.tpd_fast`` per step, ``PooledTPDEvaluator`` in the batched
 sweep runner) — the scalar eq. 6/7 loop costs milliseconds per call at
 these sizes (``benchmarks/bench_scale.py`` tracks the gap).
+
+``large-100k``/``pool-1m`` add the SAMPLED regime on top: the spec's
+``sampling``/``pool_size``/``cohort_size`` knobs keep a resident
+:class:`ClientPool` of ``pool_size`` clients while every round draws a
+``cohort_size`` cohort from a counter-based stream
+(``repro.experiments.sampling``); the cohort — not the pool — drives
+``choose_fl_hierarchy`` and the cost model, so memory is bounded by
+the cohort. ``sampling='off'`` (the default everywhere else) runs the
+exact pre-sampling code paths, byte-identical artifacts included.
 
 Specs are frozen; derive variants with ``with_overrides(depth=4, ...)``
 (the CLI's ``--set key=value`` goes through the same path).
@@ -429,18 +440,61 @@ class ScenarioSpec:
     retry_limit: int = 0                 # retries per dropped update
     retry_backoff: float = 0.25          # virtual-time backoff base
 
+    # client sampling (simulated track; repro.experiments.sampling):
+    # the resident pool holds pool_size clients, each round draws a
+    # cohort_size cohort from a counter-based stream; the COHORT drives
+    # the hierarchy and the cost model, so memory scales with the
+    # cohort, not the pool. "off" = full participation (the pre-
+    # sampling code paths, byte-identical artifacts).
+    sampling: str = "off"                # 'off' | 'uniform'
+    pool_size: Optional[int] = None      # resident pool (sampling only)
+    cohort_size: int = 0                 # per-round participants
+
     def __post_init__(self):
         if self.kind not in ("simulated", "emulated", "online"):
             raise ValueError(f"unknown scenario kind {self.kind!r}")
+        if self.sampling not in ("off", "uniform"):
+            raise ValueError(f"unknown sampling mode {self.sampling!r}; "
+                             f"use 'off' or 'uniform'")
+        if self.sampling != "off":
+            if self.kind != "simulated":
+                raise ValueError("client sampling is simulated-only "
+                                 f"(kind={self.kind!r})")
+            if self.pods is not None:
+                raise ValueError("client sampling does not compose with "
+                                 "the two-tier pod topology yet")
+            if self.cohort_size < 2:
+                raise ValueError(f"sampling needs cohort_size >= 2, "
+                                 f"got {self.cohort_size}")
+            if self.pool_size is None or self.pool_size < self.cohort_size:
+                raise ValueError(
+                    f"sampling needs pool_size >= cohort_size "
+                    f"({self.pool_size} vs {self.cohort_size})")
 
     # -- construction ------------------------------------------------------
     def make_hierarchy(self) -> Hierarchy:
+        if self.sampling != "off":
+            # the cohort drives the tree: pick the scale-ladder shape
+            # that fits cohort_size clients, exactly as the elastic
+            # re-hierarchization will mid-run
+            from repro.fl.distributed import choose_fl_hierarchy
+            return choose_fl_hierarchy(self.cohort_size, scale=True)
         return Hierarchy(depth=self.depth, width=self.width,
                          trainers_per_leaf=self.trainers_per_leaf,
                          n_clients=self.n_clients)
 
     def make_pool(self, seed: int) -> ClientPool:
+        if self.sampling != "off":
+            return self.pool.make(int(self.pool_size), seed)
         return self.pool.make(self.make_hierarchy().total_clients, seed)
+
+    def make_sampler(self, seed: int):
+        """The run's :class:`~repro.experiments.sampling.CohortSampler`
+        (None when sampling is off)."""
+        if self.sampling == "off":
+            return None
+        from repro.experiments.sampling import CohortSampler
+        return CohortSampler(seed, self.cohort_size)
 
     def make_environment(self, seed: int = 0):
         """Build a fresh Environment for one (strategy, seed) run."""
@@ -525,6 +579,11 @@ class ScenarioSpec:
         d["faults"] = [f.to_dict() for f in self.faults]
         d["fault_profile"] = (None if self.fault_profile is None
                               else self.fault_profile.to_dict())
+        if self.sampling == "off":
+            # sampling-free artifacts keep the pre-sampling schema
+            # byte-identical (the parity pin in tests/golden/)
+            for k in ("sampling", "pool_size", "cohort_size"):
+                d.pop(k, None)
         return d
 
     @classmethod
@@ -749,6 +808,22 @@ register_scenario(ScenarioSpec(
                 "slots): the paper's 'many clients as candidates' "
                 "regime — a 50-round PSO run completes in seconds on "
                 "CPU."))
+
+register_scenario(ScenarioSpec(
+    name="large-100k", kind="simulated", sampling="uniform",
+    pool_size=100_000, cohort_size=512, rounds=60,
+    description="100k-client resident pool, 512-client sampled cohort "
+                "per round (depth-5/width-3, 121 slots): the first "
+                "cross-device rung — memory scales with the cohort, "
+                "not the pool."))
+
+register_scenario(ScenarioSpec(
+    name="pool-1m", kind="simulated", sampling="uniform",
+    pool_size=1_000_000, cohort_size=1024, rounds=20,
+    description="1M-client resident pool, 1024-client cohort per round "
+                "(the large-1k tree, 364 slots): the production "
+                "cross-device regime — the swarm only ever sees the "
+                "cohort; pool attributes stay resident (~24 MB)."))
 
 register_scenario(ScenarioSpec(
     name="online-fig4", kind="online", depth=2, width=2,

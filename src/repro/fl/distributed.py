@@ -245,3 +245,46 @@ def elastic_rehierarchize(old: Hierarchy, n_clients: int,
     return Hierarchy(depth=old.depth, width=old.width,
                      trainers_per_leaf=old.trainers_per_leaf,
                      n_clients=n_clients), capacity
+
+
+def shard_rows(fn, mesh, n_rows: int, axis: str = "rows"):
+    """Row-shard a batched evaluator across ``mesh[axis]`` devices.
+
+    ``fn`` maps per-row inputs ``(rows, ...)`` to per-row outputs
+    ``(rows,)``. The returned callable splits every input along axis 0
+    into per-device shards under ``shard_map`` (full-manual — partial-
+    auto does not lower on legacy CPU backends), runs ``fn`` on each
+    shard, and merges with the segment-sum trick the aggregation plans
+    use: each device scatters its shard into the zeros of the full
+    (n_rows,) output at its global row offsets and one ``psum`` across
+    the axis adds the disjoint segments back together.
+
+    ``n_rows`` not divisible by the axis size is handled by padding
+    with copies of row 0 (computed and discarded — every device keeps
+    an identical shard shape, which shard_map requires).
+    """
+    ndev = mesh.shape[axis]
+    pad = (-n_rows) % ndev
+    total = n_rows + pad
+    shard = total // ndev
+
+    def body(*local):
+        vals = fn(*local)                               # (shard,)
+        idx = jax.lax.axis_index(axis) * shard + jnp.arange(shard)
+        seg = jax.ops.segment_sum(vals, idx, num_segments=total)
+        return jax.lax.psum(seg, axis)
+
+    sharded = compat.shard_map(
+        body, mesh=mesh,
+        in_specs=P(axis), out_specs=P(),
+        axis_names={axis}, check_vma=False)
+
+    def run(*arrays):
+        if pad:
+            arrays = tuple(
+                jnp.concatenate(
+                    [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])])
+                for a in map(jnp.asarray, arrays))
+        return sharded(*arrays)[:n_rows]
+
+    return run

@@ -1,5 +1,5 @@
-"""Pallas TPU kernel: batched TPD evaluation (paper eqs. 6-7) over a
-placement swarm.
+"""Pallas kernel: batched TPD evaluation (paper eqs. 6-7) over a
+placement swarm, tiled per backend (TPU lanes or GPU blocks).
 
 The swarm evaluator's hot inner shape is ``(P, D)`` placements against a
 ``(3, C)`` client-attribute table: gather every slot host's attributes,
@@ -22,20 +22,37 @@ level table — no scatter, no dynamic slicing. Like the fedavg kernel,
 math accumulates in f32: parity tests pin the kernel against the jnp
 oracle (``kernels.ref.tpd_ref``) exactly and against the float64 scalar
 model within f32 tolerance. ``CostModel.batch_tpd`` dispatches here for
-large batches on TPU backends (``interpret=True`` executes it for
-validation on CPU).
+large batches on TPU and GPU backends — the tile size follows the
+backend (:func:`default_block_p`): 8-particle tiles match the TPU's
+sublane granularity, while GPU blocks want wider (64-particle) tiles
+so each ``pallas_call`` step keeps enough rows to occupy a thread
+block. ``interpret=True`` executes the kernel body under the Pallas
+interpreter on any host — ``CostModel.batch_tpd(backend="interpret")``
+is the CI escape hatch that exercises it without an accelerator.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-DEFAULT_BLOCK_P = 8
+DEFAULT_BLOCK_P = 8        # TPU sublane-sized particle tile
+DEFAULT_BLOCK_P_GPU = 64   # wider tiles to fill a GPU thread block
 _NEG = -3.4e38  # f32-safe -inf stand-in for the masked level max
+
+
+def default_block_p(backend: Optional[str] = None) -> int:
+    """Particle-tile size for ``backend`` (``"tpu"``/``"gpu"``/None).
+
+    None (or any non-GPU backend, interpret mode included) keeps the
+    TPU-shaped default — the interpreter's numerics don't depend on the
+    tile, so small tiles keep CI cheap.
+    """
+    return DEFAULT_BLOCK_P_GPU if backend == "gpu" else DEFAULT_BLOCK_P
 
 
 def tpd_kernel_inputs(hierarchy):

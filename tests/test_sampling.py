@@ -1,0 +1,193 @@
+"""Cohort-sampling determinism + the sampling=off parity pin.
+
+The sampled simulated track (``sampling='uniform'``) keeps a resident
+pool and draws a per-round cohort from a counter-based stream
+(``repro.experiments.sampling.CohortSampler``). Pinned here:
+
+* the cohort sequence is a pure function of (seed, round): identical
+  across sequential vs. batched sweeps, across a checkpoint/resume
+  boundary, and under ``ClientJoin``/``ClientLeave`` pool resizes
+  (the sampler's migrate hook is id-free, like ``ArrivalProcess``);
+* ``sampling='off'`` artifacts are BYTE-identical to the pre-sampling
+  goldens under ``tests/golden/`` on both ``large-1k`` and
+  ``flash-crowd`` (regenerate only on an intentional schema change).
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.experiments import get_scenario, run_experiment
+from repro.experiments.environments import SampledSimulatedEnvironment
+from repro.experiments.runner import run_single
+from repro.experiments.sampling import CohortSampler
+from repro.experiments.scenarios import ClientJoin, ClientLeave
+
+GOLDEN = Path(__file__).parent / "golden"
+
+
+def _spec(**kw):
+    over = {"pool_size": 500, "cohort_size": 32, **kw}
+    return get_scenario("large-100k").with_overrides(**over)
+
+
+def _dump(result) -> str:
+    return json.dumps(result.to_dict(), sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# the sampler itself
+# ---------------------------------------------------------------------------
+def test_cohort_sampler_is_counter_based():
+    s = CohortSampler(seed=7, cohort_size=16)
+    a = s.draw(3, 100)
+    # replay out of order: round 3 is round 3, whatever came before
+    s.draw(0, 100), s.draw(9, 100)
+    np.testing.assert_array_equal(a, s.draw(3, 100))
+    # fresh instance, same seed -> same stream
+    np.testing.assert_array_equal(a, CohortSampler(7, 16).draw(3, 100))
+    assert not np.array_equal(a, CohortSampler(8, 16).draw(3, 100))
+    assert not np.array_equal(a, s.draw(4, 100))
+
+
+def test_cohort_draws_are_sorted_unique_and_clipped():
+    s = CohortSampler(seed=0, cohort_size=16)
+    c = s.draw(0, 100)
+    assert c.shape == (16,)
+    assert np.array_equal(c, np.unique(c))  # sorted + no duplicates
+    assert c.min() >= 0 and c.max() < 100
+    # pool smaller than the cohort: the draw clips to the pool
+    small = s.draw(0, 10)
+    np.testing.assert_array_equal(np.sort(small), np.arange(10))
+
+
+def test_cohort_sampler_migrate_is_id_free():
+    s = CohortSampler(seed=3, cohort_size=8)
+    before = s.draw(5, 64)
+    s.migrate(np.arange(64))  # resize hook: no per-client state to re-key
+    np.testing.assert_array_equal(before, s.draw(5, 64))
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+def test_sampling_spec_validation():
+    with pytest.raises(ValueError, match="pool_size"):
+        _spec(pool_size=16)  # pool < cohort
+    with pytest.raises(ValueError, match="cohort_size"):
+        _spec(cohort_size=1)
+    with pytest.raises(ValueError, match="simulated"):
+        _spec().for_env("emulated")
+    with pytest.raises(ValueError, match="sampling"):
+        _spec(sampling="bogus")
+    with pytest.raises(ValueError, match="pod"):
+        _spec(pods=2)
+
+
+def test_sampled_environment_shape():
+    spec = _spec()
+    env = spec.make_environment(0)
+    assert isinstance(env, SampledSimulatedEnvironment)
+    assert len(env.pool) == 500
+    assert len(env.clients) == 32
+    assert env.event_pool is env.pool
+    # the cohort drives the tree, not the pool
+    assert env.hierarchy.total_clients == 32
+
+
+def test_sampling_off_specs_keep_the_presampling_schema():
+    # absent keys == the pre-PR artifact schema (the byte-identity pin)
+    d = get_scenario("large-1k").to_dict()
+    assert "sampling" not in d and "pool_size" not in d
+    d2 = _spec().to_dict()
+    assert d2["sampling"] == "uniform" and d2["pool_size"] == 500
+
+
+# ---------------------------------------------------------------------------
+# determinism across execution modes
+# ---------------------------------------------------------------------------
+def test_sampled_sweep_sequential_vs_batched_bit_identical():
+    spec = _spec()
+    seq = run_experiment(spec, ["pso", "random"], rounds=8, seeds=(0, 1),
+                         progress=False, mode="sequential")
+    bat = run_experiment(spec, ["pso", "random"], rounds=8, seeds=(0, 1),
+                         progress=False, mode="batched")
+    assert _dump(seq) == _dump(bat)
+
+
+def test_sampled_run_checkpoint_resume_bit_identical(tmp_path):
+    spec = _spec()
+    full = run_single(spec, "pso", seed=0, rounds=8)
+    run_single(spec, "pso", seed=0, rounds=4,
+               checkpoint_dir=str(tmp_path))
+    resumed = run_single(spec, "pso", seed=0, rounds=8,
+                         checkpoint_dir=str(tmp_path), resume=True)
+    assert json.dumps(resumed.to_dict(), sort_keys=True) == \
+        json.dumps(full.to_dict(), sort_keys=True)
+
+
+def test_sampled_resume_survives_pool_drift_before_checkpoint(tmp_path):
+    # drift the resident pool through a straggler-free mutation: the
+    # checkpoint carries the pool arrays, so the resumed run must NOT
+    # rebuild them from the seed
+    spec = _spec(events='[{"event":"PSpeedDrift","at_round":2,'
+                        '"mode":"reverse"}]')
+    full = run_single(spec, "pso", seed=3, rounds=8)
+    run_single(spec, "pso", seed=3, rounds=5,
+               checkpoint_dir=str(tmp_path))
+    resumed = run_single(spec, "pso", seed=3, rounds=8,
+                         checkpoint_dir=str(tmp_path), resume=True)
+    assert json.dumps(resumed.to_dict(), sort_keys=True) == \
+        json.dumps(full.to_dict(), sort_keys=True)
+
+
+def test_sampling_under_join_leave_events():
+    # the pool oscillates through the cohort size: leaves shrink it to
+    # 24 (< cohort 48 -> the VIEW resizes and the elastic machinery
+    # re-hierarchizes), joins recover it — sequential and batched must
+    # still replay the identical cohort sequence
+    spec = _spec(
+        pool_size=60, cohort_size=48,
+        events='[{"event":"ClientLeave","every":4,"count":36,'
+               '"first_round":2,"min_clients":24},'
+               '{"event":"ClientJoin","every":4,"count":36,'
+               '"first_round":4}]')
+    assert spec.is_elastic
+    seq = run_experiment(spec, ["pso"], rounds=12, seeds=(0,),
+                         progress=False, mode="sequential")
+    bat = run_experiment(spec, ["pso"], rounds=12, seeds=(0,),
+                         progress=False, mode="batched")
+    assert _dump(seq) == _dump(bat)
+    n = seq.runs[0].metrics["n_clients"]
+    assert min(n) < 48.0, "pool shrink never reached the cohort"
+    assert max(n) == 48.0
+
+
+def test_sampled_cohorts_follow_event_mutations():
+    # churn on the RESIDENT pool must reach cohort scoring: same seed,
+    # with vs without churn, trajectories diverge
+    calm = run_single(_spec(), "pso", seed=0, rounds=6)
+    churned = run_single(
+        _spec(events='[{"event":"ClientChurn","every":1,'
+                     '"fraction":0.5}]'),
+        "pso", seed=0, rounds=6)
+    assert calm.tpds != churned.tpds
+
+
+# ---------------------------------------------------------------------------
+# sampling=off byte-identity vs the checked-in pre-PR goldens
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,rounds,mode", [
+    ("large-1k", 5, "sequential"),
+    ("large-1k", 5, "batched"),
+    ("flash-crowd", 25, "sequential"),
+    ("flash-crowd", 25, "batched"),
+])
+def test_sampling_off_byte_identical_to_golden(name, rounds, mode):
+    res = run_experiment(name, ["pso", "random"], rounds=rounds,
+                         seeds=(0,), progress=False, mode=mode)
+    got = json.dumps(res.to_dict(), indent=1, sort_keys=True)
+    want = (GOLDEN / f"sampling_off_{name}.json").read_text()
+    assert got == want, (f"{name} ({mode}) artifact drifted from the "
+                         f"pre-sampling golden")

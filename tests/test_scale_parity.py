@@ -348,3 +348,134 @@ def test_scale_presets_registered_and_runnable():
                          progress=False)
     assert len(res.runs[0].tpds) == 3
     assert all(t > 0 for t in res.runs[0].tpds)
+
+
+# ---------------------------------------------------------------------------
+# interpret escape hatch + GPU tiling (kernel body exercised off-TPU)
+# ---------------------------------------------------------------------------
+def test_batch_tpd_interpret_escape_hatch():
+    """backend='interpret' forces the Pallas INTERPRETER on any host:
+    the kernel body runs in CI without an accelerator, pinned against
+    the scalar model; on non-accelerator backends 'pallas' falls back
+    to the same interpreted build (identical outputs)."""
+    h, pool, cm = _scale_setup(n_clients=256, depth=4, width=3)
+    ps = _placements(h, 5)
+    scalar = np.array([cm.tpd(p) for p in ps])
+    got = np.asarray(cm.batch_tpd(ps, backend="interpret"))
+    np.testing.assert_allclose(got, scalar, rtol=2e-5)
+    np.testing.assert_array_equal(
+        got, np.asarray(cm.batch_tpd(ps, backend="pallas")))
+    with pytest.raises(ValueError, match="backend"):
+        cm.batch_tpd(ps, backend="bogus")
+
+
+def test_pallas_gpu_tile_matches_tpd_ref():
+    """The GPU tile width (DEFAULT_BLOCK_P_GPU) through the
+    interpreter: numerics must not depend on the particle-tile size,
+    pinned exactly against the jnp oracle tpd_ref."""
+    import jax.numpy as jnp
+    from repro.kernels.ref import tpd_ref
+    from repro.kernels.tpd import (
+        DEFAULT_BLOCK_P,
+        DEFAULT_BLOCK_P_GPU,
+        batch_tpd_pallas,
+        default_block_p,
+        tpd_kernel_inputs,
+    )
+
+    assert default_block_p("gpu") == DEFAULT_BLOCK_P_GPU
+    assert default_block_p("tpu") == DEFAULT_BLOCK_P
+    assert default_block_p(None) == DEFAULT_BLOCK_P
+
+    h = Hierarchy(depth=4, width=3, trainers_per_leaf=2, n_clients=200)
+    rng = np.random.default_rng(3)
+    pool = ClientPool.random(200, seed=3)
+    pool.mdatasize = rng.uniform(1.0, 40.0, 200)
+    cm = CostModel(h, pool, memory_penalty=1.5)
+    P, C, L = 70, 200, h.n_leaves  # > one GPU tile, non-divisible pad
+    ps = _placements(h, P, seed=4)
+    tables = tpd_kernel_inputs(h)
+    attrs = cm._attr_stack(np.float32)
+    p_off = np.arange(P)[:, None]
+    unplaced = np.bincount((ps + C * p_off).ravel(),
+                           minlength=P * C).reshape(P, C) == 0
+    t_mds = np.where(unplaced, attrs[0][None], np.float32(0.0))
+    leaf_of = (np.cumsum(unplaced, axis=1) - 1) % L
+    leaf_load = np.bincount((leaf_of + L * p_off).ravel(),
+                            weights=t_mds.ravel(),
+                            minlength=P * L).reshape(P, L).astype(np.float32)
+    ref = tpd_ref(jnp.asarray(ps), jnp.asarray(attrs),
+                  jnp.asarray(leaf_load), *tables, penalty=1.5)
+    for block_p in (DEFAULT_BLOCK_P, DEFAULT_BLOCK_P_GPU):
+        kern = batch_tpd_pallas(jnp.asarray(ps), jnp.asarray(attrs),
+                                jnp.asarray(leaf_load), *tables,
+                                penalty=1.5, block_p=block_p,
+                                interpret=True)
+        assert jnp.array_equal(kern, ref), f"block_p={block_p}"
+
+
+# ---------------------------------------------------------------------------
+# device-sharded pooled sweep (shard_rows segment-sum merge)
+# ---------------------------------------------------------------------------
+def test_pooled_tpds_sharded_single_device():
+    """On 1 device, shard='auto'/'off' IS the numpy path (bit-identical
+    by construction); the forced sharded build (tpds_sharded) must
+    agree with the sequential tpd_fast oracle to f64 round-off."""
+    h = Hierarchy(depth=3, width=2, trainers_per_leaf=2, n_clients=24)
+    models = [CostModel(h, ClientPool.random(24, seed=s),
+                        memory_penalty=0.5) for s in range(6)]
+    ps = _placements(h, 6, seed=9)
+    auto = PooledTPDEvaluator(models, shard="auto").tpds(ps)
+    off = PooledTPDEvaluator(models, shard="off").tpds(ps)
+    np.testing.assert_array_equal(auto, off)  # same code path: exact
+    oracle = np.array([m.tpd_fast(p) for m, p in zip(models, ps)])
+    np.testing.assert_array_equal(off, oracle)
+    sharded = PooledTPDEvaluator(models).tpds_sharded(ps, ndev=1)
+    np.testing.assert_allclose(sharded, oracle, rtol=1e-12)
+
+
+def test_pooled_tpds_sharded_multi_device_vs_sequential_oracle():
+    """8 forged CPU devices in a subprocess: the shard_map row shards +
+    segment-sum merge (fl.distributed.shard_rows) vs the sequential
+    tpd_fast oracle, including a non-divisible row count (pad path)
+    and explicit pool_idx routing."""
+    import json as _json
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import numpy as np
+        import jax
+        from repro.core.cost_model import CostModel, PooledTPDEvaluator
+        from repro.core.hierarchy import ClientPool, Hierarchy
+
+        assert jax.local_device_count() == 8
+        h = Hierarchy(3, 2, 2, n_clients=24)
+        models = [CostModel(h, ClientPool.random(24, seed=s),
+                            memory_penalty=0.3) for s in range(5)]
+        rng = np.random.default_rng(0)
+        ps = np.stack([rng.permutation(24)[: h.dimensions]
+                       for _ in range(21)]).astype(np.int32)  # pad path
+        idx = rng.integers(0, 5, size=21)
+        ev = PooledTPDEvaluator(models, shard="auto")
+        got = ev.tpds(ps, pool_idx=idx)      # 21 rows >= 8 -> sharded
+        oracle = np.array([models[i].tpd_fast(p)
+                           for i, p in zip(idx, ps)])
+        print(json.dumps({
+            "err": float(np.abs(got - oracle).max()),
+            "scale": float(np.abs(oracle).max()),
+        }))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    res = _json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["err"] <= 1e-12 * max(res["scale"], 1.0), res

@@ -27,7 +27,13 @@ def test_every_preset_constructs(name):
     spec = get_scenario(name)
     h = spec.make_hierarchy()
     pool = spec.make_pool(seed=0)
-    assert len(pool) == h.total_clients
+    if spec.sampling != "off":
+        # sampled presets: the RESIDENT pool is bigger than the tree,
+        # which spans only the per-round cohort
+        assert len(pool) == spec.pool_size > h.total_clients
+        assert h.total_clients == spec.cohort_size
+    else:
+        assert len(pool) == h.total_clients
     if spec.kind == "simulated":  # emulated build is covered in parity tests
         env = spec.make_environment(seed=0)
         p = np.random.default_rng(0).permutation(
