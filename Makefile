@@ -10,7 +10,7 @@ BENCH_TOLERANCE ?= 0.25
 
 .PHONY: verify test lint analyze bench-round bench-fig4 bench-scale \
 	bench-scale-smoke bench-baseline experiments-smoke \
-	elastic-emulated-smoke online-smoke faults-smoke
+	elastic-emulated-smoke online-smoke faults-smoke calibration-smoke
 
 verify test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -66,15 +66,15 @@ experiments-smoke:
 		--out artifacts/experiments/churn_smoke.json
 	PYTHONPATH=src $(PY) -m repro.experiments run flash-crowd \
 		--rounds 25 --seeds 0 --strategies pso,random \
-		--mode sequential \
+		--set eval.mode=sequential \
 		--out artifacts/experiments/flash_crowd_seq_smoke.json
 	PYTHONPATH=src $(PY) -m repro.experiments run flash-crowd \
 		--rounds 25 --seeds 0 --strategies pso,random \
-		--mode batched \
+		--set eval.mode=batched \
 		--out artifacts/experiments/flash_crowd_bat_smoke.json
 	PYTHONPATH=src $(PY) -m repro.experiments run composite-storm \
 		--rounds 40 --seeds 0,1 --strategies pso,random \
-		--mode batched \
+		--set eval.mode=batched \
 		--out artifacts/experiments/composite_storm_smoke.json
 	PYTHONPATH=src $(PY) -m repro.experiments validate \
 		artifacts/experiments/fig4_smoke.json \
@@ -152,3 +152,27 @@ faults-smoke:
 		--out artifacts/benchmarks/BENCH_faults.json
 	PYTHONPATH=src $(PY) benchmarks/bench_faults.py \
 		--validate artifacts/benchmarks/BENCH_faults.json
+
+# the trace-calibration loop end-to-end: record an emulated mlp-smoke
+# trace through the CLI, fit with a held-out tail, replay-compare the
+# fitted calibration against the analytic baseline, then the
+# BENCH_calibration.json smoke (asserts the fitted model strictly beats
+# analytic on held-out rounds)
+calibration-smoke:
+	PYTHONPATH=src $(PY) -m repro.calibration record paper-fig4 \
+		--rounds 4 --set model=mlp-smoke --set local_steps=1 \
+		--set batch_size=16 \
+		--out artifacts/calibration/trace_fig4_smoke.json
+	PYTHONPATH=src $(PY) -m repro.calibration validate \
+		artifacts/calibration/trace_fig4_smoke.json
+	PYTHONPATH=src $(PY) -m repro.calibration fit \
+		artifacts/calibration/trace_fig4_smoke.json --holdout 1 \
+		--out artifacts/calibration/cal_fig4_smoke.json
+	PYTHONPATH=src $(PY) -m repro.calibration report \
+		artifacts/calibration/trace_fig4_smoke.json \
+		--calibration artifacts/calibration/cal_fig4_smoke.json \
+		--rounds 3
+	PYTHONPATH=src $(PY) benchmarks/bench_calibration.py --smoke \
+		--out artifacts/benchmarks/BENCH_calibration.json
+	PYTHONPATH=src $(PY) benchmarks/bench_calibration.py \
+		--validate artifacts/benchmarks/BENCH_calibration.json

@@ -1,0 +1,171 @@
+"""Calibration benchmark: the record -> fit -> replay loop, end to end.
+
+One pass per row:
+
+* RECORD an emulated trace (``EvalConfig(recording='on')`` through the
+  ordinary sequential runner — byte-neutral, the recorded run's
+  trajectory is bit-identical to an unrecorded one);
+* FIT the CostModel parameters from the trace's leading rounds,
+  holding out the tail;
+* REPLAY both the fitted calibration and the neutral analytic baseline
+  against the held-out rounds and report the per-round delay
+  prediction error of each.
+
+The artifact carries the track's correctness claim
+(``calibrated_beats_analytic``): on every row the trace-fitted model
+must strictly reduce held-out-round delay error vs. the paper's
+analytic eq. 6/7 model — the emulated engine's laws are linear in the
+fitted parameters, so the least-squares fit recovers them (near-)
+exactly and the claim holds by construction. A regression here means
+the recorder, the fitter, or the engine's timing laws drifted apart.
+
+Writes the schema-versioned ``BENCH_calibration.json`` (CI's
+``calibration-smoke`` job runs ``--smoke`` and schema-validates the
+upload).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.calibration import (
+    ANALYTIC,
+    fit_calibration,
+    record_trace,
+    replay,
+)
+
+OUT = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
+BENCH_SCHEMA = "repro.benchmarks/calibration"
+BENCH_SCHEMA_VERSION = 1
+
+_ROW_KEYS = ("scenario", "strategy", "seed", "rounds", "holdout_rounds",
+             "record_s", "fit_rows", "rms_residual", "payload_scale",
+             "level_link", "train_scale",
+             "holdout_err_calibrated", "holdout_err_analytic")
+
+
+def bench_scenario(name, strategy, *, seed=0, rounds=6,
+                   holdout_rounds=2, overrides=None) -> dict:
+    from repro.experiments import get_scenario
+    spec = get_scenario(name)
+    if overrides:
+        spec = spec.with_overrides(**overrides)
+    print(f"== {name}/{strategy} seed={seed}: record {rounds} rounds, "
+          f"hold out {holdout_rounds} ==")
+
+    t0 = time.perf_counter()
+    trace = record_trace(spec, strategy, seed=seed, rounds=rounds)
+    t_record = time.perf_counter() - t0
+
+    cal = fit_calibration(trace, holdout_rounds=holdout_rounds)
+    held_out = [r["round"] for r in trace.records[-holdout_rounds:]]
+    err_cal = replay(trace, cal, rounds=held_out).mean_abs_error
+    err_ana = replay(trace, ANALYTIC, rounds=held_out).mean_abs_error
+
+    row = {
+        "scenario": name, "strategy": strategy, "seed": seed,
+        "rounds": rounds, "holdout_rounds": holdout_rounds,
+        "record_s": t_record,
+        "fit_rows": cal.n_rows, "rms_residual": cal.rms_residual,
+        "payload_scale": cal.payload_scale,
+        "level_link": list(cal.level_link),
+        "train_scale": cal.train_scale,
+        "holdout_err_calibrated": err_cal,
+        "holdout_err_analytic": err_ana,
+    }
+    print(f"   recorded in {t_record:5.2f}s | fit {cal.n_rows} rows "
+          f"(rms {cal.rms_residual:.2e}) | held-out mean|err| "
+          f"calibrated {err_cal:.4g} vs analytic {err_ana:.4g}")
+    return row
+
+
+def validate_bench_dict(d) -> list:
+    """Schema gate for BENCH_calibration.json; returns problems."""
+    errors = []
+    if not isinstance(d, dict):
+        return ["artifact is not a JSON object"]
+    if d.get("schema") != BENCH_SCHEMA:
+        errors.append(f"schema != {BENCH_SCHEMA!r}")
+    if d.get("schema_version") != BENCH_SCHEMA_VERSION:
+        errors.append(f"schema_version != {BENCH_SCHEMA_VERSION}")
+    rows = d.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errors.append("rows missing/empty")
+        return errors
+    for i, row in enumerate(rows):
+        for k in _ROW_KEYS:
+            if k not in row:
+                errors.append(f"rows[{i}] missing {k!r}")
+        if not (row.get("holdout_err_calibrated", float("inf"))
+                < row.get("holdout_err_analytic", float("-inf"))):
+            errors.append(
+                f"rows[{i}]: calibrated does not beat analytic on "
+                f"held-out rounds "
+                f"({row.get('holdout_err_calibrated')} vs "
+                f"{row.get('holdout_err_analytic')})")
+    if d.get("calibrated_beats_analytic") is not True:
+        errors.append("calibrated_beats_analytic is not true")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: mlp-smoke model, 4 rounds")
+    ap.add_argument("--out", default=str(OUT / "BENCH_calibration.json"))
+    ap.add_argument("--validate", metavar="PATH",
+                    help="schema-check an existing artifact and exit")
+    args = ap.parse_args(argv)
+
+    if args.validate:
+        d = json.loads(Path(args.validate).read_text())
+        errors = validate_bench_dict(d)
+        if errors:
+            print(f"{args.validate}: INVALID")
+            for e in errors:
+                print(f"  - {e}")
+            return 1
+        print(f"{args.validate}: OK ({len(d['rows'])} rows)")
+        for row in d["rows"]:
+            print(f"  {row['scenario']:16s} held-out mean|err| "
+                  f"calibrated {row['holdout_err_calibrated']:.4g} vs "
+                  f"analytic {row['holdout_err_analytic']:.4g}")
+        return 0
+
+    results = {"schema": BENCH_SCHEMA,
+               "schema_version": BENCH_SCHEMA_VERSION,
+               "smoke": bool(args.smoke), "rows": []}
+    if args.smoke:
+        overrides = {"model": "mlp-smoke", "local_steps": 1,
+                     "batch_size": 16}
+        results["rows"].append(bench_scenario(
+            "paper-fig4", "pso", rounds=4, holdout_rounds=1,
+            overrides=overrides))
+    else:
+        results["rows"].append(bench_scenario(
+            "paper-fig4", "pso", rounds=8, holdout_rounds=2))
+        results["rows"].append(bench_scenario(
+            "paper-fig4", "random", seed=1, rounds=8, holdout_rounds=2))
+    results["calibrated_beats_analytic"] = all(
+        row["holdout_err_calibrated"] < row["holdout_err_analytic"]
+        for row in results["rows"])
+
+    errors = validate_bench_dict(results)
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=1))
+    print(f"-> wrote {out}")
+    if errors:
+        print("INVALID artifact:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

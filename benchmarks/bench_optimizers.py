@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core.cost_model import CostModel
 from repro.core.hierarchy import ClientPool, Hierarchy
-from repro.core.placement import make_strategy
+from repro.core.registry import create_strategy
 
 OUT = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
 
@@ -46,7 +46,7 @@ def run_scenario(depth: int, width: int, seed: int, rounds: int = 200,
                     # deployment: cumulative TPD actually PAID (the
                     # paper's metric) — strategies exploit as they wish
                     ("cum", {})):
-                strat = make_strategy(s, h, seed=seed + k,
+                strat = create_strategy(s, h, seed=seed + k,
                                       clients=pool, cost_model=cm, **kw)
                 best, cum = np.inf, 0.0
                 for r in range(rounds):

@@ -57,7 +57,7 @@ def _run_scenarios():
 
 def build_suite(args):
     """[(name, thunk, checker)] — the single source of the banner."""
-    from benchmarks import (bench_drift, bench_faults,
+    from benchmarks import (bench_calibration, bench_drift, bench_faults,
                             bench_fig3_simulation, bench_fig4_cluster,
                             bench_kernels, bench_online,
                             bench_optimizers, bench_roofline,
@@ -91,6 +91,10 @@ def build_suite(args):
         ("fault track (survivability + recovery overhead)",
          lambda: bench_faults.main(["--smoke"] if not args.full else []),
          lambda rc: "bench_faults failed" if rc != 0 else None),
+        ("calibration (record -> fit -> replay)",
+         lambda: bench_calibration.main(
+             ["--smoke"] if not args.full else []),
+         lambda rc: "bench_calibration failed" if rc != 0 else None),
         ("roofline", roofline, None),
     ]
     return suite

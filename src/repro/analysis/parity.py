@@ -37,6 +37,7 @@ SCAN_PREFIXES = (
     "src/repro/experiments/",
     "src/repro/online/",
     "src/repro/faults/",
+    "src/repro/calibration/",
 )
 _BATCH_NAME = re.compile(r"^batch(ed)?_|_batched$")
 
@@ -115,6 +116,12 @@ REGISTRY: Tuple[OraclePair, ...] = (
         fast="repro.online.async_fedavg:async_merge_batched",
         oracle="repro.online.async_fedavg:_async_merge_ref",
         tests=("tests/test_online.py",),
+    ),
+    # --- calibration: vectorized cluster-delay surrogate vs. scalar ---
+    OraclePair(
+        fast="repro.calibration.fit:batch_predict_cluster_delay",
+        oracle="repro.calibration.fit:_predict_cluster_delay_ref",
+        tests=("tests/test_calibration.py",),
     ),
     # --- fault track: quorum-gated participation-damped merge ---
     OraclePair(

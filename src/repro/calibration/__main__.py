@@ -1,0 +1,5 @@
+import sys
+
+from repro.calibration.cli import main
+
+sys.exit(main())

@@ -6,8 +6,7 @@
 - ``FlagSwapPSO``: the black-box integer PSO (eqs. 1-4, Algorithm 1).
 - placement strategies: pso / pso-adaptive / random / uniform / ga / sa /
   cem / greedy / exhaustive / static — all registered in the typed
-  strategy registry (``create_strategy``; ``make_strategy`` is the
-  deprecated shim).
+  strategy registry (``create_strategy``).
 """
 from repro.core.cost_model import CostModel, TwoTierCostModel
 from repro.core.hierarchy import ClientPool, Hierarchy
@@ -23,7 +22,6 @@ from repro.core.placement import (
     SimulatedAnnealingPlacement,
     StaticPlacement,
     UniformRoundRobinPlacement,
-    make_strategy,
 )
 from repro.core.pso import FlagSwapPSO, SwarmHistory
 from repro.core.registry import (
@@ -44,5 +42,5 @@ __all__ = [
     "PlacementStrategy", "RandomPlacement", "UniformRoundRobinPlacement",
     "PSOPlacement", "AdaptivePSOPlacement", "GAPlacement",
     "SimulatedAnnealingPlacement", "CEMPlacement", "GreedySpeedPlacement",
-    "ExhaustivePlacement", "StaticPlacement", "make_strategy",
+    "ExhaustivePlacement", "StaticPlacement",
 ]

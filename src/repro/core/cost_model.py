@@ -31,7 +31,7 @@ not on hashing the attribute arrays.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -133,6 +133,19 @@ class CostModel:
         have_pods = getattr(self, "pod_of", None) is not None
         ici = float(getattr(self, "ici_cost", 0.0))
         dcn = float(getattr(self, "dcn_cost", 0.0))
+        # trace-calibrated terms (CalibratedCostModel; neutral values on
+        # the base model keep every branch below bit-identical to the
+        # uncalibrated build)
+        cal_scale, cal_link, cal_train = self._calibration_terms()
+        calibrated = (cal_scale != 1.0 or any(cal_link)
+                      or cal_train != 0.0)
+        link_np = np.zeros(D, np.float64)
+        if calibrated and cal_link:
+            link = np.asarray(cal_link, np.float64)
+            link_np = link[np.minimum(h.levels, len(link) - 1)]
+        kids_cnt_np = (kids_np >= 0).sum(axis=1)                  # (D,)
+        tr_counts_np = np.bincount(np.arange(max(C - D, 0)) % n_leaves,
+                                   minlength=n_leaves)
         # level boundaries are static: per-level max is a sliced reduce
         # (scatter/segment ops are 50x slower than dense math on CPU XLA,
         # so the whole evaluator is dense: one-hot einsums, no scatter)
@@ -204,6 +217,25 @@ class CostModel:
         is_leaf_slot = xp.asarray(h.levels == depth - 1)
         slot_leaf_idx = xp.clip(xp.arange(D) - leaf_start, 0, n_leaves - 1)
         level_starts_np = np.asarray(h.level_starts[:-1], np.int32)
+        # calibrated-link statics: per-slot beta (level gather) and the
+        # structural member count of every cluster for NON-duplicate
+        # rows (kids + host for internal slots, round-robin trainers +
+        # host for leaves); duplicate rows recount trainers per call
+        link_slot = xp.asarray(link_np.astype(ft))
+        kid_parts = xp.asarray((kids_cnt_np + 1).astype(ft))
+        slot_leaf_np = np.clip(np.arange(D) - leaf_start, 0, n_leaves - 1)
+        static_parts = xp.asarray(np.where(
+            h.levels == depth - 1, tr_counts_np[slot_leaf_np] + 1,
+            kids_cnt_np + 1).astype(ft))
+        train_add = None
+        if calibrated and cal_train != 0.0:
+            psp = attrs_np[1]
+            inv_max = np.max(1.0 / psp, axis=-1)   # () | (S,)
+            if pooled:
+                train_add = xp.asarray(
+                    (cal_train * inv_max).astype(ft))
+            else:
+                train_add = ft(cal_train * inv_max)
         iota_cache = {}
 
         def iota(P):
@@ -280,6 +312,8 @@ class CostModel:
                     leaf_load[:, slot_leaf_idx].astype(ft),
                     xp.sum(kid_mds, axis=2))
             load = host[0] + child_load
+            if calibrated and cal_scale != 1.0:
+                load = load * ft(cal_scale)
             delay = load / host[1]
             if penalty > 0:
                 cap = host[2]
@@ -291,6 +325,21 @@ class CostModel:
                                          edge_leaf[:, slot_leaf_idx
                                                    ].astype(ft),
                                          edge_int)
+            if calibrated and any(cal_link):
+                # per-part link charge: structural member counts for
+                # non-duplicate rows; duplicate rows recount actual
+                # trainers per leaf from the unplaced mask
+                if use_uniform:
+                    parts_f = static_parts[None]
+                else:
+                    leaf_cnt = bincount(
+                        leaf_bins, xp.where(unplaced, ft(1.0), ft(0.0)),
+                        P * n_leaves).reshape(P, n_leaves)
+                    parts_f = xp.where(
+                        is_leaf_slot[None],
+                        leaf_cnt[:, slot_leaf_idx] + ft(1.0),
+                        kid_parts[None])
+                delay = delay + link_slot[None] * parts_f
 
             # per-level max, summed DEEPEST level first — the scalar
             # reference accumulates bottom-up, and float addition is not
@@ -298,10 +347,14 @@ class CostModel:
             if xp is np:
                 level_max = np.maximum.reduceat(delay, level_starts_np,
                                                 axis=1)
-                return level_max[:, ::-1].sum(axis=1)
-            level_max = [xp.max(delay[:, a:b], axis=1)
-                         for a, b in level_bounds]
-            return xp.sum(xp.stack(level_max[::-1], axis=1), axis=1)
+                out = level_max[:, ::-1].sum(axis=1)
+            else:
+                level_max = [xp.max(delay[:, a:b], axis=1)
+                             for a, b in level_bounds]
+                out = xp.sum(xp.stack(level_max[::-1], axis=1), axis=1)
+            if train_add is not None:
+                out = out + (train_add[rows] if pooled else train_add)
+            return out
 
         return jax.jit(batch, static_argnames=()) if xp is jnp else batch
 
@@ -335,6 +388,17 @@ class CostModel:
         object.__setattr__(self, "_topology_version",
                            self.topology_version + 1)
 
+    def _calibration_terms(self) -> tuple:
+        """(payload_scale, level_link, train_scale) — neutral
+        ``(1.0, (), 0.0)`` on the base model; CalibratedCostModel
+        overrides the fields. One tuple so every consumer (closure
+        builder, pooled-evaluator compatibility check, Pallas gate)
+        compares the same thing."""
+        return (float(getattr(self, "payload_scale", 1.0)),
+                tuple(float(b) for b in getattr(self, "level_link", ())
+                      or ()),
+                float(getattr(self, "train_scale", 0.0)))
+
     def _client_token(self) -> tuple:
         """O(1) fingerprint of the client attrs + topology baked into
         the cached evaluators — the pool's mutation version counter
@@ -355,10 +419,23 @@ class CostModel:
 
     def _pallas_ok(self) -> bool:
         """The Pallas TPD kernel covers the base eq. 6/7 model (no pod
-        edge costs) and compiles on TPU and GPU backends (tiled per
-        backend — see ``kernels.tpd.default_block_p``)."""
+        edge costs, no trace-calibrated terms) and compiles on TPU and
+        GPU backends (tiled per backend — see
+        ``kernels.tpd.default_block_p``)."""
         return getattr(self, "pod_of", None) is None and \
+            self._calibration_terms() == (1.0, (), 0.0) and \
             jax.default_backend() in ("tpu", "gpu")
+
+    def set_default_backend(self, backend: Optional[str]) -> None:
+        """Pin what ``batch_tpd(backend=None)`` dispatches to — the
+        ``EvalConfig.backend`` plumbing (``build_environment`` sets it
+        on the models it constructs). ``None`` restores auto-selection.
+        """
+        if backend not in (None, "np", "jit", "pallas", "interpret"):
+            raise ValueError(f"unknown batch_tpd backend {backend!r}; "
+                             f"use None, 'np', 'jit', 'pallas' or "
+                             f"'interpret'")
+        object.__setattr__(self, "_default_backend", backend)
 
     def batch_tpd(self, placements, backend: Optional[str] = None
                   ) -> np.ndarray:
@@ -372,8 +449,12 @@ class CostModel:
         Pallas INTERPRETER even on accelerator backends — the CI
         escape hatch that exercises the kernel body on any host
         (pinned against ``kernels.ref.tpd_ref`` by the parity suite).
+        A ``set_default_backend`` pin (EvalConfig plumbing) replaces
+        the auto-selection, never an explicit ``backend=``.
         """
         placements = np.asarray(placements, np.int32)
+        if backend is None:
+            backend = getattr(self, "_default_backend", None)
         if backend is None:
             small = placements.size // max(self.hierarchy.dimensions, 1) \
                 * self.hierarchy.total_clients <= self._NP_FASTPATH_ELEMS
@@ -389,6 +470,10 @@ class CostModel:
             if getattr(self, "pod_of", None) is not None:
                 raise ValueError("the Pallas TPD kernel does not cover "
                                  "two-tier pod edge costs; use "
+                                 "backend='jit'")
+            if self._calibration_terms() != (1.0, (), 0.0):
+                raise ValueError("the Pallas TPD kernel does not cover "
+                                 "trace-calibrated terms; use "
                                  "backend='jit'")
             if backend == "interpret":
                 fn = self._cached(
@@ -466,6 +551,22 @@ class CostModel:
     def batch_fitness(self, placements) -> np.ndarray:
         return -np.asarray(self.batch_tpd(placements))
 
+    @classmethod
+    def from_trace(cls, trace, *, hierarchy: Optional[Hierarchy] = None,
+                   clients: Optional[ClientPool] = None,
+                   holdout_rounds: int = 0) -> "CalibratedCostModel":
+        """Fit a :class:`CalibratedCostModel` from a recorded
+        :class:`repro.calibration.trace.TraceArtifact` (or a path to
+        one). ``hierarchy``/``clients`` default to the shape and
+        attribute snapshot stored in the trace; ``holdout_rounds``
+        withholds the LAST k rounds from the fit (replay scores them as
+        held-out). Delegates to ``repro.calibration.fit`` (imported
+        lazily — calibration depends on this module, not vice versa)."""
+        from repro.calibration.fit import cost_model_from_trace
+        return cost_model_from_trace(trace, hierarchy=hierarchy,
+                                     clients=clients,
+                                     holdout_rounds=holdout_rounds)
+
 
 class PooledTPDEvaluator:
     """ONE exact evaluation call for placements scored against DIFFERENT
@@ -524,6 +625,10 @@ class PooledTPDEvaluator:
                     getattr(m0, "dcn_cost", 0.0):
                 raise ValueError("pooled evaluation needs one shared pod "
                                  "topology")
+            if m._calibration_terms() != m0._calibration_terms():
+                raise ValueError("pooled evaluation needs one shared "
+                                 "calibration (payload_scale/level_link/"
+                                 "train_scale)")
         self.models = list(models)
         self.shard = shard
         self._versions: Optional[tuple] = None
@@ -681,3 +786,100 @@ class TwoTierCostModel(CostModel):
                         self.pod_of[host] != self.pod_of[c]:
                     cross += 1
         return cross, total
+
+
+@dataclass(frozen=True)
+class CalibratedCostModel(CostModel):
+    """Eq. 6/7 with trace-fitted parameters (``repro.calibration``).
+
+    The emulated track's deterministic engine charges
+
+        delay_cluster = (sum_members mdatasize / PAYLOAD_SCALE) / pspeed
+                        + comm_latency * n_members
+        train_c       = local_steps / pspeed_c
+
+    none of which the analytic base model prices. The fitted twin adds
+    exactly those degrees of freedom, all linear in trace features:
+
+    * ``payload_scale`` — multiplies the eq. 6 payload (the emulated
+      engine's ``1 / EQ6_PAYLOAD_SCALE``);
+    * ``level_link`` — per-level delay per cluster member (the
+      ``comm_latency`` hop term; one beta per tree level, the last
+      entry covering any deeper level);
+    * ``train_scale`` — work units per local-training pass; charged as
+      ``train_scale * max_c(1 / pspeed_c)``, a placement-independent
+      offset that makes predicted TPDs comparable to the emulated
+      ``train + agg`` composition.
+
+    Neutral values (1.0, (), 0.0) make every evaluator bit-identical to
+    the base :class:`CostModel`. The vectorized path rides the SAME
+    ``_make_batch_tpd`` closure (the calibrated branches switch on via
+    ``_calibration_terms``), so ``batch_tpd``/``tpd_fast``/
+    ``PooledTPDEvaluator`` — the PSO inner-loop surfaces — need no new
+    plumbing. The Pallas kernel does not cover the calibrated terms;
+    ``batch_tpd`` refuses ``backend='pallas'/'interpret'`` here.
+    """
+    payload_scale: float = 1.0
+    level_link: Tuple[float, ...] = ()
+    train_scale: float = 0.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "level_link",
+                           tuple(float(b) for b in self.level_link))
+
+    def _link_cost(self, level: int, n_members: int) -> float:
+        if not self.level_link:
+            return 0.0
+        beta = self.level_link[min(level, len(self.level_link) - 1)]
+        return beta * n_members
+
+    def calibrated_cluster_delay(self, host: int, children, level: int
+                                 ) -> float:
+        """Eq. 6 with the fitted payload scale, memcap penalty on the
+        scaled payload, and the per-level per-member link charge."""
+        mds = self.clients.mdatasize
+        load = mds[host] + sum(mds[c] for c in children)
+        load = load * self.payload_scale
+        delay = load / self.clients.pspeed[host]
+        if self.memory_penalty > 0:
+            over = max(0.0, load - self.clients.memcap[host])
+            delay *= 1.0 + self.memory_penalty * over / max(
+                self.clients.memcap[host], 1e-9)
+        return float(delay + self._link_cost(level, len(children) + 1))
+
+    def train_time(self) -> float:
+        """The fitted local-training bottleneck: placement-independent,
+        so it never moves the argmin — it aligns predicted TPD with the
+        emulated ``train + agg`` total."""
+        if self.train_scale == 0.0:
+            return 0.0
+        return float(self.train_scale
+                     * (1.0 / np.asarray(self.clients.pspeed)).max())
+
+    def tpd(self, placement: Sequence[int]) -> float:
+        """Scalar reference of the calibrated eq. 7 (the parity oracle
+        the shared vectorized closure stays bit-identical to)."""
+        h = self.hierarchy
+        children = h.children_clients(placement)
+        total = 0.0
+        for level in range(h.depth - 1, -1, -1):
+            worst = 0.0
+            for s in range(h.level_starts[level],
+                           h.level_starts[level + 1]):
+                worst = max(worst, self.calibrated_cluster_delay(
+                    int(placement[s]), children[s], level))
+            total += worst
+        return total + self.train_time()
+
+    def cluster_delay(self, host: int, children: Sequence[int]) -> float:
+        """Level-free callers get the scaled eq. 6 without the link
+        charge (levels are a placement-walk property)."""
+        mds = self.clients.mdatasize
+        load = (mds[host] + sum(mds[c] for c in children)) \
+            * self.payload_scale
+        delay = load / self.clients.pspeed[host]
+        if self.memory_penalty > 0:
+            over = max(0.0, load - self.clients.memcap[host])
+            delay *= 1.0 + self.memory_penalty * over / max(
+                self.clients.memcap[host], 1e-9)
+        return float(delay)

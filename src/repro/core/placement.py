@@ -15,13 +15,11 @@ All strategies share one black-box interface:
 
 Each strategy registers itself (``repro.core.registry``) under a
 canonical name + aliases, together with a typed config dataclass; build
-instances with ``create_strategy`` (``make_strategy`` below is a
-deprecation shim over it).
+instances with ``create_strategy``.
 """
 from __future__ import annotations
 
 import itertools
-import warnings
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -29,7 +27,7 @@ import numpy as np
 
 from repro.core.hierarchy import ClientPool, Hierarchy, TopologyUpdate, fill_placement_holes
 from repro.core.pso import FlagSwapPSO
-from repro.core.registry import create_strategy, register_strategy
+from repro.core.registry import register_strategy
 
 
 def repair_placement(placement, update: TopologyUpdate,
@@ -548,23 +546,6 @@ class ExhaustivePlacement(PlacementStrategy):
         # construction, re-solve against the caller's cost model
         if len(self._placement) != self.hierarchy.dimensions:
             self._solve()
-
-
-def make_strategy(name: str, hierarchy: Hierarchy, seed: int = 0,
-                  clients: Optional[ClientPool] = None,
-                  cost_model=None, **kw) -> PlacementStrategy:
-    """Deprecated shim over ``repro.core.registry.create_strategy``.
-
-    Unlike the historical factory it VALIDATES ``**kw`` against the
-    strategy's typed config (unknown kwargs raise instead of being
-    silently dropped).
-    """
-    warnings.warn(
-        "make_strategy is deprecated; use "
-        "repro.core.registry.create_strategy (typed configs, aliases)",
-        DeprecationWarning, stacklevel=2)
-    return create_strategy(name, hierarchy, seed=seed, clients=clients,
-                           cost_model=cost_model, **kw)
 
 
 @register_strategy("sa", config=SAConfig, aliases=("annealing",),

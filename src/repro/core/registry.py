@@ -1,21 +1,18 @@
 """Decorator-based placement-strategy registry with typed configs.
 
-Replaces the stringly-typed ``make_strategy(name, **kw)`` factory: every
-strategy class registers itself under a canonical name (plus aliases)
+Every strategy class registers itself under a canonical name (plus
+aliases)
 together with a frozen *config dataclass* describing exactly the keyword
 arguments it accepts. Construction goes through :func:`create_strategy`,
 which
 
 * resolves aliases (``"adaptive"`` -> ``"pso-adaptive"`` etc.),
 * validates overrides against the config's fields — unknown kwargs are a
-  hard ``TypeError`` naming the accepted fields (the old factory silently
-  dropped them, e.g. ``make_strategy("greedy", h, n_particles=20)``),
+  hard ``TypeError`` naming the accepted fields (the historical factory
+  silently dropped them),
 * injects the contextual dependencies a strategy declares
   (``needs_clients`` for the telemetry-reading greedy baseline,
   ``needs_cost_model`` for the exhaustive oracle).
-
-``make_strategy`` lives on in ``repro.core.placement`` as a thin
-deprecation shim over :func:`create_strategy`.
 """
 from __future__ import annotations
 

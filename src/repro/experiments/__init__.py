@@ -19,6 +19,7 @@ Three concepts:
   pso,random --rounds 25 --seeds 0,17``.
 """
 from repro.core.hierarchy import TopologyUpdate
+from repro.experiments.eval_config import EvalConfig, resolve_eval_config
 from repro.experiments.environments import (
     EmulatedEnvironment,
     Environment,
@@ -54,7 +55,7 @@ from repro.experiments.scenarios import (
 __all__ = [
     "Environment", "SimulatedEnvironment", "EmulatedEnvironment",
     "OnlineEnvironment", "RoundObservation", "TopologyUpdate",
-    "build_environment",
+    "build_environment", "EvalConfig", "resolve_eval_config",
     "ExperimentResult", "StrategyRun", "aggregate_runs",
     "validate_result_dict", "RESULT_SCHEMA", "RESULT_SCHEMA_VERSION",
     "run_experiment", "run_single", "run_batched",

@@ -22,6 +22,7 @@ import sys
 from pathlib import Path
 
 from repro.core.registry import list_strategies
+from repro.experiments.eval_config import EvalConfig
 from repro.experiments.results import ExperimentResult, validate_result_dict
 from repro.experiments.runner import aggregate_line, run_experiment
 from repro.experiments.scenarios import get_scenario, list_scenarios
@@ -61,6 +62,23 @@ def cmd_run(args) -> int:
     if getattr(args, "env", None):
         spec = spec.for_env(args.env)
     overrides = _parse_set(args.set)
+    # nested overrides: --set eval.backend=interpret targets EvalConfig,
+    # everything else targets the ScenarioSpec
+    eval_overrides = {k[len("eval."):]: v for k, v in overrides.items()
+                      if k.startswith("eval.")}
+    overrides = {k: v for k, v in overrides.items()
+                 if not k.startswith("eval.")}
+    try:
+        eval_config = EvalConfig().with_overrides(**eval_overrides)
+    except (TypeError, ValueError) as e:
+        raise SystemExit(str(e)) from e
+    if args.mode is not None:
+        print("note: --mode is deprecated; use --set eval.mode=...")
+        if "mode" in eval_overrides and eval_overrides["mode"] != args.mode:
+            raise SystemExit(
+                f"conflicting modes: --mode {args.mode} vs "
+                f"--set eval.mode={eval_overrides['mode']}")
+        eval_config = eval_config.with_overrides(mode=args.mode)
     if overrides:
         try:
             spec = spec.with_overrides(**overrides)
@@ -71,9 +89,10 @@ def cmd_run(args) -> int:
     rounds = args.rounds if args.rounds is not None else spec.rounds
 
     print(f"== experiment {spec.name} [{spec.kind}] rounds={rounds} "
-          f"seeds={seeds} strategies={strategies} mode={args.mode} ==")
+          f"seeds={seeds} strategies={strategies} "
+          f"mode={eval_config.mode} ==")
     result = run_experiment(spec, strategies, rounds=rounds, seeds=seeds,
-                            verbose=args.verbose, mode=args.mode)
+                            verbose=args.verbose, eval_config=eval_config)
 
     # --env runs get a kind-suffixed default filename, so driving the
     # same preset on both tracks never silently clobbers one artifact
@@ -82,7 +101,7 @@ def cmd_run(args) -> int:
         if getattr(args, "env", None) else f"{spec.name}.json"
     out = Path(args.out) if args.out else DEFAULT_OUT_DIR / default_name
     result.save(out)
-    print(f"-> wrote {out} (schema v{result.schema_version}, "
+    print(f"-> wrote {out} (schema v{result.stamped_schema_version()}, "
           f"{len(result.runs)} runs)")
     return 0
 
@@ -129,7 +148,11 @@ def build_parser() -> argparse.ArgumentParser:
     run_p.add_argument("--seeds", default="0",
                        help="comma-separated seeds (multi-seed sweep)")
     run_p.add_argument("--set", action="append", metavar="KEY=VALUE",
-                       help="override a ScenarioSpec field (repeatable)")
+                       help="override a ScenarioSpec field, or an "
+                            "EvalConfig field via the eval. prefix "
+                            "(e.g. eval.backend=interpret, "
+                            "eval.mode=batched, eval.recording=on; "
+                            "repeatable)")
     run_p.add_argument("--env", default=None,
                        choices=("simulated", "emulated", "online"),
                        help="run the scenario on the given track "
@@ -139,11 +162,12 @@ def build_parser() -> argparse.ArgumentParser:
     run_p.add_argument("--out", default=None,
                        help=f"artifact path (default "
                             f"{DEFAULT_OUT_DIR}/<scenario>.json)")
-    run_p.add_argument("--mode", default="auto",
+    run_p.add_argument("--mode", default=None,
                        choices=("auto", "sequential", "batched"),
-                       help="sweep execution mode (batched = lockstep "
-                            "pooled evaluation, simulated only; both "
-                            "modes are bit-identical)")
+                       help="DEPRECATED alias for --set eval.mode=... "
+                            "(batched = lockstep pooled evaluation, "
+                            "simulated only; both modes are "
+                            "bit-identical)")
     run_p.add_argument("--verbose", action="store_true")
 
     val_p = sub.add_parser("validate",

@@ -71,6 +71,14 @@ class RoundObservation:
     metrics: Dict[str, float] = field(default_factory=dict)
     topology_version: int = 0               # elastic re-hierarchizations
     log: List[str] = field(default_factory=list)  # env trace (online)
+    # ONE uniform timing mapping across all environment kinds (empty
+    # unless the environment's ``record_timings`` flag is on):
+    #   {"train": {"clients": [...], "times": [...]},
+    #    "levels": [{"level", "slots", "hosts", "loads", "n_parts",
+    #                "delays"}, ...]   (deepest level first),
+    #    "train_time": float, "agg_time": float}
+    # so the calibration recorder never special-cases the track.
+    timings: Dict = field(default_factory=dict)
 
 
 @runtime_checkable
@@ -122,6 +130,7 @@ class SimulatedEnvironment:
         self.cost_model = cost_model if cost_model is not None \
             else CostModel(hierarchy, clients)
         self.topology_version = 0
+        self.record_timings = False
         # scenarios may start deliberately overstuffed (large-10k packs
         # ~7 trainers/leaf): the grow threshold honors the construction-
         # time population so a stray join doesn't snap the tree
@@ -175,9 +184,40 @@ class SimulatedEnvironment:
         placement = np.asarray(placement, np.int64)
         self.hierarchy.validate_placement(placement)
         tpd = self.cost_model.tpd_fast(placement)
+        timings = self._analytic_timings(placement, tpd) \
+            if self.record_timings else {}
         return RoundObservation(round_idx=round_idx, placement=placement,
-                                tpd=tpd,
+                                tpd=tpd, timings=timings,
                                 topology_version=self.topology_version)
+
+    def _analytic_timings(self, placement: np.ndarray, tpd: float) -> Dict:
+        """The uniform per-level timing rows, from the analytic model:
+        each cluster's eq. 6 delay plus its raw payload load and part
+        count — the same row schema the executing tracks record, so a
+        replay can line simulated predictions up against measured rows
+        slot for slot. No train section: the analytic track has no
+        clients to train."""
+        h = self.hierarchy
+        cm = self.cost_model
+        mds = self.clients.mdatasize
+        children = h.children_clients(placement)
+        levels = []
+        for level in range(h.depth - 1, -1, -1):
+            row = {"level": level, "slots": [], "hosts": [], "loads": [],
+                   "n_parts": [], "delays": []}
+            for s in range(h.level_starts[level],
+                           h.level_starts[level + 1]):
+                host = int(placement[s])
+                kids = children[s]
+                row["slots"].append(s)
+                row["hosts"].append(host)
+                row["loads"].append(float(
+                    mds[host] + sum(mds[int(c)] for c in kids)))
+                row["n_parts"].append(len(kids) + 1)
+                row["delays"].append(cm.cluster_delay(host, kids))
+            levels.append(row)
+        return {"train": {"clients": [], "times": []}, "levels": levels,
+                "train_time": 0.0, "agg_time": float(tpd)}
 
     # -- checkpoint/restore --------------------------------------------------
     def checkpoint_state(self) -> dict:
@@ -318,6 +358,7 @@ class EmulatedEnvironment:
                  quorum_frac: float = 0.0):
         self.orchestrator = orchestrator
         self.clients = orchestrator.clients
+        self.record_timings = False
         self._cost_model: Optional[CostModel] = None
 
         self.faults = faults if faults is not None else FaultSchedule()
@@ -368,6 +409,7 @@ class EmulatedEnvironment:
         return update
 
     def step(self, round_idx: int, placement) -> RoundObservation:
+        self.orchestrator.record_timings = self.record_timings
         if not self._fault_mode:
             rec = self.orchestrator.run_round(round_idx, placement)
             return RoundObservation(
@@ -377,11 +419,16 @@ class EmulatedEnvironment:
                 metrics={"loss": rec.loss, "accuracy": rec.accuracy,
                          "train_time": rec.train_time,
                          "agg_time": rec.agg_time},
+                timings=self.orchestrator.last_timings or {},
                 topology_version=self.topology_version)
 
         dropped = self._apply_round_faults(round_idx,
                                            np.asarray(placement, np.int64))
         absent = self._down | set(sorted(self._partitioned))
+        # a fault-affected round has no clean per-cluster timings (hosts
+        # fail over mid-aggregation) — clear any previous round's trace
+        # so a stale one can never leak into this observation
+        self.orchestrator.last_timings = None
         rec, extra = self.orchestrator.run_round_faulty(
             round_idx, placement, down=absent, dropped=dropped,
             degraded={c: f for c, (f, _u)
@@ -402,6 +449,7 @@ class EmulatedEnvironment:
             round_idx=round_idx,
             placement=np.asarray(rec.placement, np.int64),
             tpd=float(rec.tpd), metrics=metrics,
+            timings=self.orchestrator.last_timings or {},
             topology_version=self.topology_version)
 
     def _apply_round_faults(self, r: int, placement: np.ndarray) -> set:
@@ -606,6 +654,8 @@ class OnlineEnvironment:
         self.clock = VirtualClock()
         self._arrival = ArrivalProcess(seed, self.cfg.jitter)
         self._cost_model: Optional[CostModel] = None
+        self.record_timings = False
+        self._timing_rows: Optional[dict] = None  # armed per step
 
         # fault injection + tolerance (dormant when the schedule is
         # empty and no quorum is configured — the zero-fault parity pin)
@@ -854,6 +904,8 @@ class OnlineEnvironment:
         self._set_placement(placement)
         self._round = round_idx
         t_r = self.clock.now
+        self._timing_rows = {"train": {"clients": [], "times": []},
+                             "levels": []} if self.record_timings else None
 
         # a degenerate config stays on the lockstep fast path ONLY while
         # the fault layer is dormant — any fault/quorum config must flow
@@ -890,6 +942,10 @@ class OnlineEnvironment:
             self._trace.append(
                 f"t={t_r:.4f} r{round_idx}: dispatched {cohort.size}/{C} "
                 f"clients ({len(self._in_flight)} now in flight)")
+            if self._timing_rows is not None:
+                self._timing_rows["train"] = {
+                    "clients": [int(c) for c in cohort],
+                    "times": [float(t) for t in train_times]}
 
         if lockstep:
             tpd, extra = self._step_degenerate(round_idx, placement,
@@ -906,10 +962,19 @@ class OnlineEnvironment:
             metrics["partitioned"] = float(len(self._partitioned))
             for k in sorted(self._fault_stats):
                 metrics[k] = float(self._fault_stats[k])
+        timings, self._timing_rows = self._timing_rows, None
+        if timings is not None:
+            # online has no synchronous train/agg split: the floats are
+            # this step's dispatched-train ceiling and the total flush
+            # work the event loop charged before the merge
+            timings["train_time"] = (float(np.max(train_times))
+                                     if cohort.size else 0.0)
+            timings["agg_time"] = float(sum(
+                d for row in timings["levels"] for d in row["delays"]))
         log, self._trace = self._trace, []
         return RoundObservation(
             round_idx=round_idx, placement=self._placement.copy(),
-            tpd=tpd, metrics=metrics,
+            tpd=tpd, metrics=metrics, timings=timings or {},
             topology_version=self._topology_version, log=log)
 
     # -- degenerate lockstep path -------------------------------------------
@@ -1060,6 +1125,15 @@ class OnlineEnvironment:
         host = int(self._placement[slot])
         members = [p.src for p in parts]
         ct = self.orchestrator.cluster_delay(host, members, len(parts))
+        if self._timing_rows is not None:
+            mds = self.orchestrator.clients.mdatasize
+            self._timing_rows["levels"].append({
+                "level": int(h.levels[slot]),
+                "slots": [slot],
+                "hosts": [host],
+                "loads": [float(sum(mds[int(c)] for c in members))],
+                "n_parts": [len(parts)],
+                "delays": [float(ct)]})
         self._note_flush_latency(slot, ct, t)
         entries = tuple(e for p in parts for e in p.entries)
         self._trace.append(
@@ -1428,11 +1502,47 @@ class OnlineEnvironment:
         self.orchestrator.load_runtime_state(state["orchestrator"])
 
 
-def build_environment(spec, seed: int = 0) -> Environment:
-    """Materialize a ScenarioSpec into a fresh environment for one run."""
+def _sim_cost_model(spec, hierarchy, pool, eval_config) -> CostModel:
+    """The simulated track's cost model under ``eval_config``: analytic
+    eqs. 6-7 by default, or the trace-calibrated variant when
+    ``cost_source='calibrated'`` names a fitted-calibration JSON."""
+    if eval_config is not None and eval_config.cost_source == "calibrated":
+        from repro.calibration import load_calibration
+        cal = load_calibration(eval_config.calibration)
+        return cal.make_cost_model(hierarchy, pool,
+                                   memory_penalty=spec.memory_penalty)
+    return CostModel(hierarchy, pool, memory_penalty=spec.memory_penalty)
+
+
+def _apply_eval_config(env, eval_config) -> "Environment":
+    """Common EvalConfig wiring for a freshly built environment."""
+    if eval_config is None:
+        return env
+    if eval_config.recording == "on":
+        env.record_timings = True
+    if eval_config.backend is not None:
+        env.cost_model.set_default_backend(eval_config.backend)
+    return env
+
+
+def build_environment(spec, seed: int = 0, eval_config=None) -> Environment:
+    """Materialize a ScenarioSpec into a fresh environment for one run.
+
+    ``eval_config`` (an :class:`~repro.experiments.EvalConfig`) applies
+    the evaluation surface: a calibrated cost source swaps the analytic
+    model for the trace-fitted one (simulated track only), a backend
+    pin becomes the cost model's default ``batch_tpd`` backend, and
+    ``recording='on'`` arms per-round timing capture."""
     hierarchy = spec.make_hierarchy()
     pool = spec.make_pool(seed)
     faults = spec.make_faults(seed)
+    calibrated = (eval_config is not None
+                  and eval_config.cost_source == "calibrated")
+    if calibrated and spec.kind != "simulated":
+        raise ValueError(
+            "eval.cost_source='calibrated' applies to the simulated "
+            "track only — the executing tracks measure real delays; "
+            f"scenario {spec.name!r} is {spec.kind!r}")
     if spec.kind == "simulated":
         if not faults.empty or spec.quorum_frac > 0:
             raise ValueError(
@@ -1448,11 +1558,15 @@ def build_environment(spec, seed: int = 0) -> Environment:
                 memcap=pool.memcap[cohort].copy(),
                 pspeed=pool.pspeed[cohort].copy(),
                 mdatasize=pool.mdatasize[cohort].copy())
-            cm = CostModel(hierarchy, view,
-                           memory_penalty=spec.memory_penalty)
-            return SampledSimulatedEnvironment(hierarchy, view, cm,
-                                               pool, sampler)
+            cm = _sim_cost_model(spec, hierarchy, view, eval_config)
+            return _apply_eval_config(
+                SampledSimulatedEnvironment(hierarchy, view, cm,
+                                            pool, sampler), eval_config)
         if spec.pods:
+            if calibrated:
+                raise ValueError(
+                    "eval.cost_source='calibrated' does not cover the "
+                    "two-tier pod model (pods=0 scenarios only)")
             n = hierarchy.total_clients
             pod_of = np.arange(n) * spec.pods // n
             cm = TwoTierCostModel(hierarchy, pool,
@@ -1460,9 +1574,9 @@ def build_environment(spec, seed: int = 0) -> Environment:
                                   pod_of=pod_of, ici_cost=spec.ici_cost,
                                   dcn_cost=spec.dcn_cost)
         else:
-            cm = CostModel(hierarchy, pool,
-                           memory_penalty=spec.memory_penalty)
-        return SimulatedEnvironment(hierarchy, pool, cm)
+            cm = _sim_cost_model(spec, hierarchy, pool, eval_config)
+        return _apply_eval_config(SimulatedEnvironment(hierarchy, pool, cm),
+                                 eval_config)
 
     # emulated/online: build model + data + orchestrator
     from repro.configs import get_config
@@ -1487,8 +1601,10 @@ def build_environment(spec, seed: int = 0) -> Environment:
             reopt_beta=spec.reopt_beta)
         retry = RetryPolicy(max_retries=spec.retry_limit,
                             backoff_base=spec.retry_backoff)
-        return OnlineEnvironment(orch, async_cfg, seed=seed,
-                                 faults=faults, retry=retry,
-                                 quorum_frac=spec.quorum_frac)
-    return EmulatedEnvironment(orch, faults=faults,
-                               quorum_frac=spec.quorum_frac)
+        return _apply_eval_config(
+            OnlineEnvironment(orch, async_cfg, seed=seed,
+                              faults=faults, retry=retry,
+                              quorum_frac=spec.quorum_frac), eval_config)
+    return _apply_eval_config(
+        EmulatedEnvironment(orch, faults=faults,
+                            quorum_frac=spec.quorum_frac), eval_config)

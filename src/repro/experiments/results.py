@@ -44,6 +44,15 @@ artifacts only change their version stamp):
   ``degraded_flushes`` (quorum-refused merges), ``failovers``
   (aggregator re-homings), plus ``down``/``partitioned`` gauges.
 
+v4 addition (EvalConfig provenance): a top-level ``eval`` object
+carrying the semantics-bearing evaluation fields (``backend`` pin,
+``cost_source``/``calibration``). The section — and therefore the v4
+stamp — appears ONLY when a non-default field was set: a default-config
+sweep still writes schema_version 3 with the exact pre-EvalConfig
+bytes, so the golden artifact pins (and any downstream byte diffing)
+survive the redesign. Execution knobs (mode/shard/recording) are never
+stamped; they are parity-pinned bit-identical.
+
 ``validate_result_dict`` is the schema gate the CLI (and CI smoke job)
 run before an artifact is written or consumed.
 """
@@ -57,9 +66,12 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 RESULT_SCHEMA = "repro.experiments/result"
-RESULT_SCHEMA_VERSION = 3
+RESULT_SCHEMA_VERSION = 4
+# what an artifact WITHOUT an eval section stamps (byte-compat with
+# every pre-EvalConfig artifact)
+_PRE_EVAL_SCHEMA_VERSION = 3
 # older artifact versions that still validate and load
-RESULT_SCHEMA_COMPAT = (1, 2, 3)
+RESULT_SCHEMA_COMPAT = (1, 2, 3, 4)
 
 
 @dataclass
@@ -173,7 +185,13 @@ class ExperimentResult:
     seeds: List[int]
     strategies: List[str]
     runs: List[StrategyRun] = field(default_factory=list)
-    schema_version: int = RESULT_SCHEMA_VERSION
+    # EvalConfig.provenance(): the semantics-bearing evaluation fields,
+    # or None for a default config (then the artifact keeps the v3
+    # bytes — the golden-pin invariant)
+    eval: Optional[Dict[str, Any]] = None
+    # None = stamp at serialization time from the eval section; loaded
+    # artifacts keep their original stamp through a round trip
+    schema_version: Optional[int] = None
 
     def runs_for(self, strategy: str) -> List[StrategyRun]:
         return [r for r in self.runs if r.strategy == strategy]
@@ -183,18 +201,27 @@ class ExperimentResult:
         return {s: aggregate_runs(self.runs_for(s))
                 for s in self.strategies}
 
+    def stamped_schema_version(self) -> int:
+        if self.schema_version is not None:
+            return self.schema_version
+        return RESULT_SCHEMA_VERSION if self.eval is not None \
+            else _PRE_EVAL_SCHEMA_VERSION
+
     # -- JSON round trip ---------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        d = {
             "schema": RESULT_SCHEMA,
-            "schema_version": self.schema_version,
+            "schema_version": self.stamped_schema_version(),
             "scenario": self.scenario,
             "rounds": self.rounds,
             "seeds": list(self.seeds),
             "strategies": list(self.strategies),
-            "runs": [r.to_dict() for r in self.runs],
-            "aggregates": self.aggregates,
         }
+        if self.eval is not None:
+            d["eval"] = dict(self.eval)
+        d["runs"] = [r.to_dict() for r in self.runs]
+        d["aggregates"] = self.aggregates
+        return d
 
     def to_json(self, **kw) -> str:
         kw.setdefault("indent", 1)
@@ -221,6 +248,7 @@ class ExperimentResult:
             seeds=[int(s) for s in d["seeds"]],
             strategies=list(d["strategies"]),
             runs=[StrategyRun.from_dict(r) for r in d["runs"]],
+            eval=d.get("eval"),
             schema_version=int(d["schema_version"]))
 
     @classmethod
@@ -247,6 +275,11 @@ def validate_result_dict(d: Dict[str, Any]) -> List[str]:
         return errors
     if not isinstance(d["scenario"].get("name"), str):
         errors.append("scenario.name missing")
+    if "eval" in d:
+        if not isinstance(d["eval"], dict):
+            errors.append("eval section must be an object")
+        elif d["schema_version"] < 4:
+            errors.append("eval section requires schema_version >= 4")
     expected_runs = len(d["strategies"]) * len(d["seeds"])
     if len(d["runs"]) != expected_runs:
         errors.append(f"expected {expected_runs} runs "

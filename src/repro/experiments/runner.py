@@ -40,6 +40,7 @@ sequential for emulated ones.
 """
 from __future__ import annotations
 
+import inspect
 import time
 from typing import Iterable, List, Optional, Sequence, Tuple, Union
 
@@ -49,6 +50,7 @@ from repro.core.cost_model import PooledTPDEvaluator
 from repro.core.hierarchy import rows_with_duplicates
 from repro.core.registry import build_config, create_strategy, resolve_strategy
 from repro.checkpoint.store import latest_step, restore_checkpoint, save_checkpoint
+from repro.experiments.eval_config import EvalConfig, resolve_eval_config
 from repro.experiments.results import ExperimentResult, StrategyRun
 from repro.experiments.scenarios import ScenarioSpec, ScheduledEvent, get_scenario
 
@@ -58,6 +60,26 @@ StrategyLike = Union[str, Tuple[str, dict], Tuple[str, object]]
 # strategy/pool stream (a run without events is bit-identical to the
 # pre-events code path)
 _EVENT_STREAM = 0xE7E47
+
+
+def _spec_environment(spec: ScenarioSpec, seed: int, eval_config):
+    """Build one run's environment, tolerating legacy ScenarioSpec
+    subclasses whose ``make_environment`` override predates the
+    ``eval_config`` kwarg. Such overrides can't honor a non-default
+    evaluation surface, so those combinations fail loudly instead of
+    silently dropping the config."""
+    params = inspect.signature(spec.make_environment).parameters
+    if "eval_config" in params or any(
+            p.kind is inspect.Parameter.VAR_KEYWORD
+            for p in params.values()):
+        return spec.make_environment(seed, eval_config=eval_config)
+    if eval_config is not None and (eval_config.provenance() is not None
+                                    or eval_config.recording == "on"):
+        raise ValueError(
+            f"{type(spec).__name__}.make_environment() does not accept "
+            f"eval_config=, but this run configures the evaluation "
+            f"surface ({eval_config!r}); add the kwarg to the override")
+    return spec.make_environment(seed)
 
 
 def _normalize_strategies(strategies: Iterable[StrategyLike]):
@@ -197,7 +219,9 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
                capture_state: bool = False,
                checkpoint_dir: Optional[str] = None,
                checkpoint_every: int = 1,
-               resume: bool = False) -> StrategyRun:
+               resume: bool = False,
+               eval_config: Optional[EvalConfig] = None,
+               on_observation=None) -> StrategyRun:
     """One (strategy, seed) trajectory through a fresh environment.
 
     This is THE sequential loop — both paper tracks and every event
@@ -208,6 +232,13 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
     update before proposing. ``capture_state=True`` snapshots the
     strategy's full checkpoint into ``run.strategy_state`` at the end
     (sweep resume).
+
+    ``eval_config`` (an :class:`EvalConfig`) selects the evaluation
+    surface — cost source, backend pin, timing recording; it is handed
+    to ``spec.make_environment``. ``on_observation`` (a callable taking
+    each round's :class:`RoundObservation`) is invoked after the
+    strategy observes — the calibration trace recorder rides this hook;
+    it must not mutate the observation.
 
     ``checkpoint_dir`` turns on periodic FULL-run checkpointing (every
     ``checkpoint_every`` round boundaries, through the atomic
@@ -230,7 +261,7 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
         if checkpoint_every < 1:
             raise ValueError(
                 f"checkpoint_every must be >= 1, got {checkpoint_every}")
-    env = spec.make_environment(seed)
+    env = _spec_environment(spec, seed, eval_config)
     kw = {"config": config} if config is not None else {}
     strategy = create_strategy(strategy_name, env.hierarchy, seed=seed,
                                clients=env.clients,
@@ -278,6 +309,8 @@ def run_single(spec: ScenarioSpec, strategy_name: str, *, seed: int = 0,
             run.metrics.setdefault(k, []).append(float(v))
         for line in obs.log:
             run.event_log.append(f"r{r}: {line}")
+        if on_observation is not None:
+            on_observation(obs)
         if verbose:
             extra = "".join(f" {k}={v:.3f}" for k, v in obs.metrics.items()
                             if k in ("loss", "accuracy"))
@@ -297,7 +330,9 @@ def run_batched(spec: ScenarioSpec,
                 strategies: Sequence[Tuple[str, object]], *,
                 seeds: Sequence[int], rounds: Optional[int] = None,
                 verbose: bool = False,
-                shard: str = "auto") -> List[StrategyRun]:
+                shard: Optional[str] = None,
+                eval_config: Optional[EvalConfig] = None
+                ) -> List[StrategyRun]:
     """Lockstep batched sweep over a SIMULATED scenario.
 
     ``strategies`` is the normalized [(name, config-or-None), ...] list.
@@ -308,16 +343,24 @@ def run_batched(spec: ScenarioSpec,
     exact call. Returns runs ordered [strategy0 x seeds..., strategy1 x
     seeds...], matching the sequential sweep's ordering.
 
-    ``shard`` forwards to :class:`PooledTPDEvaluator`: ``"auto"``
-    splits each round's pooled call across local devices (shard_map
-    row shards + segment-sum merge) when more than one device is
-    visible, ``"off"`` pins the single-device numpy path (the two are
-    the same code on 1 device, so 1-device runs are bit-identical
-    either way).
+    ``eval_config.shard`` forwards to :class:`PooledTPDEvaluator`:
+    ``"auto"`` splits each round's pooled call across local devices
+    (shard_map row shards + segment-sum merge) when more than one
+    device is visible, ``"off"`` pins the single-device numpy path
+    (the two are the same code on 1 device, so 1-device runs are
+    bit-identical either way). The bare ``shard=`` kwarg is a
+    deprecated alias for ``eval_config=EvalConfig(shard=...)``.
     """
     if spec.kind != "simulated":
         raise ValueError("batched sweep mode is simulated-only; "
                          f"scenario {spec.name!r} is {spec.kind!r}")
+    eval_config = resolve_eval_config(eval_config, shard=shard)
+    if eval_config.recording == "on":
+        raise ValueError(
+            "eval.recording='on' needs the sequential step loop "
+            "(batched mode bypasses env.step); run with "
+            "mode='sequential'")
+    shard = eval_config.shard
     from repro.experiments.environments import SimulatedEnvironment
     rounds = rounds if rounds is not None else spec.rounds
 
@@ -327,7 +370,7 @@ def run_batched(spec: ScenarioSpec,
     for name, config in strategies:
         kw = {"config": config} if config is not None else {}
         for seed in seeds:
-            env = spec.make_environment(seed)
+            env = _spec_environment(spec, seed, eval_config)
             # the lockstep loop replaces env.step with one pooled exact
             # call per round; an overridden step (extra metrics, custom
             # observation logic) would be silently bypassed
@@ -434,37 +477,46 @@ def run_experiment(scenario: Union[str, ScenarioSpec],
                    seeds: Sequence[int] = (0,), *,
                    verbose: bool = False,
                    progress: bool = True,
-                   mode: str = "auto",
-                   shard: str = "auto") -> ExperimentResult:
+                   mode: Optional[str] = None,
+                   shard: Optional[str] = None,
+                   eval_config: Optional[EvalConfig] = None
+                   ) -> ExperimentResult:
     """Sweep ``strategies`` x ``seeds`` over one scenario.
 
     ``scenario`` is a registered preset name or a ScenarioSpec (e.g. a
-    preset with overrides). ``mode`` is ``"auto"`` (batched for
-    simulated scenarios, sequential for emulated), ``"sequential"`` or
-    ``"batched"`` — both modes produce bit-identical artifacts. Returns
-    the versioned :class:`ExperimentResult`; call ``.save(path)`` for
-    the artifact.
+    preset with overrides). ``eval_config`` (an :class:`EvalConfig`)
+    selects the evaluation surface in one place: ``mode`` ``"auto"``
+    (batched for simulated scenarios, sequential for emulated) /
+    ``"sequential"`` / ``"batched"`` — both modes produce bit-identical
+    artifacts — plus the backend pin, pooled sharding, the
+    analytic-vs-calibrated cost source and timing recording. The bare
+    ``mode=``/``shard=`` kwargs are deprecated aliases kept for one
+    release. Returns the versioned :class:`ExperimentResult`; call
+    ``.save(path)`` for the artifact — its ``eval`` section (schema v4)
+    appears only when a semantics-bearing field is non-default, so
+    default-config artifacts keep the v3 bytes.
     """
     spec = get_scenario(scenario) if isinstance(scenario, str) else scenario
     rounds = rounds if rounds is not None else spec.rounds
     seeds = [int(s) for s in seeds]
     if not seeds:
         raise ValueError("need at least one seed")
-    if mode not in ("auto", "sequential", "batched"):
-        raise ValueError(f"unknown mode {mode!r}; use 'auto', "
-                         f"'sequential' or 'batched'")
+    eval_config = resolve_eval_config(eval_config, mode=mode, shard=shard)
     norm = _normalize_strategies(strategies)
-    batched = (mode == "batched") or \
-        (mode == "auto" and spec.kind == "simulated")
+    # recording needs the per-round env.step loop, so it pins 'auto'
+    # to sequential (EvalConfig already refused recording + batched)
+    batched = (eval_config.mode == "batched") or \
+        (eval_config.mode == "auto" and spec.kind == "simulated"
+         and eval_config.recording != "on")
 
     result = ExperimentResult(
         scenario=spec.to_dict(), rounds=rounds, seeds=seeds,
-        strategies=[n for n, _ in norm])
+        strategies=[n for n, _ in norm], eval=eval_config.provenance())
     if batched:
         t0 = time.perf_counter()
         result.runs.extend(run_batched(spec, norm, seeds=seeds,
                                        rounds=rounds, verbose=verbose,
-                                       shard=shard))
+                                       eval_config=eval_config))
         wall = time.perf_counter() - t0
         if progress:
             for name, _ in norm:
@@ -477,7 +529,8 @@ def run_experiment(scenario: Union[str, ScenarioSpec],
         t0 = time.perf_counter()
         for seed in seeds:
             run = run_single(spec, name, seed=seed, rounds=rounds,
-                             config=cfg, verbose=verbose)
+                             config=cfg, verbose=verbose,
+                             eval_config=eval_config)
             result.runs.append(run)
         if progress:
             agg = aggregate_line(result, name)

@@ -496,10 +496,12 @@ class ScenarioSpec:
         from repro.experiments.sampling import CohortSampler
         return CohortSampler(seed, self.cohort_size)
 
-    def make_environment(self, seed: int = 0):
-        """Build a fresh Environment for one (strategy, seed) run."""
+    def make_environment(self, seed: int = 0, eval_config=None):
+        """Build a fresh Environment for one (strategy, seed) run.
+        ``eval_config`` (an :class:`~repro.experiments.EvalConfig`)
+        selects cost source / backend pin / timing recording."""
         from repro.experiments.environments import build_environment
-        return build_environment(self, seed)
+        return build_environment(self, seed, eval_config=eval_config)
 
     def make_faults(self, seed: int) -> FaultSchedule:
         """The run's fault schedule: the spec's explicit pinned events

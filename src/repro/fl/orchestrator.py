@@ -156,6 +156,15 @@ class FederatedOrchestrator:
         self._capacity = max(hierarchy.max_clients, len(clients))
         self._elastic_rng = np.random.default_rng((seed, _ELASTIC_STREAM))
 
+        # trace recording (repro.calibration): when enabled, each round
+        # captures per-client train times and per-level/per-cluster
+        # aggregation delays into ``last_timings``. Recording reads
+        # values the engines already computed — no extra rng draws, no
+        # numeric changes — so recording=off runs are byte-identical.
+        self.record_timings = False
+        self.last_timings: Optional[dict] = None
+        self._trace: Optional[dict] = None
+
     # ==================================================================
     # deterministic per-cluster delay (eq. 6), shared by both engines
     # ==================================================================
@@ -212,9 +221,14 @@ class FederatedOrchestrator:
                     for u, w in zip(updates, self.weights, strict=True)]
         trainers = h.trainer_assignment(placement)
         slot_value = [None] * h.dimensions
+        mds = self.clients.mdatasize
         total = 0.0
         for level in range(h.depth - 1, -1, -1):
             level_max = 0.0
+            row = None
+            if self._trace is not None:
+                row = {"level": level, "slots": [], "hosts": [],
+                       "loads": [], "n_parts": [], "delays": []}
             for s in range(h.level_starts[level], h.level_starts[level + 1]):
                 host = int(placement[s])
                 parts = [weighted[host]]
@@ -236,7 +250,16 @@ class FederatedOrchestrator:
                     dt = time.perf_counter() - t0
                 slot_value[s] = acc
                 cluster_t = self._cluster_time(host, dt, len(parts))
+                if row is not None:
+                    row["slots"].append(s)
+                    row["hosts"].append(host)
+                    row["loads"].append(
+                        float(sum(mds[int(c)] for c in members)))
+                    row["n_parts"].append(len(parts))
+                    row["delays"].append(float(cluster_t))
                 level_max = max(level_max, cluster_t)
+            if row is not None:
+                self._trace["levels"].append(row)
             total += level_max
         return slot_value[0], total
 
@@ -246,6 +269,10 @@ class FederatedOrchestrator:
             p, _, t = self._local_train(c, r)
             updates.append(p)
             train_times.append(t)
+        if self._trace is not None:
+            self._trace["train"] = {
+                "clients": list(range(self.hierarchy.total_clients)),
+                "times": [float(t) for t in train_times]}
         new_params, agg_time = self._aggregate(updates, placement)
         return new_params, max(train_times), agg_time
 
@@ -351,8 +378,9 @@ class FederatedOrchestrator:
         h = self.hierarchy
         plan = h.round_plan(placement)
         mds = self.clients.mdatasize
+        depth = h.depth
 
-        def level_time(lp, cluster_dt) -> float:
+        def level_time(lp, cluster_dt, idx, raw_loads) -> float:
             """pspeed/comm/noise composition, vectorized per level (one
             rng draw per cluster, same stream order as the loop engine)."""
             ts = (cluster_dt / self.clients.pspeed[lp.hosts]
@@ -360,6 +388,16 @@ class FederatedOrchestrator:
             if self.rng_noise:
                 ts = ts * (1.0 + self.rng.normal(0, self.rng_noise,
                                                  size=lp.n_clusters))
+            if self._trace is not None:
+                level = depth - 1 - idx  # plan levels are deepest first
+                start = h.level_starts[level]
+                self._trace["levels"].append({
+                    "level": level,
+                    "slots": list(range(start, start + lp.n_clusters)),
+                    "hosts": lp.hosts.tolist(),
+                    "loads": np.asarray(raw_loads, np.float64).tolist(),
+                    "n_parts": lp.n_parts.tolist(),
+                    "delays": np.asarray(ts, np.float64).tolist()})
             return float(ts.max())
 
         if self.timing == "deterministic":
@@ -368,10 +406,11 @@ class FederatedOrchestrator:
             new_global = self._agg.aggregate_fused(
                 stacked_updates, self.weights, plan)
             total = 0.0
-            for lp in plan.levels:
+            for idx, lp in enumerate(plan.levels):
                 loads = np.zeros(lp.n_clusters)
                 np.add.at(loads, lp.seg, mds[lp.member_clients])
-                total += level_time(lp, loads / self.EQ6_PAYLOAD_SCALE)
+                total += level_time(lp, loads / self.EQ6_PAYLOAD_SCALE,
+                                    idx, loads)
             return new_global, total
 
         weighted = self._agg.weighted(stacked_updates, self.weights)
@@ -384,13 +423,18 @@ class FederatedOrchestrator:
             wall = time.perf_counter() - t0
             loads = np.zeros(lp.n_clusters)
             np.add.at(loads, lp.seg, mds[lp.member_clients])
-            total += level_time(lp, wall * loads / max(loads.sum(), 1e-12))
+            total += level_time(lp, wall * loads / max(loads.sum(), 1e-12),
+                                idx, loads)
         return jax.tree.map(lambda x: x[0], vals), total
 
     def _round_batched(self, r: int, placement: np.ndarray):
         if self._agg is None:
             self._agg = SegmentAggregator(self.hierarchy)
         stacked_updates, train_times = self._train_all_batched(r)
+        if self._trace is not None:
+            self._trace["train"] = {
+                "clients": list(range(self.hierarchy.total_clients)),
+                "times": np.asarray(train_times, np.float64).tolist()}
         new_params, agg_time = self._agg_batched(stacked_updates, placement)
         return new_params, float(np.max(train_times)), agg_time
 
@@ -630,12 +674,26 @@ class FederatedOrchestrator:
         self._check_population()
         self.hierarchy.validate_placement(placement)
 
-        if self.engine == "loop":
-            new_params, train_time, agg_time = self._round_loop(r, placement)
-        else:
-            new_params, train_time, agg_time = \
-                self._round_batched(r, placement)
+        self.last_timings = None
+        if self.record_timings:
+            self._trace = {"train": {"clients": [], "times": []},
+                           "levels": []}
+        try:
+            if self.engine == "loop":
+                new_params, train_time, agg_time = \
+                    self._round_loop(r, placement)
+            else:
+                new_params, train_time, agg_time = \
+                    self._round_batched(r, placement)
+        finally:
+            if self._trace is not None:
+                self._trace["train_time"] = 0.0
+                self._trace["agg_time"] = 0.0
+                self.last_timings, self._trace = self._trace, None
         self.params = new_params
+        if self.last_timings is not None:
+            self.last_timings["train_time"] = float(train_time)
+            self.last_timings["agg_time"] = float(agg_time)
 
         tpd = (train_time + agg_time) * self.time_scale
         loss, acc = self._evaluate()

@@ -608,10 +608,10 @@ def test_schema_v2_validates_and_v1_stays_loadable():
     assert d["schema_version"] == 3
     assert validate_result_dict(d) == []
     legacy = json.loads(json.dumps(d))
-    for version in (1, 2):                        # compat window
+    for version in (1, 2, 4):                     # compat window
         legacy["schema_version"] = version
         assert validate_result_dict(legacy) == []
-    legacy["schema_version"] = 4
+    legacy["schema_version"] = 5
     assert any("schema_version" in e for e in validate_result_dict(legacy))
     # elastic scenario round-trips (ClientJoin in the scenario dict)
     loaded = ExperimentResult.from_dict(json.loads(json.dumps(d)))

@@ -5,7 +5,7 @@ import pytest
 from repro.configs import get_config
 from repro.core.cost_model import CostModel
 from repro.core.hierarchy import ClientPool, Hierarchy
-from repro.core.placement import make_strategy
+from repro.core.registry import create_strategy
 from repro.data.synthetic import make_federated_dataset
 from repro.fl.orchestrator import FederatedOrchestrator
 from repro.models import get_model
@@ -23,7 +23,7 @@ def mlp_setup():
 
 def _run(mlp_setup, strategy_name, rounds=4, seed=0):
     model, h, clients, data = mlp_setup
-    strat = make_strategy(strategy_name, h, seed=seed, clients=clients,
+    strat = create_strategy(strategy_name, h, seed=seed, clients=clients,
                           cost_model=CostModel(h, clients))
     orch = FederatedOrchestrator(model, h, clients, data,
                                  local_steps=1, batch_size=16, seed=seed)
@@ -46,7 +46,7 @@ def test_learning_actually_happens(mlp_setup):
 
 def test_uniform_rotation_covers_clients(mlp_setup):
     model, h, clients, data = mlp_setup
-    strat = make_strategy("uniform", h)
+    strat = create_strategy("uniform", h)
     seen = set()
     for r in range(10):
         seen.update(strat.propose(r).tolist())
@@ -60,7 +60,7 @@ def test_transformer_arch_federates():
     h = Hierarchy(depth=2, width=2, trainers_per_leaf=1, n_clients=7)
     clients = ClientPool.random(h.total_clients, seed=1)
     data = make_federated_dataset(cfg, h.total_clients, seed=1, seq_len=16)
-    strat = make_strategy("pso", h, seed=1)
+    strat = create_strategy("pso", h, seed=1)
     orch = FederatedOrchestrator(model, h, clients, data,
                                  local_steps=1, batch_size=4, seed=1)
     res = orch.run(strat, rounds=3)

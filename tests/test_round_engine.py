@@ -9,7 +9,7 @@ import pytest
 from repro.configs import get_config
 from repro.core.cost_model import CostModel
 from repro.core.hierarchy import ClientPool, Hierarchy
-from repro.core.placement import make_strategy
+from repro.core.registry import create_strategy
 from repro.data.synthetic import make_federated_dataset
 from repro.fl.aggregation import batched_hierarchical_fedavg, hierarchical_fedavg
 from repro.fl.orchestrator import FederatedOrchestrator, FederatedRunResult
@@ -28,7 +28,7 @@ def mlp_setup():
 
 def _run(mlp_setup, engine, rounds=4, **kw):
     model, h, clients, data = mlp_setup
-    strat = make_strategy("pso", h, seed=0)
+    strat = create_strategy("pso", h, seed=0)
     orch = FederatedOrchestrator(model, h, clients, data, local_steps=2,
                                  batch_size=16, seed=0,
                                  timing="deterministic", engine=engine, **kw)
@@ -73,7 +73,7 @@ def test_deterministic_tpd_composes_cost_model(engine):
     orch = FederatedOrchestrator(model, h, clients, data, local_steps=1,
                                  batch_size=8, seed=3,
                                  timing="deterministic", engine=engine)
-    strat = make_strategy("static", h, placement=placement)
+    strat = create_strategy("static", h, placement=placement)
     res = orch.run(strat, rounds=1)
     r = res.rounds[0]
     cm = CostModel(h, clients)

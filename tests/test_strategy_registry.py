@@ -1,7 +1,5 @@
-"""The typed strategy registry: aliases, config validation, the
-make_strategy deprecation shim, and the repro.core export surface."""
-import warnings
-
+"""The typed strategy registry: aliases, config validation, and the
+repro.core export surface."""
 import numpy as np
 import pytest
 
@@ -18,7 +16,6 @@ from repro.core import (
     build_config,
     create_strategy,
     list_strategies,
-    make_strategy,
     resolve_strategy,
     strategy_names,
 )
@@ -113,27 +110,13 @@ def test_context_requirements(small):
                       PSOPlacement)
 
 
-def test_make_strategy_shim_deprecated_but_equivalent(small):
-    h, pool = small
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        old = make_strategy("pso", h, seed=3, n_particles=4)
-    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
-    new = create_strategy("pso", h, seed=3, n_particles=4)
-    # same construction: identical proposal stream
-    for r in range(6):
-        a, b = old.propose(r), new.propose(r)
-        assert np.array_equal(a, b)
-        old.observe(a, 1.0)
-        new.observe(b, 1.0)
-
-
-def test_make_strategy_shim_validates_kwargs(small):
-    h, pool = small
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        with pytest.raises(TypeError, match="accepted fields"):
-            make_strategy("greedy", h, clients=pool, n_particles=20)
+def test_make_strategy_shim_removed():
+    # the deprecation cycle is over: the stringly-typed factory is gone
+    # from both the placement module and the repro.core surface
+    import repro.core.placement as placement
+    assert not hasattr(placement, "make_strategy")
+    assert not hasattr(core, "make_strategy")
+    assert "make_strategy" not in core.__all__
 
 
 def test_strategy_names_cover_paper_set():
